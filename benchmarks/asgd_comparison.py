@@ -1,0 +1,68 @@
+"""The paper's §6 question, answered: how does ISSGD compare with ASGD,
+and do they compose?
+
+Four systems on equal step budgets (same model/data/lr):
+  sgd          synchronous uniform SGD (delay 0)
+  asgd         uniform minibatches, stale gradients (delay 4)
+  issgd        the paper's method (fresh master, fused scoring)
+  asgd+issgd   the §6 "peers" design: stale gradients AND shared
+               importance weights (this repo's make_asgd_step mode=issgd)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import CFG, run_training, setup
+from repro.core.asgd import ASGDConfig, init_asgd_state, make_asgd_step
+from repro.core.importance import ISConfig
+from repro.models.mlp import (accuracy, per_example_loss,
+                              per_example_loss_and_score)
+from repro.optim import sgd
+
+STEPS = 300
+RUNS = 3
+DELAY = 4
+
+
+def _run_asgd(mode: str, seed: int):
+    cfg, train, test, params = setup(seed)
+    opt = sgd(0.02)
+    acfg = ASGDConfig(batch_size=64, delay=DELAY, mode=mode,
+                      is_cfg=ISConfig(smoothing=1.0))
+    step = jax.jit(make_asgd_step(
+        lambda p, b: per_example_loss(p, b, cfg), opt, acfg, train.size,
+        fused_score=lambda p, b: per_example_loss_and_score(p, b, cfg)))
+    st = init_asgd_state(params, opt, acfg, train.size, seed=seed)
+    last = None
+    for _ in range(STEPS):
+        st, last = step(st, train.arrays)
+    err = 1.0 - float(accuracy(st.params, test.arrays, cfg))
+    return float(last.loss), err, float(last.delay_gap)
+
+
+def asgd_comparison():
+    rows, summary = [], {}
+    # synchronous baselines via the ISSGD runtime
+    for mode, label in [("uniform", "sgd"), ("fused", "issgd")]:
+        losses, errs = [], []
+        for seed in range(RUNS):
+            cfg, train, test, params = setup(seed)
+            st, hist, _ = run_training(params, train, mode=mode, steps=STEPS,
+                                       lr=0.02, smoothing=1.0, seed=seed)
+            losses.append(hist[-1]["loss"])
+            errs.append(1.0 - float(accuracy(st.params, test.arrays, cfg)))
+        rows.append({"system": label, "final_loss": float(np.median(losses)),
+                     "test_error": float(np.median(errs)), "delay": 0})
+        summary[f"{label}/final_loss"] = rows[-1]["final_loss"]
+    # asynchronous systems
+    for mode, label in [("uniform", "asgd"), ("issgd", "asgd+issgd")]:
+        out = [_run_asgd(mode, s) for s in range(RUNS)]
+        rows.append({"system": label,
+                     "final_loss": float(np.median([o[0] for o in out])),
+                     "test_error": float(np.median([o[1] for o in out])),
+                     "delay": DELAY,
+                     "delay_gap": float(np.median([o[2] for o in out]))})
+        summary[f"{label}/final_loss"] = rows[-1]["final_loss"]
+        summary[f"{label}/test_error"] = rows[-1]["test_error"]
+    return rows, summary

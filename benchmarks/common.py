@@ -1,0 +1,80 @@
+"""Shared benchmark scaffolding: a reduced permutation-invariant-SVHN setup
+mirroring the paper's §5 experiments at CPU scale (same algorithm, smaller
+MLP/data so each figure runs in ~a minute)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.importance import ISConfig
+from repro.core.issgd import ISSGDConfig, init_train_state, make_train_step
+from repro.core.scorer import make_mlp_scorer
+from repro.data import make_svhn_like
+from repro.models.mlp import MLPConfig, accuracy, init_mlp_classifier
+from repro.models.mlp import per_example_loss as mlp_pel
+from repro.optim import sgd
+
+CFG = MLPConfig(name="mlp_svhn_bench", input_dim=96, hidden=(256, 256),
+                num_classes=10)
+N_TRAIN = 8192
+
+
+def setup(seed: int = 0):
+    train, test = make_svhn_like(jax.random.key(seed), n=N_TRAIN,
+                                 dim=CFG.input_dim)
+    params = init_mlp_classifier(jax.random.key(seed + 1), CFG)
+    return CFG, train, test, params
+
+
+def run_training(params, train, *, mode: str, steps: int, lr: float,
+                 smoothing: float, strategy: str = "ghost",
+                 batch: int = 64, score_batch: int = 512,
+                 refresh_every: int = 8, staleness_threshold: int = 0,
+                 seed: int = 0, record_every: int = 5):
+    opt = sgd(lr)
+    tcfg = ISSGDConfig(
+        batch_size=batch, score_batch_size=score_batch,
+        refresh_every=refresh_every, mode=mode,
+        is_cfg=ISConfig(smoothing=smoothing,
+                        staleness_threshold=staleness_threshold))
+    fused = None
+    if mode == "fused":
+        from repro.models.mlp import per_example_loss_and_score
+        fused = lambda p, b: per_example_loss_and_score(p, b, CFG)
+    step = jax.jit(make_train_step(
+        lambda p, b: mlp_pel(p, b, CFG),
+        make_mlp_scorer(CFG, strategy), opt, tcfg, train.size,
+        fused_score=fused))
+    st = init_train_state(params, opt, train.size, seed=seed)
+    hist = []
+    t0 = time.time()
+    for i in range(steps):
+        st, m = step(st, train.arrays)
+        if i % record_every == 0 or i == steps - 1:
+            hist.append({
+                "step": i, "loss": float(m.loss),
+                "trace_ideal": float(m.trace_ideal),
+                "trace_stale": float(m.trace_stale),
+                "trace_unif": float(m.trace_unif),
+                "ess": float(m.ess_frac),
+            })
+    return st, hist, time.time() - t0
+
+
+def median_runs(fn, runs: int = 5):
+    """Run fn(seed) -> list-of-dicts `runs` times; median each key/step
+    (the paper reports medians over 50 runs; we use fewer for CPU)."""
+    all_h = [fn(s) for s in range(runs)]
+    steps = [r["step"] for r in all_h[0]]
+    out = []
+    for i, s in enumerate(steps):
+        rec = {"step": s}
+        for k in all_h[0][0]:
+            if k == "step":
+                continue
+            rec[k] = float(np.median([h[i][k] for h in all_h]))
+        out.append(rec)
+    return out

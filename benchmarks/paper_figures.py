@@ -1,0 +1,133 @@
+"""One function per paper table/figure (deliverable d).
+
+fig2  — train loss: ISSGD vs regular SGD, two hyperparameter settings
+fig3/table1 — test prediction error for both methods
+fig4  — √Tr(Σ(q)) for q ∈ {IDEAL, STALE, UNIF} during ISSGD
+b1    — staleness-threshold sweep (appendix B.1)
+b3    — smoothing-constant sweep (appendix B.3)
+
+Each returns (rows, summary) where rows are CSV-able dicts.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import CFG, median_runs, run_training, setup
+from repro.models.mlp import accuracy
+
+# the paper's two settings, rescaled to the bench problem:
+SETTINGS = [
+    {"name": "hiLR_hiSmooth", "lr": 0.05, "smoothing": 10.0},
+    {"name": "loLR_loSmooth", "lr": 0.01, "smoothing": 1.0},
+]
+STEPS = 400
+RUNS = 3
+
+
+def fig2_convergence():
+    """ISSGD minimizes the train loss faster than SGD (paper fig. 2)."""
+    rows, summary = [], {}
+    for s in SETTINGS:
+        for mode in ["relaxed", "uniform"]:
+            def one(seed):
+                cfg, train, test, params = setup(seed)
+                _, hist, _ = run_training(
+                    params, train, mode=mode, steps=STEPS, lr=s["lr"],
+                    smoothing=s["smoothing"], seed=seed)
+                return hist
+            med = median_runs(one, RUNS)
+            label = f"{s['name']}/{'issgd' if mode == 'relaxed' else 'sgd'}"
+            for r in med:
+                rows.append({"setting": label, **r})
+            # steps to reach half the initial loss (speed metric)
+            l0 = med[0]["loss"]
+            half = next((r["step"] for r in med if r["loss"] < 0.5 * l0),
+                        STEPS)
+            summary[f"{label}/final_loss"] = med[-1]["loss"]
+            summary[f"{label}/steps_to_half_loss"] = half
+    return rows, summary
+
+
+def fig3_table1_test_error():
+    """Final test error for ISSGD vs SGD (paper fig. 3 / table 1)."""
+    rows, summary = [], {}
+    for s in SETTINGS:
+        for mode in ["relaxed", "uniform"]:
+            errs = []
+            for seed in range(RUNS):
+                cfg, train, test, params = setup(seed)
+                st, _, _ = run_training(
+                    params, train, mode=mode, steps=STEPS, lr=s["lr"],
+                    smoothing=s["smoothing"], seed=seed)
+                errs.append(1.0 - float(accuracy(st.params, test.arrays, cfg)))
+            label = f"{s['name']}/{'issgd' if mode == 'relaxed' else 'sgd'}"
+            med = float(np.median(errs))
+            rows.append({"setting": label, "test_error": med})
+            summary[f"{label}/test_error"] = med
+    return rows, summary
+
+
+def fig4_variance():
+    """√Tr(Σ) ordering IDEAL ≤ STALE ≤ UNIF during ISSGD (paper fig. 4)."""
+    rows, summary = [], {}
+    for s in SETTINGS:
+        def one(seed):
+            cfg, train, test, params = setup(seed)
+            _, hist, _ = run_training(
+                params, train, mode="relaxed", steps=STEPS, lr=s["lr"],
+                smoothing=s["smoothing"], seed=seed)
+            return hist
+        med = median_runs(one, RUNS)
+        for r in med:
+            rows.append({"setting": s["name"], **r})
+        tail = med[len(med) // 2:]
+        for k in ["trace_ideal", "trace_stale", "trace_unif"]:
+            summary[f"{s['name']}/{k}"] = float(
+                np.mean([r[k] for r in tail]))
+        summary[f"{s['name']}/variance_reduction"] = (
+            summary[f"{s['name']}/trace_unif"]
+            / max(summary[f"{s['name']}/trace_stale"], 1e-9))
+    return rows, summary
+
+
+def b1_staleness():
+    """Staleness-threshold sweep (B.1): ISSGD is robust to stale weights."""
+    rows, summary = [], {}
+    for thresh in [0, 4, 16, 64]:
+        def one(seed):
+            cfg, train, test, params = setup(seed)
+            _, hist, _ = run_training(
+                params, train, mode="relaxed", steps=300, lr=0.01,
+                smoothing=1.0, staleness_threshold=thresh, seed=seed)
+            return hist
+        med = median_runs(one, RUNS)
+        tail = med[len(med) // 2:]
+        rows.append({
+            "threshold": thresh,
+            "final_loss": med[-1]["loss"],
+            "trace_stale": float(np.mean([r["trace_stale"] for r in tail])),
+        })
+        summary[f"thresh{thresh}/final_loss"] = med[-1]["loss"]
+    return rows, summary
+
+
+def b3_smoothing():
+    """Smoothing sweep (B.3): c → ∞ recovers SGD's variance."""
+    rows, summary = [], {}
+    for c in [0.1, 1.0, 10.0, 100.0, 1e6]:
+        def one(seed):
+            cfg, train, test, params = setup(seed)
+            _, hist, _ = run_training(
+                params, train, mode="relaxed", steps=200, lr=0.01,
+                smoothing=c, seed=seed)
+            return hist
+        med = median_runs(one, RUNS)
+        tail = med[len(med) // 2:]
+        stale = float(np.mean([r["trace_stale"] for r in tail]))
+        unif = float(np.mean([r["trace_unif"] for r in tail]))
+        rows.append({"smoothing": c, "trace_stale": stale,
+                     "trace_unif": unif, "ratio": stale / max(unif, 1e-9),
+                     "final_loss": med[-1]["loss"]})
+        summary[f"c{c}/ratio_stale_over_unif"] = stale / max(unif, 1e-9)
+    return rows, summary

@@ -1,0 +1,86 @@
+"""Roofline analysis (deliverable g): read the dry-run JSONs and derive the
+three terms per (arch × shape) on the single-pod mesh.
+
+  compute_s    = flops_per_device / PEAK_FLOPS_BF16
+  memory_s     = io_bytes_per_device × 2 / HBM_BW   (writes ≈ reads proxy)
+  collective_s = collective_bytes_per_device / ICI_BW
+
+Dominant term = the bottleneck; MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active per generated token (decode), and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = Path(__file__).parent / "dryrun_results"
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """Analytic useful FLOPs per device for the step that was lowered."""
+    n_act = rec["active_params"]
+    chips = rec["chips"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        # train fwd+bwd (6·N·D) + the ISSGD scoring forward pass (2·N·D)
+        return (6.0 * n_act * tokens + 2.0 * n_act * tokens) / chips
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_act * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_act * rec["global_batch"] / chips
+
+
+def load(mesh: str = "pod1") -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def roofline_rows(mesh: str = "pod1") -> list[dict]:
+    rows = []
+    for r in load(mesh):
+        comp = r["flops_per_device"] / PEAK_FLOPS_BF16
+        memt = 2.0 * r["io_bytes_per_device"] / HBM_BW
+        coll = r["collective_bytes_per_device"] / ICI_BW
+        terms = {"compute": comp, "memory": memt, "collective": coll}
+        dom = max(terms, key=terms.get)
+        mf = model_flops_per_device(r)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": comp, "memory_s": memt, "collective_s": coll,
+            "dominant": dom,
+            "model_flops_dev": mf,
+            "useful_ratio": mf / max(r["flops_per_device"], 1e-9),
+            "step_s_bound": max(terms.values()),
+        })
+    return rows
+
+
+def run():
+    rows = roofline_rows()
+    summary = {}
+    for r in rows:
+        summary[f"{r['arch']}/{r['shape']}/dominant"] = r["dominant"]
+    return rows, summary
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful FLOP ratio |\n|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows, _ = run()
+    print(markdown_table(rows))

@@ -1,0 +1,123 @@
+"""Benchmark driver (deliverable d): one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines plus per-benchmark detail CSVs
+under benchmarks/results/.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig4,scoring
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).parent / "results"
+
+
+def _write_rows(name: str, rows: list[dict]):
+    RESULTS_DIR.mkdir(exist_ok=True)
+    if not rows:
+        return
+    keys = sorted({k for r in rows for k in r})
+    with open(RESULTS_DIR / f"{name}.csv", "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+
+
+BENCHES = {}
+
+
+def bench(name):
+    def deco(fn):
+        BENCHES[name] = fn
+        return fn
+    return deco
+
+
+@bench("fig2_convergence")
+def _fig2():
+    from benchmarks.paper_figures import fig2_convergence
+    return fig2_convergence()
+
+
+@bench("fig3_table1_test_error")
+def _fig3():
+    from benchmarks.paper_figures import fig3_table1_test_error
+    return fig3_table1_test_error()
+
+
+@bench("fig4_variance")
+def _fig4():
+    from benchmarks.paper_figures import fig4_variance
+    return fig4_variance()
+
+
+@bench("b1_staleness")
+def _b1():
+    from benchmarks.paper_figures import b1_staleness
+    return b1_staleness()
+
+
+@bench("b3_smoothing")
+def _b3():
+    from benchmarks.paper_figures import b3_smoothing
+    return b3_smoothing()
+
+
+@bench("scoring_throughput")
+def _scoring():
+    from benchmarks.scoring_throughput import scoring_throughput
+    return scoring_throughput()
+
+
+@bench("strategy_ablation")
+def _ablation():
+    from benchmarks.strategy_ablation import strategy_ablation
+    return strategy_ablation()
+
+
+@bench("asgd_comparison")
+def _asgd():
+    from benchmarks.asgd_comparison import asgd_comparison
+    return asgd_comparison()
+
+
+@bench("roofline")
+def _roofline():
+    from benchmarks.roofline import run
+    return run()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+
+    print("name,us_per_call,derived")
+    all_summaries = {}
+    for name, fn in BENCHES.items():
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            rows, summary = fn()
+        except Exception as e:  # keep the harness running
+            print(f"{name},ERROR,{e!r}")
+            continue
+        dt_us = (time.time() - t0) * 1e6
+        _write_rows(name, rows)
+        all_summaries[name] = summary
+        derived = ";".join(f"{k}={v:.4g}" if isinstance(v, float)
+                           else f"{k}={v}" for k, v in list(summary.items())[:6])
+        print(f"{name},{dt_us:.0f},{derived}")
+    RESULTS_DIR.mkdir(exist_ok=True)
+    with open(RESULTS_DIR / "summaries.json", "w") as f:
+        json.dump(all_summaries, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

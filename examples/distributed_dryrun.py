@@ -1,0 +1,32 @@
+"""Multi-pod dry-run example: lower + compile the ISSGD train step for one
+assigned architecture on the production meshes (16×16 and 2×16×16) using
+512 placeholder host devices, and print the roofline terms.
+
+  python examples/distributed_dryrun.py --arch deepseek-7b --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.dryrun import run_one
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="deepseek-7b")
+ap.add_argument("--shape", default="train_4k")
+args = ap.parse_args()
+
+for mp in (False, True):
+    r = run_one(args.arch, args.shape, mp, Path("/tmp/dryrun_example"))
+    comp = r["flops_per_device"] / PEAK_FLOPS_BF16
+    mem = 2 * r["io_bytes_per_device"] / HBM_BW
+    coll = r["collective_bytes_per_device"] / ICI_BW
+    dom = max([("compute", comp), ("memory", mem), ("collective", coll)],
+              key=lambda t: t[1])
+    print(f"mesh={r['mesh']}: compute={comp:.3e}s memory={mem:.3e}s "
+          f"collective={coll:.3e}s → dominant: {dom[0]}")

@@ -1,0 +1,47 @@
+"""Serving demo: batched prefill + token-by-token decode with layer caches
+(GQA ring buffers / MLA compressed latents / Mamba states), on a reduced
+jamba-style hybrid — the most cache-heterogeneous assigned architecture.
+
+  PYTHONPATH=src python examples/serve_demo.py [--arch glm4-9b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_transformer
+from repro.serving.engine import decode_step, prefill
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="jamba-v0.1-52b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--steps", type=int, default=24)
+args = ap.parse_args()
+
+cfg = get_smoke_config(args.arch)
+print(f"arch={cfg.name}  layers={cfg.num_layers}  period={cfg.period_len()}")
+params = init_transformer(jax.random.key(0), cfg)
+
+prompt = jax.random.randint(jax.random.key(1), (args.batch, 12), 0,
+                            cfg.vocab_size)
+t0 = time.time()
+logits, st = jax.jit(lambda p, t: prefill(p, cfg, t, max_len=64))(
+    params, prompt)
+print(f"prefill {args.batch}×12 tokens: {time.time() - t0:.2f}s")
+print("cache buffers:", {k: tuple(v.shape) for k, v in
+                         list(st.caches.items())[:4]})
+
+step = jax.jit(lambda p, t, s: decode_step(p, cfg, t, s))
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+out = [tok]
+t0 = time.time()
+for _ in range(args.steps):
+    logits, st = step(params, tok, st)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out.append(tok)
+dt = time.time() - t0
+print(f"decoded {args.steps} steps × {args.batch} seqs "
+      f"({args.steps * args.batch / dt:.1f} tok/s on CPU)")
+print("generated (seq 0):", jnp.stack(out, 1)[0].tolist())

@@ -1,0 +1,105 @@
+"""Checkpointing: flat-key npz of any pytree (params, optimizer state, the
+ISSGD weight store) with step bookkeeping and atomic writes.
+
+On a pod each host would save its addressable shards; here the host
+gathers (CPU container).  The weight-store state is part of the
+checkpoint, so a restored ISSGD run resumes with its importance weights
+and their staleness timestamps intact — the "database" survives restarts,
+like the paper's Redis instance would.
+
+PRNG key arrays are not serialized (they are reseeded on restore); bf16
+arrays are stored as uint16 views with a dtype manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SKIP = "__skip__"
+
+
+def _is_prng_key(x) -> bool:
+    try:
+        return jnp.issubdtype(x.dtype, jax.dtypes.prng_key)
+    except Exception:
+        return False
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        key = prefix.rstrip("/")
+        out[key] = _SKIP if _is_prng_key(tree) else np.asarray(tree)
+    return out
+
+
+def _unflatten_into(template: Any, flat: dict, prefix: str = ""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_into(getattr(template, k), flat, f"{prefix}{k}/")
+            for k in template._fields])
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_into(v, flat, f"{prefix}{i}/")
+            for i, v in enumerate(template))
+    key = prefix.rstrip("/")
+    if _is_prng_key(template) or key not in flat:
+        return template  # PRNG keys (and anything skipped) keep current value
+    return jnp.asarray(flat[key]).astype(getattr(template, "dtype", None))
+
+
+def save_checkpoint(path: str | Path, tree: Any, step: int) -> Path:
+    """Atomic save: write to a tmp file then rename."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    manifest, stored = {}, {}
+    for k, v in _flatten(tree).items():
+        if isinstance(v, str) and v == _SKIP:
+            continue
+        if v.dtype == jnp.bfloat16:
+            stored[k] = v.view(np.uint16)
+            manifest[k] = "bfloat16"
+        else:
+            stored[k] = v
+    tmp = tempfile.mktemp(dir=path.parent, suffix=".npz")
+    np.savez(tmp, __step__=np.int64(step),
+             __manifest__=np.frombuffer(
+                 json.dumps(manifest).encode(), dtype=np.uint8),
+             **stored)
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(path: str | Path, template: Any) -> tuple[Any, int]:
+    """Restore into the structure of `template`. Returns (tree, step)."""
+    with np.load(path, allow_pickle=False) as z:
+        step = int(z["__step__"])
+        manifest = json.loads(bytes(z["__manifest__"].tobytes()).decode())
+        flat = {}
+        for k in z.files:
+            if k.startswith("__"):
+                continue
+            v = z[k]
+            if manifest.get(k) == "bfloat16":
+                v = v.view(jnp.bfloat16)
+            flat[k] = v
+    return _unflatten_into(template, flat), step

@@ -1,0 +1,52 @@
+"""Architecture registry: the 10 assigned architectures + the paper's MLP.
+
+Each module exposes CONFIG (the exact assigned spec) and smoke() (a reduced
+same-family variant for CPU tests).  ``get_config(name)`` /
+``get_smoke_config(name)`` / ``ARCH_NAMES`` are the public API; the
+launcher's --arch flag resolves through here.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_NAMES = (
+    "grok_1_314b",
+    "deepseek_7b",
+    "minicpm3_4b",
+    "glm4_9b",
+    "musicgen_medium",
+    "jamba_v0_1_52b",
+    "dbrx_132b",
+    "llava_next_34b",
+    "internlm2_20b",
+    "falcon_mamba_7b",
+)
+
+_ALIASES = {n.replace("_", "-"): n for n in ARCH_NAMES}
+_ALIASES.update({
+    "grok-1-314b": "grok_1_314b",
+    "deepseek-7b": "deepseek_7b",
+    "minicpm3-4b": "minicpm3_4b",
+    "glm4-9b": "glm4_9b",
+    "musicgen-medium": "musicgen_medium",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "dbrx-132b": "dbrx_132b",
+    "llava-next-34b": "llava_next_34b",
+    "internlm2-20b": "internlm2_20b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+})
+
+
+def _module(name: str):
+    key = _ALIASES.get(name, name)
+    if key not in ARCH_NAMES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALIASES)}")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke()

@@ -1,0 +1,23 @@
+"""glm4-9b [dense] — 40L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=151552, RoPE+GQA.  [hf:THUDM/glm-4-9b]"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151552,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="glm4-9b-smoke", num_layers=2, d_model=256,
+        num_heads=8, num_kv_heads=2, d_ff=512, vocab_size=512,
+        dtype="float32")

@@ -1,0 +1,26 @@
+"""grok-1-314b [moe] — 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2.  [hf:xai-org/grok-1]"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    arch_type="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    num_experts=8,
+    num_experts_per_tok=2,
+    logits_softcap=30.0,     # grok uses output softcapping
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, name="grok-1-314b-smoke", num_layers=2, d_model=256,
+        num_heads=8, num_kv_heads=2, d_ff=512, vocab_size=512,
+        num_experts=4, num_experts_per_tok=2, dtype="float32")

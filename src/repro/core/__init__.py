@@ -1,0 +1,19 @@
+"""The paper's contribution as a composable public API."""
+from repro.core.importance import ISConfig, is_loss_scale, smooth_weights
+from repro.core.issgd import (ISSGDConfig, StepMetrics, TrainState,
+                              init_train_state, make_score_step,
+                              make_train_step)
+from repro.core.sampler import make_distributed_sampler, sample_indices
+from repro.core.scorer import make_lm_scorer, make_mlp_scorer
+from repro.core.variance import (trace_sigma, trace_sigma_all,
+                                 trace_sigma_ideal, trace_sigma_unif)
+from repro.core.weight_store import (WeightStore, init_store, read_proposal,
+                                     write_scores)
+
+__all__ = [
+    "ISConfig", "ISSGDConfig", "StepMetrics", "TrainState", "WeightStore",
+    "init_store", "init_train_state", "is_loss_scale", "make_distributed_sampler",
+    "make_lm_scorer", "make_mlp_scorer", "make_score_step", "make_train_step",
+    "read_proposal", "sample_indices", "smooth_weights", "trace_sigma",
+    "trace_sigma_all", "trace_sigma_ideal", "trace_sigma_unif", "write_scores",
+]

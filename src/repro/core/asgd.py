@@ -1,0 +1,127 @@
+"""Asynchronous SGD baseline + the paper's §6 combination proposal.
+
+The paper compares ISSGD conceptually against ASGD but ships no ASGD
+implementation ("we are not currently in possession of a good
+production-quality ASGD implementation").  We provide one — in the same
+deterministic-staleness style as the rest of this repo — and the §6
+recommendation: drop the master/worker distinction, have every peer push
+gradients AND importance weights, so all peers run ISSGD steps.
+
+Simulation model (bulk-synchronous emulation of asynchrony, like the
+ISSGD runtime): gradients applied at step t were computed on parameters
+from step t−delay (a FIFO of parameter snapshots).  delay=0 recovers
+synchronous SGD exactly.
+
+Modes:
+  uniform     plain ASGD: uniform minibatches, stale gradients
+  issgd       §6 combination: minibatches sampled from the shared weight
+              store, IS-scaled unbiased-at-stale-params gradients, and the
+              peer's fused scores pushed back to the store
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.importance import ISConfig, is_loss_scale
+from repro.core.sampler import sample_indices
+from repro.core.weight_store import (WeightStore, init_store, read_proposal,
+                                     write_scores)
+from repro.data.pipeline import gather_batch
+from repro.optim import Optimizer, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ASGDConfig:
+    batch_size: int = 64
+    delay: int = 4                  # gradient staleness in steps
+    mode: str = "uniform"           # uniform | issgd
+    is_cfg: ISConfig = ISConfig()
+
+
+class ASGDState(NamedTuple):
+    params: Any
+    opt_state: Any
+    fifo: Any                       # stacked (delay+1, ...) param snapshots
+    store: WeightStore
+    step: jax.Array
+    rng: jax.Array
+
+
+class ASGDMetrics(NamedTuple):
+    loss: jax.Array
+    grad_norm: jax.Array
+    delay_gap: jax.Array            # ||θ_t − θ_{t−delay}|| (staleness size)
+
+
+def init_asgd_state(params, optimizer: Optimizer, cfg: ASGDConfig,
+                    num_examples: int, seed: int = 0) -> ASGDState:
+    fifo = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.delay + 1,) + x.shape),
+        params)
+    return ASGDState(params=params, opt_state=optimizer.init(params),
+                     fifo=fifo, store=init_store(num_examples),
+                     step=jnp.zeros((), jnp.int32), rng=jax.random.key(seed))
+
+
+def make_asgd_step(
+    per_example_loss: Callable,                  # (params, batch) -> (B,)
+    optimizer: Optimizer,
+    cfg: ASGDConfig,
+    num_examples: int,
+    fused_score: Optional[Callable] = None,      # for mode="issgd"
+) -> Callable:
+    n = num_examples
+    if cfg.mode == "issgd" and fused_score is None:
+        raise ValueError("mode='issgd' requires fused_score")
+
+    def asgd_step(state: ASGDState, data: dict) -> tuple[ASGDState, ASGDMetrics]:
+        rng, k_sample = jax.random.split(state.rng)
+        step = state.step
+        # the peer computes on delay-old parameters (FIFO head)
+        delayed = jax.tree.map(lambda b: b[0], state.fifo)
+
+        if cfg.mode == "issgd":
+            proposal = read_proposal(state.store, step, cfg.is_cfg)
+            idx = sample_indices(k_sample, proposal, cfg.batch_size)
+            scales = is_loss_scale(proposal[idx], jnp.mean(proposal))
+        else:
+            idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
+            scales = jnp.ones((cfg.batch_size,), jnp.float32)
+        batch = gather_batch(data, idx)
+
+        def loss_fn(p):
+            if cfg.mode == "issgd":
+                losses, scores = fused_score(p, batch)
+                scores = jax.lax.stop_gradient(scores)
+            else:
+                losses, scores = per_example_loss(p, batch), None
+            return jnp.mean(losses * scales), scores
+
+        # the STALE gradient: evaluated at θ_{t−delay}, applied at θ_t
+        (loss, scores), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(delayed)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params, step)
+
+        store = state.store
+        if cfg.mode == "issgd":
+            # the peer shares its importance weights like its gradients (§6)
+            store = write_scores(store, idx, scores, step)
+
+        # advance the staleness FIFO: drop oldest, append fresh params
+        fifo = jax.tree.map(
+            lambda buf, new: jnp.concatenate([buf[1:], new[None]], axis=0),
+            state.fifo, params)
+
+        gap = global_norm(jax.tree.map(lambda a, b: a - b, state.params,
+                                       delayed))
+        metrics = ASGDMetrics(loss=loss, grad_norm=global_norm(grads),
+                              delay_gap=gap)
+        return ASGDState(params, opt_state, fifo, store, step + 1,
+                         rng), metrics
+
+    return asgd_step

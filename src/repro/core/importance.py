@@ -1,0 +1,104 @@
+"""Importance-sampling primitives from the paper.
+
+Implements:
+  * additive smoothing of probability weights (paper appendix B.3),
+  * staleness-threshold filtering (paper appendix B.1),
+  * the unbiased IS-scaled minibatch loss of section 4.1:
+
+        L(minibatch) = (1/N sum_n w_n) * 1/M sum_m  L(x_{i_m}) / w_{i_m}
+
+All functions are pure jnp and shard-agnostic: they operate on whatever
+slice of the weight table they are given, plus (optionally) precomputed
+global reductions so callers can psum across shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ISConfig:
+    """Knobs of the ISSGD estimator (paper sections 4 and B.1/B.3)."""
+
+    # Additive smoothing constant `c` (B.3): q ∝ (w + c).  c → ∞ recovers
+    # plain uniform SGD; c = 0 is the raw (risky) optimal proposal.
+    smoothing: float = 1.0
+    # Staleness threshold in *steps* (B.1): weights whose `scored_at` is
+    # older than `staleness_threshold` steps are replaced by the smoothing
+    # floor (i.e. treated as "no information", not dropped — dropping
+    # examples would bias p(x)).  <= 0 disables the filter.
+    staleness_threshold: int = 0
+    # Floor applied after smoothing to keep q(x) > 0 wherever p(x) > 0,
+    # which Theorem 1 requires for unbiasedness.
+    floor: float = 1e-8
+
+
+def smooth_weights(raw: jax.Array, cfg: ISConfig) -> jax.Array:
+    """Additive smoothing (B.3): w̃ = max(raw, 0) + c, floored to keep q>0."""
+    w = jnp.maximum(raw, 0.0) + jnp.asarray(cfg.smoothing, raw.dtype)
+    return jnp.maximum(w, jnp.asarray(cfg.floor, raw.dtype))
+
+
+def apply_staleness_filter(
+    weights: jax.Array,
+    scored_at: jax.Array,
+    step: jax.Array | int,
+    cfg: ISConfig,
+) -> jax.Array:
+    """B.1: weights scored more than `staleness_threshold` steps ago revert
+    to the neutral raw value 0 — after additive smoothing (B.3) they carry
+    exactly the uniform belief `c`, like a never-scored entry.
+
+    Entries with scored_at < 0 (never scored) are always treated as neutral.
+    """
+    neutral = jnp.asarray(0.0, weights.dtype)
+    never = scored_at < 0
+    if cfg.staleness_threshold > 0:
+        stale = (jnp.asarray(step) - scored_at) > cfg.staleness_threshold
+        mask = jnp.logical_or(stale, never)
+    else:
+        mask = never
+    return jnp.where(mask, neutral, weights)
+
+
+def normalize(weights: jax.Array, total: Optional[jax.Array] = None) -> jax.Array:
+    """ω_n = ω̃_n / Σω̃.  `total` lets distributed callers pass a psum."""
+    if total is None:
+        total = jnp.sum(weights)
+    return weights / total
+
+
+def is_loss_scale(
+    sampled_weights: jax.Array,
+    mean_weight: jax.Array,
+) -> jax.Array:
+    """Per-sample loss scale of section 4.1.
+
+    For a minibatch drawn with probabilities ∝ ω̃, the unbiased loss is
+        (1/N Σ_n ω̃_n) · 1/M Σ_m L(x_{i_m}) / ω̃_{i_m}
+    so each sampled example's loss is multiplied by  mean(ω̃)/ω̃_{i_m}.
+    When all ω̃ are equal this returns exactly 1 (plain SGD), the paper's
+    sanity check.
+    """
+    return mean_weight / sampled_weights
+
+
+def effective_sample_size(weights: jax.Array) -> jax.Array:
+    """Kish ESS of the proposal over the table — a monitoring quantity.
+
+    ESS = (Σw)² / Σw².  Equals N for uniform weights; small ESS warns that
+    the proposal is peaked (the B.3 time-bomb regime).
+    """
+    s1 = jnp.sum(weights)
+    s2 = jnp.sum(jnp.square(weights))
+    return jnp.square(s1) / jnp.maximum(s2, 1e-30)
+
+
+def proposal_entropy(weights: jax.Array) -> jax.Array:
+    """Entropy of ω (B.3 suggests monitoring it to adapt the smoothing)."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-30)
+    return -jnp.sum(jnp.where(w > 0, w * jnp.log(jnp.maximum(w, 1e-30)), 0.0))

@@ -1,0 +1,229 @@
+"""ISSGD — the paper's distributed importance-sampling SGD (section 4).
+
+One SPMD train step fuses the paper's three actors (DESIGN.md §2):
+
+  workers   → a scoring pass over a round-robin slice of the dataset,
+              evaluated with *stale* parameters θ_stale (refreshed every
+              `refresh_every` steps — the paper's parameter-push period);
+  database  → the WeightStore (sharded ω̃ + scored_at arrays);
+  master    → proposal read (B.1 staleness filter + B.3 smoothing),
+              multinomial sampling, IS-scaled unbiased loss (§4.1),
+              gradient step.
+
+Modes:
+  relaxed   the paper's practical algorithm (stale weights, fire-and-forget)
+  exact     the §4.1 oracle: rescore the *whole* dataset with fresh params
+            every step (synchronization barriers of fig. 1 enforced)
+  uniform   plain SGD baseline (scoring still runs for monitoring parity,
+            like the paper's background worker for the SGD runs)
+  fused     beyond-paper (the paper's §6 "combine with ASGD" suggestion):
+            no separate scoring pass — the training forward itself emits
+            the per-example scores for the minibatch it trains on, and the
+            store is refreshed for those examples at ~zero extra cost.
+            Coverage of unsampled examples comes from an optional probe
+            step (make_score_step) the launcher runs every K steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import variance
+from repro.core.importance import ISConfig, is_loss_scale
+from repro.core.sampler import sample_indices
+from repro.core.weight_store import (WeightStore, init_store, read_proposal,
+                                     write_scores)
+from repro.data.pipeline import gather_batch
+from repro.optim import Optimizer, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ISSGDConfig:
+    batch_size: int = 64
+    score_batch_size: int = 256        # examples rescored per step ("workers")
+    refresh_every: int = 8             # θ_stale refresh period (param pushes)
+    mode: str = "relaxed"              # relaxed | exact | uniform
+    is_cfg: ISConfig = ISConfig()
+    grad_clip: float = 0.0
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    stale_params: Any                  # the workers' parameter copy
+    store: WeightStore
+    step: jax.Array
+    rng: jax.Array
+
+
+class StepMetrics(NamedTuple):
+    loss: jax.Array
+    grad_norm: jax.Array
+    # √Tr(Σ(q)) monitors over the freshly scored slice (paper fig. 4)
+    trace_ideal: jax.Array
+    trace_stale: jax.Array
+    trace_unif: jax.Array
+    ess_frac: jax.Array                # ESS of proposal / N
+    mean_weight: jax.Array
+    sample_indices: jax.Array          # which examples were trained on
+
+
+def init_train_state(params, optimizer: Optimizer, num_examples: int,
+                     seed: int = 0) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        stale_params=jax.tree.map(lambda x: x, params),
+        store=init_store(num_examples),
+        step=jnp.zeros((), jnp.int32),
+        rng=jax.random.key(seed),
+    )
+
+
+def make_train_step(
+    per_example_loss: Callable,     # (params, batch) -> (B,) losses
+    scorer: Callable,               # (params, batch) -> (B,) ω̃ (grad norms)
+    optimizer: Optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    aux_loss: Optional[Callable] = None,   # (params, batch) -> scalar extra
+    fused_score: Optional[Callable] = None,  # (params, batch) ->
+    # (losses (B,), scores (B,)); required for mode="fused" — the training
+    # forward emits its own importance scores (paper §6 direction)
+    constrain_batch: Optional[Callable] = None,  # batch -> batch with
+    # sharding constraints; SPMD launchers pass one so the gathered
+    # minibatch is batch-sharded over the data axes (the dataset gather
+    # otherwise leaves the batch replicated and every chip computes all
+    # examples)
+) -> Callable:
+    """Build the fused ISSGD step: (state, dataset_arrays) -> (state, metrics)."""
+    is_cfg = cfg.is_cfg
+    n = num_examples
+    sb = n if cfg.mode == "exact" else cfg.score_batch_size
+    if cfg.mode == "fused" and fused_score is None:
+        raise ValueError("mode='fused' requires fused_score")
+    if constrain_batch is None:
+        constrain_batch = lambda b: b
+
+    def train_step(state: TrainState, data: dict) -> tuple[TrainState, StepMetrics]:
+        rng, k_sample = jax.random.split(state.rng)
+        step = state.step
+
+        # ---- 1. scoring pass (the "workers") --------------------------------
+        if cfg.mode == "fused":
+            store = state.store   # scores arrive from the train fwd below
+        else:
+            if cfg.mode == "exact":
+                score_idx = jnp.arange(n)
+                score_params = state.params      # barriers on: fresh params
+            else:
+                score_idx = (step * sb + jnp.arange(sb)) % n
+                score_params = state.stale_params
+            score_batch = constrain_batch(gather_batch(data, score_idx))
+            fresh_scores = scorer(score_params, score_batch)
+            # stale view of the slice BEFORE the write (for eq. 9 monitor)
+            pre_proposal = read_proposal(state.store, step, is_cfg)
+            stale_slice = pre_proposal[score_idx]
+            store = write_scores(state.store, score_idx, fresh_scores, step)
+
+        # ---- 2. master reads the proposal (B.1 + B.3) -----------------------
+        proposal = read_proposal(store, step, is_cfg)
+
+        # ---- 3. compose the minibatch ---------------------------------------
+        if cfg.mode == "uniform":
+            idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
+            scales = jnp.ones((cfg.batch_size,), jnp.float32)
+        else:
+            idx = sample_indices(k_sample, proposal, cfg.batch_size)
+            scales = is_loss_scale(proposal[idx], jnp.mean(proposal))
+        batch = constrain_batch(gather_batch(data, idx))
+
+        # ---- 4. unbiased IS-scaled update (§4.1) ----------------------------
+        def loss_fn(params):
+            if cfg.mode == "fused":
+                losses, scores = fused_score(params, batch)
+                scores = jax.lax.stop_gradient(scores)
+            else:
+                losses, scores = per_example_loss(params, batch), None
+            loss = jnp.mean(losses * scales)
+            if aux_loss is not None:
+                loss = loss + aux_loss(params, batch)
+            return loss, scores
+
+        (loss, batch_scores), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        if cfg.mode == "fused":
+            # zero-cost refresh for the examples just trained on.
+            # NOTE: the fig-4 monitors below are then computed on an
+            # importance-SAMPLED slice rather than a uniform one, so
+            # trace_stale is biased upward (high-weight examples are
+            # over-represented); use the probe step's uniform slices for
+            # faithful monitoring in fused mode.
+            score_idx, fresh_scores = idx, batch_scores
+            stale_slice = proposal[idx]
+            store = write_scores(store, idx, fresh_scores, step)
+        gnorm = global_norm(grads)
+        if cfg.grad_clip > 0:
+            from repro.optim import clip_by_global_norm
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params, step)
+
+        # ---- 5. parameter push to the workers every K steps ------------------
+        if cfg.mode == "exact":
+            stale_params = params
+        else:
+            push = (step + 1) % cfg.refresh_every == 0
+            stale_params = jax.tree.map(
+                lambda new, old: jnp.where(push, new, old),
+                params, state.stale_params)
+
+        # ---- 6. paper fig. 4 monitors over the scored slice ------------------
+        # ||g_TRUE||² upper bound (B.2): the minibatch gradient norm
+        tr_ideal = variance.trace_sigma_ideal(fresh_scores)
+        tr_stale = variance.trace_sigma(fresh_scores, stale_slice)
+        tr_unif = variance.trace_sigma_unif(fresh_scores)
+        from repro.core.importance import effective_sample_size
+        ess = effective_sample_size(proposal) / n
+
+        metrics = StepMetrics(
+            loss=loss, grad_norm=gnorm,
+            trace_ideal=jnp.sqrt(jnp.maximum(tr_ideal, 0.0)),
+            trace_stale=jnp.sqrt(jnp.maximum(tr_stale, 0.0)),
+            trace_unif=jnp.sqrt(jnp.maximum(tr_unif, 0.0)),
+            ess_frac=ess, mean_weight=jnp.mean(proposal),
+            sample_indices=idx,
+        )
+        new_state = TrainState(params, opt_state, stale_params, store,
+                               step + 1, rng)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_score_step(
+    scorer: Callable,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    constrain_batch: Optional[Callable] = None,
+) -> Callable:
+    """Standalone probe/scoring step: rescore a round-robin slice with the
+    workers' stale params and push to the store.  Used (a) by the fused
+    mode to keep coverage of unsampled examples, and (b) to amortize
+    scoring over K train steps (the B.1 staleness/throughput trade)."""
+    n = num_examples
+    sb = cfg.score_batch_size
+    if constrain_batch is None:
+        constrain_batch = lambda b: b
+
+    def score_step(state: TrainState, data: dict) -> TrainState:
+        score_idx = (state.step * sb + jnp.arange(sb)) % n
+        batch = constrain_batch(gather_batch(data, score_idx))
+        scores = scorer(state.stale_params, batch)
+        store = write_scores(state.store, score_idx, scores, state.step)
+        return state._replace(store=store)
+
+    return score_step

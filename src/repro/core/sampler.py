@@ -1,0 +1,112 @@
+"""Multinomial (with replacement) sampling from the weight table.
+
+Single-host path: inverse-CDF via cumsum + searchsorted — O(N + M log N),
+no M×N Gumbel matrix.
+
+Distributed path (`shard_sample`): the table is sharded over the data axes.
+Each shard computes its local weight sum; an all-gather of the (tiny) shard
+sums gives every shard the global CDF *over shards*; each of the M global
+uniform draws lands in exactly one shard, which resolves it against its
+local CDF.  The resolved global indices are combined with a psum (each draw
+is claimed by exactly one shard, all others contribute 0).  Communication:
+one all-gather of `num_shards` floats + one psum of M ints — this is the
+TPU translation of the paper's "workers communicate one float per sample
+instead of gradients".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def sample_indices(
+    key: jax.Array,
+    weights: jax.Array,
+    num_samples: int,
+) -> jax.Array:
+    """Multinomial-with-replacement over unnormalized `weights` (host path)."""
+    cdf = jnp.cumsum(weights.astype(jnp.float64) if weights.dtype == jnp.float64
+                     else weights.astype(jnp.float32))
+    total = cdf[-1]
+    u = jax.random.uniform(key, (num_samples,), dtype=cdf.dtype) * total
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)
+
+
+def shard_sample(
+    key: jax.Array,
+    local_weights: jax.Array,
+    num_samples: int,
+    axis_names: tuple[str, ...],
+) -> jax.Array:
+    """SPMD body (call inside shard_map): sample M global indices from the
+    sharded table.  Every shard receives the same `key` and returns the same
+    M global indices (replicated output).
+
+    axis_names: mesh axes the table's example-dim is sharded over, e.g.
+    ("pod", "data") or ("data",).
+    """
+    n_local = local_weights.shape[0]
+    local_sum = jnp.sum(local_weights, dtype=jnp.float32)
+
+    # Flatten the (possibly multi-axis) shard grid into a linear shard id.
+    shard_id = jnp.zeros((), jnp.int32)
+    num_shards = 1
+    for ax in axis_names:
+        size = jax.lax.axis_size(ax)
+        shard_id = shard_id * size + jax.lax.axis_index(ax)
+        num_shards *= size
+
+    # All shards learn all shard sums (num_shards floats).
+    contrib = jnp.zeros((num_shards,), jnp.float32).at[shard_id].set(local_sum)
+    shard_sums = contrib
+    for ax in axis_names:
+        shard_sums = jax.lax.psum(shard_sums, ax)
+
+    shard_cdf = jnp.cumsum(shard_sums)
+    total = shard_cdf[-1]
+    shard_starts = shard_cdf - shard_sums  # prefix of weight mass per shard
+
+    # Same key on every shard → identical global draws.
+    u = jax.random.uniform(key, (num_samples,), jnp.float32) * total
+
+    # Which shard owns each draw?
+    owner = jnp.searchsorted(shard_cdf, u, side="right")
+    owner = jnp.clip(owner, 0, num_shards - 1)
+    mine = owner == shard_id
+
+    # Resolve *all* draws against the local CDF (masked later).
+    local_cdf = jnp.cumsum(local_weights.astype(jnp.float32))
+    local_u = u - shard_starts[owner]
+    local_idx = jnp.searchsorted(local_cdf, local_u, side="right")
+    local_idx = jnp.clip(local_idx, 0, n_local - 1)
+
+    global_idx = jnp.where(mine, local_idx + shard_id * n_local, 0)
+    for ax in axis_names:
+        global_idx = jax.lax.psum(global_idx, ax)
+    return global_idx.astype(jnp.int32)
+
+
+def make_distributed_sampler(mesh, table_axes: tuple[str, ...]):
+    """Wrap `shard_sample` in a shard_map over `mesh`.
+
+    Returns fn(key, weights_sharded, num_samples) -> replicated i32[M].
+    """
+    shard_map = jax.shard_map
+
+    table_spec = P(table_axes)
+
+    def sampler(key, weights, num_samples: int):
+        def body(key, local_w):
+            return shard_sample(key, local_w, num_samples, table_axes)
+
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), table_spec),
+            out_specs=P(),
+            check_vma=False,
+        )(key, weights)
+
+    return sampler

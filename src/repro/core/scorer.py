@@ -1,0 +1,304 @@
+"""Per-example gradient-norm scoring — the paper's ω̃_n = ||g(x_n)||₂.
+
+Strategies (config `score_strategy`):
+
+  loss        ω̃_n = L(x_n).  Cheapest (forward only); a curriculum-style
+              heuristic, not the optimal proposal.  Baseline for ablations.
+  logit_grad  ω̃_n = ||∂L_n/∂logits||₂ in closed form from the forward pass
+              (softmax CE ⇒ p − onehot).  Forward-only.  The "cheap
+              approximation" family the paper's §6 anticipates; the standard
+              EL2N-style proxy of the full gradient norm.
+  ghost       EXACT ||∇_θ L_n||₂ over every tapped linear (paper Prop. 1 via
+              the per_example_sqnorm kernel for rank-1 layers, plus our
+              ghost-norm extension for sequence-shared layers).  One forward
+              + one backward, no per-example gradient materialization.
+  ghost_rev   same quantity, computed with a manual reverse scan over the
+              layer periods: stores only the P period-boundary activations
+              plus ONE period's records/cotangents at a time (vs ghost's
+              all-layer records) — the memory-scalable exact scorer.
+  full        vmap-of-grad oracle.  O(B·|θ|) memory — tests only.
+
+All strategies return ω̃ ≥ 0 of shape (B,) in float32.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+STRATEGIES = ("loss", "logit_grad", "ghost", "ghost_rev", "full")
+
+
+# --------------------------------------------------------------- ghost core
+def _contribution(x: jax.Array, dt: jax.Array, batch: int,
+                  with_bias: bool, scanned: bool) -> jax.Array:
+    """Squared per-example grad-norm contribution of one tapped linear.
+
+    `scanned` declares whether the arrays carry a leading period axis (the
+    scan-stacked records); never guessed from shapes — a (P, B*S, d)
+    token-flattened record is shape-ambiguous with (B, S, d) when P == B.
+
+    Shapes handled:
+      not scanned: (B, d) rank-1 (paper Prop. 1) | (B, S, d) ghost ext.
+      scanned:     (P, B, S, d) | (P, B*S, d) token-flattened (MoE router)
+    """
+    if not scanned:
+        if x.ndim == 2:
+            return ops.per_example_sqnorm(x, dt, with_bias=with_bias)
+        return ops.ghost_norm(x, dt)
+    if x.ndim == 3:  # (P, B*S, d) token-flattened inside scan
+        p = x.shape[0]
+        s = x.shape[1] // batch
+        x = x.reshape(p, batch, s, x.shape[-1])
+        dt = dt.reshape(p, batch, s, dt.shape[-1])
+    # (P, B, S, d): every (period, example) row is an independent layer copy
+    p, b = x.shape[:2]
+    r = ops.ghost_norm(x.reshape(p * b, *x.shape[2:]),
+                       dt.reshape(p * b, *dt.shape[2:]))
+    return jnp.sum(r.reshape(p, b), axis=0)
+
+
+def ghost_sq_norms(
+    loss_with_taps: Callable,
+    tap_shapes: dict,
+    batch: int,
+    scanned_names: Optional[set] = None,
+    with_bias: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact per-example squared grad-norms via the tap trick.
+
+    loss_with_taps(taps) -> (per_example_losses (B,), records dict) where
+    records[name] is the INPUT of the linear whose output tap is taps[name].
+    `scanned_names`: which records carry a leading period axis (default:
+    every name except "unembed" — the transformer convention).
+
+    Returns (sq_norms (B,), per_example_losses (B,)).
+    """
+    taps0 = {k: jnp.zeros(v.shape, v.dtype) for k, v in tap_shapes.items()}
+
+    def f(taps):
+        losses, records = loss_with_taps(taps)
+        return jnp.sum(losses), (losses, records)
+
+    _, pull, (losses, records) = jax.vjp(f, taps0, has_aux=True)
+    (dtaps,) = pull(jnp.ones((), jnp.float32))
+
+    sq = jnp.zeros((batch,), jnp.float32)
+    for name, x in records.items():
+        if name not in dtaps:
+            continue
+        scanned = (name in scanned_names) if scanned_names is not None \
+            else (name != "unembed")
+        sq = sq + _contribution(x, dtaps[name], batch, with_bias, scanned)
+    return sq, losses
+
+
+# ----------------------------------------------------------- LM strategies
+def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref") -> Callable:
+    """Scorer for transformer LMs.  Returns fn(params, batch) -> ω̃ (B,)."""
+    from repro.models.transformer import (per_example_loss, tap_structure)
+
+    if strategy == "loss":
+        def score(params, batch):
+            losses, _ = per_example_loss(params, cfg, batch, ssm_mode=ssm_mode)
+            return jnp.maximum(losses.astype(jnp.float32), 0.0)
+        return score
+
+    if strategy == "logit_grad":
+        from repro.models.transformer import forward, lm_head_metrics
+
+        def score(params, batch):
+            tokens = batch["tokens"]
+            embeds = batch.get("embeds")
+            n_front = embeds.shape[1] if embeds is not None else 0
+            h, _ = forward(params, cfg, tokens[:, :-1], embeds=embeds,
+                           ssm_mode=ssm_mode, return_hidden=True)
+            # chunked head: never materializes (B,S,V) logits at once
+            _, grad_norm = lm_head_metrics(params, cfg, h[:, n_front:],
+                                           tokens[:, 1:])
+            return grad_norm
+        return score
+
+    if strategy == "ghost":
+        def score(params, batch):
+            b, s = batch["tokens"].shape
+            tap_shapes = tap_structure(cfg, b, s - 1)
+            # the unembed tap lives outside the scan: add it explicitly
+            def loss_with_taps(taps):
+                losses, aux = per_example_loss(
+                    params, cfg, batch, taps=taps, collect=True,
+                    ssm_mode=ssm_mode)
+                return losses, aux.records
+            sq, _ = ghost_sq_norms(loss_with_taps, tap_shapes, b,
+                                   with_bias=False)
+            return jnp.sqrt(sq)
+        return score
+
+    if strategy == "ghost_rev":
+        return _make_ghost_rev_scorer(cfg, ssm_mode)
+
+    if strategy == "full":
+        def score(params, batch):
+            def loss_one(p, tokens):
+                losses, _ = per_example_loss(
+                    p, cfg, {"tokens": tokens[None]}, ssm_mode=ssm_mode)
+                return losses[0]
+            grads = jax.vmap(jax.grad(loss_one), in_axes=(None, 0))(
+                params, batch["tokens"])
+            leaves = jax.tree.leaves(grads)
+            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                             axis=tuple(range(1, g.ndim))) for g in leaves)
+            return jnp.sqrt(sq)
+        return score
+
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ----------------------------------------------- memory-scalable ghost_rev
+def _make_ghost_rev_scorer(cfg, ssm_mode: str):
+    """Exact ghost scoring via a manual reverse scan over layer periods.
+
+    Memory: P boundary activations + ONE period of records/cotangents,
+    instead of `ghost`'s records+cotangents for every layer at once —
+    the remat structure of training, applied to per-example scoring.
+    """
+    import jax.numpy as jnp
+    from repro.models.layers import Tape, rmsnorm, unembed, embed
+    from repro.models.transformer import _apply_layer, tap_structure
+
+    specs = cfg.layer_specs()
+
+    def score(params, batch):
+        tokens = batch["tokens"]
+        embeds = batch.get("embeds")
+        n_front = embeds.shape[1] if embeds is not None else 0
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        b, s_text = inputs.shape
+
+        h0 = embed(params["embed"], inputs, cfg)
+        if embeds is not None:
+            h0 = jnp.concatenate([embeds.astype(h0.dtype), h0], axis=1)
+        s = h0.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def period_fwd(h, pp, ptaps, collect):
+            tape = Tape(taps=ptaps, records={} if collect else None)
+            for i, spec in enumerate(specs):
+                h, _ = _apply_layer(pp[f"l{i}"], h, cfg, spec, positions,
+                                    tape, f"l{i}", ssm_mode)
+            return h, tape.records
+
+        # ---- phase A: forward, storing only period-boundary activations
+        def f_a(h, pp):
+            h2, _ = period_fwd(h, pp, None, False)
+            return h2, h  # ys = this period's INPUT boundary
+
+        h_final, boundaries = jax.lax.scan(f_a, h0, params["layers"])
+
+        # ---- head: per-example loss cotangent + unembed ghost term
+        def head_losses(h):
+            hn = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            logits = unembed(params["embed"], hn, cfg)[:, n_front:]
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(lp, targets[..., None], -1)[..., 0]
+            return jnp.sum(jnp.mean(nll, axis=-1)), (hn, lp)
+
+        (_, (hn, lp)), head_vjp = jax.vjp(head_losses, h_final, has_aux=False)
+        dh_final, = head_vjp((jnp.ones(()), (jnp.zeros_like(hn),
+                                             jnp.zeros_like(lp))))
+        # closed-form dL/dlogits for the unembed ghost contribution
+        p_soft = jnp.exp(lp)
+        onehot = jax.nn.one_hot(targets, cfg.vocab_size, dtype=jnp.float32)
+        dlogits = (p_soft - onehot) / s_text
+        sq = ops.ghost_norm(hn[:, n_front:], dlogits)
+
+        # per-period tap template (strip the leading period axis + unembed)
+        full_taps = tap_structure(cfg, b, s_text + n_front)
+        period_taps = {
+            k: jnp.zeros(v.shape[1:], v.dtype)
+            for k, v in full_taps.items() if k != "unembed"
+        }
+
+        # ---- phase B: reverse scan, one period of cotangents at a time
+        def f_b(carry, xs):
+            dh, acc = carry
+            pp, h_in = xs
+            (h_out, records), vjp = jax.vjp(
+                lambda h, t: period_fwd(h, pp, t, True), h_in, period_taps)
+            zero_rec = jax.tree.map(jnp.zeros_like, records)
+            dh_prev, dtaps = vjp((dh, zero_rec))
+            contrib = jnp.zeros((b,), jnp.float32)
+            for name, x in records.items():
+                if name not in dtaps:
+                    continue
+                dt = dtaps[name]
+                if x.ndim == 2 and x.shape[0] != b:   # token-flattened (T,d)
+                    x = x.reshape(b, -1, x.shape[-1])
+                    dt = dt.reshape(b, -1, dt.shape[-1])
+                contrib = contrib + _contribution(x, dt, b, False, scanned=False)
+            return (dh_prev, acc + contrib), None
+
+        (_, sq_layers), _ = jax.lax.scan(
+            f_b, (dh_final, sq), (params["layers"], boundaries),
+            reverse=True)
+        return jnp.sqrt(sq_layers)
+
+    return score
+
+
+# ---------------------------------------------------------- MLP strategies
+def make_mlp_scorer(cfg, strategy: str) -> Callable:
+    """Scorer for the paper's MLP classifier (faithful Prop.-1 path)."""
+    from repro.models.mlp import mlp_forward, per_example_loss
+    from repro.models.layers import Tape
+
+    if strategy == "loss":
+        def score(params, batch):
+            return jnp.maximum(per_example_loss(params, batch, cfg), 0.0)
+        return score
+
+    if strategy == "logit_grad":
+        def score(params, batch):
+            logits = mlp_forward(params, batch["x"], cfg)
+            p = jax.nn.softmax(logits.astype(jnp.float32), -1)
+            py = jnp.take_along_axis(p, batch["y"][:, None], -1)[:, 0]
+            sq = jnp.sum(jnp.square(p), -1) - 2.0 * py + 1.0
+            return jnp.sqrt(sq)
+        return score
+
+    if strategy == "ghost":
+        def score(params, batch):
+            b = batch["x"].shape[0]
+            # discover tap shapes with one abstract trace
+            shapes: dict = {}
+            def probe(x):
+                t = Tape(tap_shapes=shapes)
+                return per_example_loss(params, {"x": x, "y": batch["y"]},
+                                        cfg, tape=t)
+            jax.eval_shape(probe, batch["x"])
+
+            def loss_with_taps(taps):
+                t = Tape(taps=taps, records={})
+                losses = per_example_loss(params, batch, cfg, tape=t)
+                return losses, t.records
+            sq, _ = ghost_sq_norms(loss_with_taps, shapes, b,
+                                   scanned_names=set(), with_bias=True)
+            return jnp.sqrt(sq)
+        return score
+
+    if strategy == "full":
+        def score(params, batch):
+            def loss_one(p, x, y):
+                return per_example_loss(p, {"x": x[None], "y": y[None]}, cfg)[0]
+            grads = jax.vmap(jax.grad(loss_one), in_axes=(None, 0, 0))(
+                params, batch["x"], batch["y"])
+            leaves = jax.tree.leaves(grads)
+            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                             axis=tuple(range(1, g.ndim))) for g in leaves)
+            return jnp.sqrt(sq)
+        return score
+
+    raise ValueError(f"unknown strategy {strategy!r}")

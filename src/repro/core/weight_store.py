@@ -1,0 +1,76 @@
+"""The "database" of the paper, TPU-native.
+
+The paper decouples master and workers with a Redis instance that stores one
+probability weight per training example.  On a pod, the equivalent with the
+right observables is a pair of device arrays sharded over the data-parallel
+axes:
+
+    weights   : f32[N]   -- unnormalized probability weights ω̃_n
+    scored_at : i32[N]   -- the step at which ω̃_n was last recomputed
+                            (-1 = never scored)
+
+The "fire and forget" property of the paper's database is preserved: the
+training step *reads* whatever is in the store (however stale) and the
+scoring pass *writes* the slice it rescored this step.  Staleness is
+observable through `scored_at` exactly like the paper's B.1 timestamps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.importance import ISConfig, apply_staleness_filter, smooth_weights
+
+
+class WeightStore(NamedTuple):
+    weights: jax.Array    # f32[N]  raw (unsmoothed) ω̃ — grad-norm estimates
+    scored_at: jax.Array  # i32[N]  step of last scoring, -1 if never
+
+
+def init_store(num_examples: int, init_weight: float = 0.0) -> WeightStore:
+    """Fresh store: nothing scored yet → behaves as uniform (see read)."""
+    return WeightStore(
+        weights=jnp.full((num_examples,), init_weight, jnp.float32),
+        scored_at=jnp.full((num_examples,), -1, jnp.int32),
+    )
+
+
+def write_scores(
+    store: WeightStore,
+    indices: jax.Array,
+    scores: jax.Array,
+    step: jax.Array | int,
+) -> WeightStore:
+    """Workers push fresh ω̃ for the examples they just scored."""
+    step = jnp.asarray(step, jnp.int32)
+    return WeightStore(
+        weights=store.weights.at[indices].set(scores.astype(store.weights.dtype)),
+        scored_at=store.scored_at.at[indices].set(step),
+    )
+
+
+def read_proposal(
+    store: WeightStore,
+    step: jax.Array | int,
+    cfg: ISConfig,
+) -> jax.Array:
+    """The master reads the sampling proposal: staleness-filter (B.1) then
+    additive smoothing (B.3).  Never-scored entries act as the neutral
+    (uniform) weight, so a cold store reproduces plain SGD exactly."""
+    w = apply_staleness_filter(store.weights, store.scored_at, step, cfg)
+    return smooth_weights(w, cfg)
+
+
+def staleness_stats(store: WeightStore, step: jax.Array | int) -> dict:
+    """Monitoring: paper B.1 reports the fraction of weights fresh enough."""
+    step = jnp.asarray(step, jnp.int32)
+    scored = store.scored_at >= 0
+    age = jnp.where(scored, step - store.scored_at, jnp.iinfo(jnp.int32).max)
+    return {
+        "frac_scored": jnp.mean(scored.astype(jnp.float32)),
+        "mean_age": jnp.mean(jnp.where(scored, age, 0).astype(jnp.float32))
+        / jnp.maximum(jnp.mean(scored.astype(jnp.float32)), 1e-9),
+        "max_age": jnp.max(jnp.where(scored, age, -1)),
+    }

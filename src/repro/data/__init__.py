@@ -1,0 +1,5 @@
+from repro.data.pipeline import (ArrayDataset, make_svhn_like,
+                                 make_token_dataset, gather_batch)
+
+__all__ = ["ArrayDataset", "make_svhn_like", "make_token_dataset",
+           "gather_batch"]

@@ -1,0 +1,100 @@
+"""Index-addressable datasets.
+
+ISSGD needs *random access by example index* (the sampler draws indices
+from the proposal), so datasets here are device-resident array trees with a
+stable example axis, shardable over the data mesh axes.
+
+`make_svhn_like` builds the synthetic stand-in for the paper's SVHN-2
+experiment (offline container — see DESIGN.md §8): a permutation-invariant
+classification problem whose examples have *heterogeneous* gradient norms
+(cluster structure + noisy slices + label noise), the property ISSGD
+exploits.  With homogeneous examples, importance sampling provably cannot
+beat uniform (eq. 7 == eq. 8), so the benchmark would be vacuous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ArrayDataset:
+    """A tree of arrays with a common leading example axis."""
+    arrays: dict[str, jax.Array]
+
+    @property
+    def size(self) -> int:
+        return jax.tree.leaves(self.arrays)[0].shape[0]
+
+    def batch(self, indices: jax.Array) -> dict[str, jax.Array]:
+        return gather_batch(self.arrays, indices)
+
+    def slice(self, start: int, count: int) -> dict[str, jax.Array]:
+        return {k: jax.lax.dynamic_slice_in_dim(v, start, count, 0)
+                for k, v in self.arrays.items()}
+
+
+def gather_batch(arrays: dict[str, jax.Array], indices: jax.Array) -> dict:
+    return {k: jnp.take(v, indices, axis=0) for k, v in arrays.items()}
+
+
+def make_svhn_like(
+    key: jax.Array,
+    n: int = 65_536,
+    dim: int = 3072,
+    classes: int = 10,
+    noisy_frac: float = 0.15,
+    label_noise: float = 0.05,
+    dtype=jnp.float32,
+) -> tuple[ArrayDataset, ArrayDataset]:
+    """Synthetic permutation-invariant SVHN clone. Returns (train, test)."""
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    n_test = max(n // 10, classes)
+
+    means = jax.random.normal(k1, (classes, dim)) * 1.2
+
+    def sample(key, m):
+        ka, kb, kc, kd = jax.random.split(key, 4)
+        y = jax.random.randint(ka, (m,), 0, classes)
+        # heteroscedastic noise: a noisy slice of examples is much harder
+        noisy = jax.random.uniform(kb, (m,)) < noisy_frac
+        scale = jnp.where(noisy, 3.0, 0.7)[:, None]
+        x = means[y] + jax.random.normal(kc, (m, dim)) * scale
+        # label noise on a sub-slice: persistent high-gradient examples
+        flip = jax.random.uniform(kd, (m,)) < label_noise
+        y_obs = jnp.where(flip, (y + 1) % classes, y)
+        return x.astype(dtype), y_obs.astype(jnp.int32)
+
+    x_tr, y_tr = sample(k2, n)
+    x_te, y_te = sample(k3, n_test)
+    # standardize like pixel preprocessing
+    mu = x_tr.mean(axis=0, keepdims=True)
+    sd = x_tr.std(axis=0, keepdims=True) + 1e-6
+    return (ArrayDataset({"x": (x_tr - mu) / sd, "y": y_tr}),
+            ArrayDataset({"x": (x_te - mu) / sd, "y": y_te}))
+
+
+def make_token_dataset(
+    key: jax.Array,
+    n: int = 4096,
+    seq: int = 128,
+    vocab: int = 512,
+    num_patterns: int = 32,
+) -> ArrayDataset:
+    """Synthetic LM corpus: each example repeats one of `num_patterns`
+    motifs with noise, so examples genuinely differ in difficulty."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    motif_len = 16
+    motifs = jax.random.randint(k1, (num_patterns, motif_len), 0, vocab)
+    which = jax.random.randint(k2, (n,), 0, num_patterns)
+    reps = -(-seq // motif_len)
+    base = jnp.tile(motifs[which], (1, reps))[:, :seq]
+    # per-example corruption rate in [0, 0.5] — difficulty spectrum
+    rate = jax.random.uniform(k3, (n, 1)) * 0.5
+    noise = jax.random.randint(k4, (n, seq), 0, vocab)
+    corrupt = jax.random.uniform(jax.random.fold_in(k3, 1), (n, seq)) < rate
+    tokens = jnp.where(corrupt, noise, base)
+    return ArrayDataset({"tokens": tokens.astype(jnp.int32)})

@@ -1,0 +1,101 @@
+"""Pallas TPU flash-decode kernel: one query token vs. a long KV cache.
+
+Serving hot spot for the decode_32k / long_500k shapes.  GQA: the rep =
+H/Hkv query heads sharing a KV head are processed together as the matmul
+M-dim.  Online-softmax over KV blocks (sequence innermost grid dim) keeps
+the running (m, l, o) statistics in VMEM scratch; only the final
+normalized output ever hits HBM.
+
+Grid: (B, Hkv, S_blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_acc, l_acc, o_acc, *,
+            block_s: int, scale: float):
+    sc = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(sc == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, _NEG)
+        l_acc[...] = jnp.zeros_like(l_acc)
+        o_acc[...] = jnp.zeros_like(o_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (rep, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)             # (bs, hd)
+
+    s_ij = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (rep, bs)
+    pos = sc * block_s + jax.lax.broadcasted_iota(jnp.int32, s_ij.shape, 1)
+    mask = pos < len_ref[0]
+    s_ij = jnp.where(mask, s_ij, _NEG)
+
+    m_prev = m_acc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_ij, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s_ij - m_new[:, None]) * mask.astype(jnp.float32)
+    l_acc[...] = l_acc[...] * alpha + jnp.sum(p, axis=-1)
+    o_acc[...] = o_acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_acc[...] = m_new
+
+    @pl.when(sc == ns - 1)
+    def _emit():
+        denom = jnp.maximum(l_acc[...], 1e-20)
+        o_ref[0, 0] = (o_acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, H, hd)
+    k: jax.Array,        # (B, S, Hkv, hd)
+    v: jax.Array,        # (B, S, Hkv, hd)
+    lengths: jax.Array,  # (B,) int32 valid prefix per sequence
+    *,
+    scale: float | None = None,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode GQA attention. Returns (B, H, hd) in q.dtype."""
+    bsz, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    block_s = min(block_s, s)
+    pad_s = (-s) % block_s
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    qg = q.reshape(bsz, hkv, rep, hd)
+
+    grid = (bsz, hkv, (s + pad_s) // block_s)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g, sc: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, sc: (b, g, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, g, sc: (b, sc, g, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda b, g, sc: (b, sc, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, g, sc: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, rep, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(bsz, h, hd)

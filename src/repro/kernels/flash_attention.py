@@ -1,0 +1,139 @@
+"""Pallas TPU causal flash-attention (forward) for GQA prefill.
+
+The §Roofline table shows every dense prefill/train pair is memory-bound
+through the jnp attention lowering (S×S logits at fusion boundaries).
+This kernel keeps the logits tile in VMEM: online softmax over KV blocks,
+one (block_q × hd) output write per query tile.
+
+Grid: (B, H, num_q_blocks, num_k_blocks) — KV innermost so the running
+(m, l, o) statistics stay in VMEM scratch.  Causal + optional
+sliding-window masking; KV blocks entirely in the future are skipped
+(their loads still stream, masking keeps the math exact).
+
+Forward-only: serving prefill is inference, so no backward pass is needed;
+training keeps the chunked-jnp path (remat-friendly autodiff).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_acc, l_acc, o_acc, *,
+            block_q: int, block_k: int, scale: float, window: int,
+            seq_len: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, _NEG)
+        l_acc[...] = jnp.zeros_like(l_acc)
+        o_acc[...] = jnp.zeros_like(o_acc)
+
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    mask &= k_pos < seq_len  # padded tail
+
+    # skip blocks fully in the future (or beyond the window)
+    live = kb * block_k <= qb * block_q + block_q - 1
+    if window > 0:
+        live &= (kb + 1) * block_k - 1 >= qb * block_q - (window - 1)
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale     # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)             # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_acc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None]) * mask.astype(jnp.float32)
+        l_acc[...] = l_acc[...] * alpha + jnp.sum(p, axis=-1)
+        o_acc[...] = o_acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_acc[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_acc[...], 1e-20)
+        o_ref[0, :, 0, :] = (o_acc[...] / denom[:, None]).astype(o_ref.dtype)
+        # logsumexp residual for the backward pass
+        lse_ref[0, 0, :] = m_acc[...] + jnp.log(denom)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, S, H, hd)   RoPE already applied
+    k: jax.Array,   # (B, S, Hkv, hd)
+    v: jax.Array,   # (B, S, Hkv, hd)
+    *,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+    return_lse: bool = False,
+):
+    """Causal GQA flash attention. Returns (B, S, H, hd) in q.dtype
+    (plus the (B, H, S) f32 logsumexp residual when return_lse)."""
+    bsz, s, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    pad_q = (-s) % block_q
+    pad_k = (-s) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    grid = (bsz, h, (s + pad_q) // block_q, (s + pad_k) // block_k)
+    out, lse = pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          scale=scale, window=window, seq_len=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, hh, qb, kb: (b, qb, hh, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hh, qb, kb, rep=rep: (b, kb, hh // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hh, qb, kb, rep=rep: (b, kb, hh // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, hh, qb, kb: (b, qb, hh, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, hh, qb, kb: (b, hh, qb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s + pad_q, h, hd), q.dtype),
+            jax.ShapeDtypeStruct((bsz, h, s + pad_q), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    if return_lse:
+        return out[:, :s], lse[:, :, :s]
+    return out[:, :s]

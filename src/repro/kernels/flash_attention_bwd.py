@@ -1,0 +1,225 @@
+"""Flash-attention backward (FlashAttention-2 style) in Pallas.
+
+With the forward's per-row logsumexp L = m + log ℓ saved as the residual,
+the backward recomputes P = exp(QKᵀ·scale − L) tile by tile:
+
+    D  = rowsum(dO ∘ O)                    (precomputed, cheap)
+    dV = Pᵀ dO
+    dS = P ∘ (dO Vᵀ − D)
+    dQ = scale · dS K          (kernel B2: grid over q blocks, k inner)
+    dK = scale · dSᵀ Q         (kernel B1: grid over k blocks, q inner)
+
+Together with flash_attention (forward) this forms the custom-vjp op in
+ops.flash_attention_trainable — attention without S×S HBM traffic in
+either direction.  GQA: dK/dV of a KV head sum over its `rep` query heads
+(accumulated via the output BlockSpec revisiting the same block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _mask(qb, kb, block_q, block_k, window, seq_len):
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    m = k_pos <= q_pos
+    if window > 0:
+        m &= (q_pos - k_pos) < window
+    m &= (k_pos < seq_len) & (q_pos < seq_len)
+    return m
+
+
+def _p_tile(q, k, lse, qb, kb, block_q, block_k, scale, window, seq_len):
+    s = jax.lax.dot_general(q.astype(jnp.float32) * scale,
+                            k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m = _mask(qb, kb, block_q, block_k, window, seq_len)
+    s = jnp.where(m, s, _NEG)
+    return jnp.exp(s - lse[:, None]) * m.astype(jnp.float32)
+
+
+def _dkdv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref,
+                 dk_ref, dv_ref, dk_acc, dv_acc, *,
+                 block_q, block_k, scale, window, seq_len, rep):
+    """Grid (B, Hkv, nk, nq·rep): the innermost axis walks (q block,
+    group-local head), so the accumulator covers all rep GQA heads of the
+    KV head before the (b, kb, g) output block is left."""
+    kb = pl.program_id(2)
+    inner = pl.program_id(3)
+    n_inner = pl.num_programs(3)
+    qb = inner // rep
+
+    @pl.when(inner == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    live = (qb + 1) * block_q - 1 >= kb * block_k
+    if window > 0:
+        live &= qb * block_q <= (kb + 1) * block_k - 1 + (window - 1)
+
+    @pl.when(live)
+    def _accum():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        lse = lse_ref[0, 0, :]
+        dvec = dvec_ref[0, 0, :]
+        p = _p_tile(q, k, lse, qb, kb, block_q, block_k, scale, window,
+                    seq_len)                                   # (bq, bk)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                 # (bk, hd)
+        dp = jax.lax.dot_general(
+            do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)                 # (bq, bk)
+        ds = p * (dp - dvec[:, None])
+        dk_acc[...] += scale * jax.lax.dot_general(
+            ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                 # (bk, hd)
+
+    @pl.when(inner == n_inner - 1)
+    def _emit():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, dq_ref,
+               dq_acc, *, block_q, block_k, scale, window, seq_len):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    live = kb * block_k <= (qb + 1) * block_q - 1
+    if window > 0:
+        live &= (kb + 1) * block_k - 1 >= qb * block_q - (window - 1)
+
+    @pl.when(live)
+    def _accum():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        lse = lse_ref[0, 0, :]
+        dvec = dvec_ref[0, 0, :]
+        p = _p_tile(q, k, lse, qb, kb, block_q, block_k, scale, window,
+                    seq_len)
+        dp = jax.lax.dot_general(
+            do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        ds = p * (dp - dvec[:, None])
+        dq_acc[...] += scale * jax.lax.dot_general(
+            ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kb == nk - 1)
+    def _emit():
+        dq_ref[0, :, 0, :] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, o, lse, do, *,
+    window: int = 0, scale: float | None = None,
+    block_q: int = 256, block_k: int = 256, interpret: bool = False,
+):
+    """Returns (dq, dk, dv). Shapes as the forward; lse: (B, H, S) f32."""
+    bsz, s, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    pad_q = (-s) % block_q
+    pad_k = (-s) % block_k
+
+    dvec = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                   axis=-1).transpose(0, 2, 1)                 # (B,H,S)
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    dop = jnp.pad(do, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, pad_q)),
+                   constant_values=_NEG)
+    dvecp = jnp.pad(dvec, ((0, 0), (0, 0), (0, pad_q)))
+    nq = (s + pad_q) // block_q
+    nk = (s + pad_k) // block_k
+
+    # ---- dK/dV: grid (B, Hkv, kb, nq·rep) — (q block, group head) innermost
+    def _qh(b, g, kb, inner):
+        return (b, inner // rep, g * rep + inner % rep, 0)
+
+    def _lseh(b, g, kb, inner):
+        return (b, g * rep + inner % rep, inner // rep)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkdv_kernel, block_q=block_q, block_k=block_k,
+                          scale=scale, window=window, seq_len=s, rep=rep),
+        grid=(bsz, hkv, nk, nq * rep),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), _qh),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, g, kb, inner: (b, kb, g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, g, kb, inner: (b, kb, g, 0)),
+            pl.BlockSpec((1, block_q, 1, hd), _qh),
+            pl.BlockSpec((1, 1, block_q), _lseh),
+            pl.BlockSpec((1, 1, block_q), _lseh),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, g, kb, inner: (b, kb, g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, g, kb, inner: (b, kb, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s + pad_k, hkv, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, s + pad_k, hkv, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
+                        pltpu.VMEM((block_k, hd), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, dvecp)
+
+    # ---- dQ: grid (B, H, qb, kb) — k innermost
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, block_q=block_q, block_k=block_k,
+                          scale=scale, window=window, seq_len=s),
+        grid=(bsz, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, hh, qb, kb: (b, qb, hh, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hh, qb, kb, rep=rep: (b, kb, hh // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hh, qb, kb, rep=rep: (b, kb, hh // rep, 0)),
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, hh, qb, kb: (b, qb, hh, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, hh, qb, kb: (b, hh, qb)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, hh, qb, kb: (b, hh, qb)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, hh, qb, kb: (b, qb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s + pad_q, h, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, dvecp)
+
+    return (dq[:, :s].astype(q.dtype), dk[:, :s].astype(k.dtype),
+            dv[:, :s].astype(v.dtype))

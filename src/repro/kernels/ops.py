@@ -1,0 +1,139 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * interpret-mode selection: on CPU backends the kernels run with
+    interpret=True (Python emulation, used for validation); on TPU they
+    lower to Mosaic.
+  * padding to kernel-friendly shapes (done inside the kernel modules).
+  * algorithm selection for the ghost norm: the blocked Gram kernel costs
+    O(S²(din+dout)) while the direct per-example einsum costs
+    O(S·din·dout); we pick per layer shape (mixed ghost-norm strategy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.ghost_norm import ghost_norm as _ghost_norm
+from repro.kernels.per_example_sqnorm import per_example_sqnorm as _per_example_sqnorm
+from repro.kernels.selective_scan import selective_scan as _selective_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------------ Prop. 1
+@functools.partial(jax.jit, static_argnames=("with_bias",))
+def per_example_sqnorm(x, d, with_bias: bool = True):
+    """Paper Prop. 1: (B,din),(B,dout) → f32[B] squared grad-norm."""
+    return _per_example_sqnorm(x, d, with_bias=with_bias, interpret=_interpret())
+
+
+# --------------------------------------------------------------- ghost norm
+def ghost_cost(s: int, din: int, dout: int) -> float:
+    """FLOPs of the Gram path per example."""
+    return float(s) * s * (din + dout)
+
+
+def direct_cost(s: int, din: int, dout: int) -> float:
+    """FLOPs of the materialized per-example gradient path."""
+    return float(s) * din * dout
+
+
+@functools.partial(jax.jit, static_argnames=("symmetric", "force"))
+def ghost_norm(x, d, symmetric: bool = True, force: str | None = None):
+    """||X_nᵀD_n||²_F per example, x:(B,S,din) d:(B,S,dout) → f32[B].
+
+    Picks the cheaper of the Gram kernel and the direct einsum unless
+    `force` in {"gram", "direct"} pins the path.
+    """
+    _, s, din = x.shape
+    dout = d.shape[2]
+    # the FLOP model targets TPU; in interpret mode (CPU validation) the
+    # Gram kernel is Python-emulated, so auto-select never picks it there
+    use_gram = (not _interpret()
+                and ghost_cost(s, din, dout) <= direct_cost(s, din, dout))
+    if force == "gram":
+        use_gram = True
+    elif force == "direct":
+        use_gram = False
+    if use_gram:
+        return _ghost_norm(x, d, symmetric=symmetric, interpret=_interpret())
+    return ref.ghost_norm_direct_ref(x, d)
+
+
+# ----------------------------------------------------------- selective scan
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def selective_scan(u, delta, a, b, c, d, chunk: int = 128, block_d: int = 512):
+    """Mamba-1 chunked selective scan, padding seq/channels as needed."""
+    bsz, s, di = u.shape
+    chunk = min(chunk, s)
+    pad_s = (-s) % chunk
+    bd = min(block_d, di)
+    pad_d = (-di) % bd
+    if pad_s or pad_d:
+        u_p = jnp.pad(u, ((0, 0), (0, pad_s), (0, pad_d)))
+        # pad delta with ones so exp(Δ·A) stays finite; padded channels are
+        # discarded below anyway
+        dl_p = jnp.pad(delta, ((0, 0), (0, pad_s), (0, pad_d)),
+                       constant_values=1.0)
+        a_p = jnp.pad(a, ((0, pad_d), (0, 0)))
+        b_p = jnp.pad(b, ((0, 0), (0, pad_s), (0, 0)))
+        c_p = jnp.pad(c, ((0, 0), (0, pad_s), (0, 0)))
+        d_p = jnp.pad(d, ((0, pad_d),))
+    else:
+        u_p, dl_p, a_p, b_p, c_p, d_p = u, delta, a, b, c, d
+    y = _selective_scan(u_p, dl_p, a_p, b_p, c_p, d_p,
+                        chunk=chunk, block_d=bd, interpret=_interpret())
+    return y[:, :s, :di]
+
+
+# --------------------------------------------------------- decode attention
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k, v, lengths, block_s: int = 512):
+    """Flash-decode GQA attention over a (possibly partial) KV cache."""
+    return _decode_attention(q, k, v, lengths, block_s=block_s,
+                             interpret=_interpret())
+
+
+# ---------------------------------------------------------- flash attention
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k"))
+def flash_attention(q, k, v, window: int = 0, block_q: int = 256,
+                    block_k: int = 256):
+    """Causal GQA flash attention (forward; the prefill hot path)."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    return _fa(q, k, v, window=window, block_q=block_q, block_k=block_k,
+               interpret=_interpret())
+
+
+def make_flash_attention_trainable(window: int = 0, block_q: int = 256,
+                                   block_k: int = 256):
+    """Differentiable flash attention: forward + FlashAttention-2-style
+    backward kernels wired through jax.custom_vjp.  Neither direction
+    materializes the S×S attention matrix in HBM."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd as _fb
+
+    @jax.custom_vjp
+    def fa(q, k, v):
+        return _fa(q, k, v, window=window, block_q=block_q, block_k=block_k,
+                   interpret=_interpret())
+
+    def fwd(q, k, v):
+        o, lse = _fa(q, k, v, window=window, block_q=block_q,
+                     block_k=block_k, interpret=_interpret(),
+                     return_lse=True)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        return _fb(q, k, v, o, lse, do, window=window, block_q=block_q,
+                   block_k=block_k, interpret=_interpret())
+
+    fa.defvjp(fwd, bwd)
+    return fa

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for paper Proposition 1 (rank-1 / fully-connected case).
+
+Computes, per minibatch row n:
+    out[n] = ||x[n,:]||² · ||d[n,:]||²  (+ ||d[n,:]||²  for the bias term)
+without ever materializing per-example gradients — the paper's recipe for
+making importance weights affordable (§3.3).
+
+Tiling: grid (batch_blocks, feature_blocks).  The feature dimension is the
+reduction; partial row sums live in VMEM scratch across the feature grid
+steps (innermost), the product is emitted on the last feature block.
+x and d may have different widths; the wrapper pads both to the common
+feature-block grid with zeros (exact for sums of squares).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, d_ref, out_ref, xs_acc, ds_acc, *, nkx: int, nkd: int,
+            with_bias: bool):
+    k = pl.program_id(1)
+    nk = max(nkx, nkd)
+
+    @pl.when(k == 0)
+    def _init():
+        xs_acc[...] = jnp.zeros_like(xs_acc)
+        ds_acc[...] = jnp.zeros_like(ds_acc)
+
+    @pl.when(k < nkx)
+    def _accum_x():
+        xb = x_ref[...].astype(jnp.float32)
+        xs_acc[...] += jnp.sum(xb * xb, axis=-1)
+
+    @pl.when(k < nkd)
+    def _accum_d():
+        db = d_ref[...].astype(jnp.float32)
+        ds_acc[...] += jnp.sum(db * db, axis=-1)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        res = xs_acc[...] * ds_acc[...]
+        if with_bias:
+            res = res + ds_acc[...]
+        out_ref[...] = res
+
+
+def per_example_sqnorm(
+    x: jax.Array,
+    d: jax.Array,
+    *,
+    with_bias: bool = True,
+    block_b: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[n] = ||x[n]||²·||d[n]||² (+||d[n]||²). x:(B,din) d:(B,dout) → f32[B]."""
+    assert x.ndim == 2 and d.ndim == 2 and x.shape[0] == d.shape[0]
+    b, din = x.shape
+    dout = d.shape[1]
+
+    bb = min(block_b, b)
+    pad_b = (-b) % bb
+    nkx = pl.cdiv(din, block_k)
+    nkd = pl.cdiv(dout, block_k)
+    nk = max(nkx, nkd)
+
+    xp = jnp.pad(x, ((0, pad_b), (0, (-din) % block_k)))
+    dp = jnp.pad(d, ((0, pad_b), (0, (-dout) % block_k)))
+
+    grid = (pl.cdiv(b + pad_b, bb), nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nkx=nkx, nkd=nkd, with_bias=with_bias),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, block_k), lambda i, k: (i, jnp.minimum(k, nkx - 1))),
+            pl.BlockSpec((bb, block_k), lambda i, k: (i, jnp.minimum(k, nkd - 1))),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b + pad_b,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bb,), jnp.float32),
+            pltpu.VMEM((bb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, dp)
+    return out[:b]

@@ -1,0 +1,151 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, real lowering on TPU).  They are also used directly on small
+problems where kernel launch overhead dominates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------- per-example sq-norms
+def per_example_sqnorm_ref(x: jax.Array, d: jax.Array, with_bias: bool = True) -> jax.Array:
+    """Paper Proposition 1 (rank-1 / MLP case).
+
+    x: (B, d_in) layer inputs, d: (B, d_out) = dL/dY.
+    Returns (B,) squared grad-norm contribution of this layer:
+        ||x_n||² ||d_n||²  (+ ||d_n||² for the bias).
+    """
+    xs = jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1)
+    ds = jnp.sum(jnp.square(d.astype(jnp.float32)), axis=-1)
+    out = xs * ds
+    if with_bias:
+        out = out + ds
+    return out
+
+
+def ghost_norm_ref(x: jax.Array, d: jax.Array) -> jax.Array:
+    """Ghost-norm extension for weight sharing over the sequence dim.
+
+    x: (B, S, d_in), d: (B, S, d_out) = dL/dY.
+    Per-example grad of the shared W is G_n = x_nᵀ d_n, and
+        ||G_n||²_F = <x_n x_nᵀ, d_n d_nᵀ>_F.
+    Returns (B,) float32.
+    """
+    x = x.astype(jnp.float32)
+    d = d.astype(jnp.float32)
+    gx = jnp.einsum("bsk,btk->bst", x, x)
+    gd = jnp.einsum("bsk,btk->bst", d, d)
+    return jnp.sum(gx * gd, axis=(1, 2))
+
+
+def ghost_norm_direct_ref(x: jax.Array, d: jax.Array) -> jax.Array:
+    """Same quantity via the materialized per-example gradient (O(S·din·dout)
+    compute, O(din·dout) memory per example).  Used as the second oracle and
+    as the runtime path when S(d_in+d_out) > d_in·d_out."""
+    g = jnp.einsum("bsi,bso->bio", x.astype(jnp.float32), d.astype(jnp.float32))
+    return jnp.sum(jnp.square(g), axis=(1, 2))
+
+
+# --------------------------------------------------------- selective scan
+def selective_scan_ref(
+    u: jax.Array,      # (B, S, d_inner)
+    delta: jax.Array,  # (B, S, d_inner)  (already softplus'd, > 0)
+    a: jax.Array,      # (d_inner, d_state)  (negative; the continuous A)
+    b: jax.Array,      # (B, S, d_state)
+    c: jax.Array,      # (B, S, d_state)
+    d: jax.Array,      # (d_inner,) skip connection
+    return_state: bool = False,
+    scan_dtype=jnp.float32,
+    unroll: int = 1,
+):
+    """Mamba-1 selective SSM scan (sequential oracle).
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t ⊙ u_t) ⊗ B_t
+    y_t = (h_t · C_t) + D ⊙ u_t
+    Returns y: (B, S, d_inner), same dtype as u.
+
+    scan_dtype controls the recurrence-state precision (the perf knob
+    measured in EXPERIMENTS.md §Perf; bf16 halves per-step HBM traffic).
+    """
+    scan_dtype = jnp.dtype(scan_dtype)
+    u32, dl32 = u.astype(scan_dtype), delta.astype(scan_dtype)
+    b32, c32 = b.astype(scan_dtype), c.astype(scan_dtype)
+    a32 = a.astype(scan_dtype)
+
+    def step(h, xs):
+        u_t, dl_t, b_t, c_t = xs  # (B,di) (B,di) (B,ds) (B,ds)
+        da = jnp.exp(dl_t[..., None] * a32[None])          # (B, di, ds)
+        h = h * da + (dl_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)          # (B, di)
+        return h, y
+
+    B_, S, di = u.shape
+    ds = a.shape[-1]
+    h0 = jnp.zeros((B_, di, ds), scan_dtype)
+    xs = (jnp.moveaxis(u32, 1, 0), jnp.moveaxis(dl32, 1, 0),
+          jnp.moveaxis(b32, 1, 0), jnp.moveaxis(c32, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs, unroll=unroll)
+    y = jnp.moveaxis(ys, 0, 1) + u32 * d.astype(jnp.float32)[None, None]
+    y = y.astype(u.dtype)
+    if return_state:
+        return y, h_final
+    return y
+
+
+def selective_scan_step_ref(h, u_t, delta_t, a, b_t, c_t, d):
+    """Single decode step of the same recurrence. h: (B, di, ds)."""
+    dl = delta_t.astype(jnp.float32)
+    da = jnp.exp(dl[..., None] * a.astype(jnp.float32)[None])
+    h = h * da + (dl * u_t.astype(jnp.float32))[..., None] * b_t.astype(jnp.float32)[:, None, :]
+    y = jnp.sum(h * c_t.astype(jnp.float32)[:, None, :], axis=-1)
+    y = y + u_t.astype(jnp.float32) * d.astype(jnp.float32)[None]
+    return h, y.astype(u_t.dtype)
+
+
+# --------------------------------------------------------- flash attention
+def flash_attention_ref(q, k, v, window: int = 0, scale=None):
+    """Causal GQA attention oracle. q:(B,S,H,hd) k,v:(B,S,Hkv,hd)."""
+    bsz, s, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(bsz, s, hkv, rep, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k.astype(jnp.float32))
+    pos = jnp.arange(s)
+    mask = pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return o.reshape(bsz, s, h, hd).astype(q.dtype)
+
+
+# -------------------------------------------------------- decode attention
+def decode_attention_ref(
+    q: jax.Array,        # (B, H, hd)
+    k: jax.Array,        # (B, S, Hkv, hd)
+    v: jax.Array,        # (B, S, Hkv, hd)
+    length: jax.Array | None = None,  # (B,) valid prefix lengths
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token GQA attention against a KV cache (flash-decode oracle)."""
+    B_, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B_, Hkv, rep, hd)
+    logits = jnp.einsum("bgrd,bsgd->bgrs", qg, kf)
+    if length is not None:
+        pos = jnp.arange(k.shape[1])[None, None, None, :]
+        mask = pos < length[:, None, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", p, vf)
+    return o.reshape(B_, H, hd).astype(q.dtype)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan (chunked recurrence).
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + (Δ_t ⊙ u_t) ⊗ B_t
+    y_t = (h_t · C_t) + D ⊙ u_t
+
+TPU adaptation (DESIGN §2): instead of a monolithic O(S) associative scan
+that materializes (B,S,d_inner,d_state) states in HBM, the sequence is cut
+into VMEM-sized chunks; the inter-chunk state h (d_block × d_state) is
+carried in VMEM scratch across grid steps (sequence innermost), and the
+channel dim is blocked so the kernel parallelizes over (batch × channel
+blocks) — the natural sharding when d_inner is tensor-parallel over the
+`model` mesh axis.
+
+Grid: (B, d_inner_blocks, S_chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dl_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_acc, *,
+            chunk: int):
+    sc = pl.program_id(2)
+
+    @pl.when(sc == 0)
+    def _init():
+        h_acc[...] = jnp.zeros_like(h_acc)
+
+    a = a_ref[...].astype(jnp.float32)            # (bd, ds)
+    dvec = d_ref[...].astype(jnp.float32)         # (bd,)
+    u = u_ref[0].astype(jnp.float32)              # (chunk, bd)
+    dl = dl_ref[0].astype(jnp.float32)            # (chunk, bd)
+    bmat = b_ref[0].astype(jnp.float32)           # (chunk, ds)
+    cmat = c_ref[0].astype(jnp.float32)           # (chunk, ds)
+
+    def body(t, carry):
+        h = carry                                  # (bd, ds)
+        dl_t = jax.lax.dynamic_slice_in_dim(dl, t, 1, 0)[0]   # (bd,)
+        u_t = jax.lax.dynamic_slice_in_dim(u, t, 1, 0)[0]     # (bd,)
+        b_t = jax.lax.dynamic_slice_in_dim(bmat, t, 1, 0)[0]  # (ds,)
+        c_t = jax.lax.dynamic_slice_in_dim(cmat, t, 1, 0)[0]  # (ds,)
+        da = jnp.exp(dl_t[:, None] * a)                       # (bd, ds)
+        h = h * da + (dl_t * u_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=-1) + dvec * u_t  # (bd,)
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h_acc[...] = jax.lax.fori_loop(0, chunk, body, h_acc[...])
+
+
+def selective_scan(
+    u: jax.Array,      # (B, S, d_inner)
+    delta: jax.Array,  # (B, S, d_inner)
+    a: jax.Array,      # (d_inner, d_state)
+    b: jax.Array,      # (B, S, d_state)
+    c: jax.Array,      # (B, S, d_state)
+    d: jax.Array,      # (d_inner,)
+    *,
+    chunk: int = 128,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked selective scan. Returns y: (B, S, d_inner) in u.dtype."""
+    bsz, s, di = u.shape
+    ds = a.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, "wrapper pads seq to a chunk multiple"
+    bd = min(block_d, di)
+    assert di % bd == 0, "wrapper pads channels to a block multiple"
+
+    grid = (bsz, di // bd, s // chunk)
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda bi, dj, sc: (bi, sc, dj)),
+            pl.BlockSpec((1, chunk, bd), lambda bi, dj, sc: (bi, sc, dj)),
+            pl.BlockSpec((bd, ds), lambda bi, dj, sc: (dj, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda bi, dj, sc: (bi, sc, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda bi, dj, sc: (bi, sc, 0)),
+            pl.BlockSpec((bd,), lambda bi, dj, sc: (dj,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda bi, dj, sc: (bi, sc, dj)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, di), u.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, a, b, c, d)
+    return y

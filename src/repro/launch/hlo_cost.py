@@ -1,0 +1,222 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+under-reports FLOPs/bytes/collectives for scan-over-layers programs by the
+trip count (64× for a 64-layer stack).  This walker parses the optimized
+HLO, builds a per-computation symbol table (op name → shape), and
+recursively multiplies every called computation (while bodies, fusions)
+by its trip count:
+
+  flops            2·|out|·K for dot ops (K = product of lhs contracting
+                   dims, resolved through the symbol table), conv flops
+  collective_bytes output bytes of all-gather / all-reduce / reduce-scatter /
+                   all-to-all / collective-permute
+  io_bytes         output bytes of materializing ops (fusions, dots,
+                   copies, collectives) — a post-fusion buffer-write proxy
+                   for HBM traffic
+
+Trip counts come from the loop condition's `compare(iv, constant)` pattern
+produced by the jax scan/while lowering.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_OP = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLS = re.compile(r"(?:calls=|body=|to_apply=)%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _first_shape(text: str):
+    """(elems, bytes) of the first typed shape in `text`, or None."""
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        return n, n * _DTYPE_BYTES[dt]
+    return None
+
+
+def _all_shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str):
+    """Dims list of the first typed shape."""
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        return [int(d) for d in dims.split(",") if d]
+    return None
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    io_bytes: float = 0.0
+    collective_by_op: dict = field(default_factory=dict)
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.collective_bytes += other.collective_bytes * times
+        self.io_bytes += other.io_bytes * times
+        for k, v in other.collective_by_op.items():
+            self.collective_by_op[k] = self.collective_by_op.get(k, 0) + v * times
+
+
+def parse_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith("  ") and "{" in line and "->" in line:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _symbols(lines: list[str]) -> dict[str, list[int]]:
+    """name -> output shape dims for every op in a computation."""
+    table: dict[str, list[int]] = {}
+    for line in lines:
+        m = _OP.match(line)
+        if not m:
+            continue
+        dims = _shape_dims(m.group(2))
+        if dims is not None:
+            table[m.group(1)] = dims
+    return table
+
+
+def _dot_flops(body: str, table: dict) -> float:
+    out = _first_shape(body)
+    if out is None:
+        return 0.0
+    k = 1
+    cm = _LHS_CONTRACT.search(body)
+    om = _OPERANDS.search(body)
+    if cm and om and cm.group(1):
+        lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
+        lhs_dims = table.get(lhs_name)
+        if lhs_dims:
+            for ci in cm.group(1).split(","):
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+    return 2.0 * out[0] * k
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_INT.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def analyze(hlo: str, entry: str | None = None) -> Cost:
+    comps = parse_computations(hlo)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+
+    cache: dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in cache:
+            return cache[name]
+        cache[name] = Cost()          # cycle guard
+        lines = comps.get(name, [])
+        table = _symbols(lines)
+        total = Cost()
+        for line in lines:
+            m = _OP.match(line)
+            if not m:
+                continue
+            body = m.group(2)
+            if re.search(r"\bwhile\(", body):
+                cm = _CALLS.search(body)
+                dm = _COND.search(body)
+                trip = _trip_count(comps.get(dm.group(1), [])) if dm else 1
+                if cm:
+                    total.add(comp_cost(cm.group(1)), times=trip)
+                continue
+            if re.search(r"\b(fusion|call|conditional)\(", body):
+                for sub in _CALLS.findall(body):
+                    total.add(comp_cost(sub))
+                out = _first_shape(body)
+                if out:
+                    total.io_bytes += out[1]
+                continue
+            coll = next((c for c in _COLLECTIVES if f" {c}(" in body
+                         or f"{c}-start(" in body or body.startswith(f"{c}(")),
+                        None)
+            if coll:
+                nbytes = _all_shape_bytes(body.split(coll)[0])
+                total.collective_bytes += nbytes
+                total.collective_by_op[coll] = (
+                    total.collective_by_op.get(coll, 0) + nbytes)
+                total.io_bytes += nbytes
+                continue
+            if re.search(r"\bdot\(", body):
+                total.flops += _dot_flops(body, table)
+                out = _first_shape(body)
+                if out:
+                    total.io_bytes += out[1]
+                continue
+            if re.search(r"\bconvolution\(", body):
+                out = _first_shape(body)
+                om = _OPERANDS.search(body)
+                if out and om:
+                    names = [n.strip().lstrip("%")
+                             for n in om.group(1).split(",")]
+                    ker = table.get(names[1]) if len(names) > 1 else None
+                    if ker:
+                        kelems = 1
+                        for d in ker:
+                            kelems *= d
+                        total.flops += 2.0 * out[0] * kelems / max(ker[0], 1)
+                    total.io_bytes += out[1]
+                continue
+            if re.search(r"\b(copy|copy-start|dynamic-update-slice|gather|"
+                         r"scatter|sort|dynamic-slice)\(", body):
+                out = _first_shape(body)
+                if out:
+                    total.io_bytes += out[1]
+        cache[name] = total
+        return total
+
+    return comp_cost(entry)

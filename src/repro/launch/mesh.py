@@ -1,0 +1,28 @@
+"""Production mesh definitions (TPU v5e).
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading
+    "pod" axis (data-parallel across the slower inter-pod links)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n: int | None = None):
+    """A 1-D mesh over whatever devices exist (tests on CPU)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# v5e hardware constants for the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link

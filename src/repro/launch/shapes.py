@@ -1,0 +1,170 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins and shardings for the
+multi-pod dry-run (no device allocation ever happens here)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import data_axes, param_pspecs, rules_for
+from repro.models.config import ModelConfig
+from repro.models.transformer import transformer_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+# window used when a pure-attention arch runs the long-context shape
+LONG_CONTEXT_WINDOW = 8_192
+
+
+def arch_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments (see DESIGN.md §Arch-applicability):
+    pure-attention archs switch to sliding-window attention for long_500k;
+    big-vocab configs use the chunked LM head for training shapes."""
+    if shape.kind == "train" and cfg.loss_chunk == 0:
+        cfg = dataclasses.replace(cfg, loss_chunk=512)
+    if (shape.name == "long_500k" and cfg.ssm_state == 0
+            and cfg.sliding_window == 0):
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _dp(mesh, size: int):
+    """The data-parallel axes that evenly divide `size` (batch=1 → none)."""
+    axes = [a for a in data_axes(mesh)]
+    keep = []
+    prod = 1
+    for a in axes:
+        if size % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    if not keep:
+        return None
+    return tuple(keep) if len(keep) > 1 else keep[0]
+
+
+# ------------------------------------------------------------------- train
+def train_dataset_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                        num_examples: int | None = None):
+    """ShapeDtypeStructs + shardings for the device-resident dataset."""
+    n = num_examples or 2 * shape.global_batch
+    dp = _dp(mesh, n)
+    s_text = shape.seq_len - cfg.num_frontend_tokens
+    data = {"tokens": _sds((n, s_text + 1), jnp.int32)}
+    shard = {"tokens": _ns(mesh, dp, None)}
+    if cfg.frontend != "none":
+        data["embeds"] = _sds((n, cfg.num_frontend_tokens, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+        shard["embeds"] = _ns(mesh, dp, None, None)
+    return data, shard
+
+
+def train_state_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                      num_examples: int):
+    """Abstract TrainState (plain-SGD ISSGD, the paper's optimizer)."""
+    from repro.core.issgd import TrainState
+    from repro.models.transformer import init_transformer
+
+    params_shape = jax.eval_shape(
+        lambda k: init_transformer(k, cfg), jax.random.key(0))
+    pspecs = param_pspecs(transformer_specs(cfg), params_shape, mesh)
+    pshard = jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    dp = _dp(mesh, num_examples)
+    from repro.core.weight_store import WeightStore
+    store = WeightStore(weights=_sds((num_examples,), jnp.float32),
+                        scored_at=_sds((num_examples,), jnp.int32))
+    store_shard = WeightStore(weights=_ns(mesh, dp),
+                              scored_at=_ns(mesh, dp))
+    key_shape = jax.eval_shape(lambda: jax.random.key(0))
+    state = TrainState(params=params_shape, opt_state=(),
+                       stale_params=params_shape, store=store,
+                       step=_sds((), jnp.int32), rng=key_shape)
+    shard = TrainState(params=pshard, opt_state=(), stale_params=pshard,
+                       store=store_shard, step=_ns(mesh),
+                       rng=_ns(mesh))
+    return state, shard
+
+
+# ------------------------------------------------------------------- serve
+def serve_cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """Abstract ServeState + shardings.
+
+    KV caches shard batch over the data axes and the cache-sequence dim
+    over `model` (long-context: over everything that divides).
+    """
+    from repro.serving.engine import ServeState, cache_shapes
+
+    b = shape.global_batch
+    dp = _dp(mesh, b)
+    shapes = cache_shapes(cfg, b, shape.seq_len)
+    caches, shards = {}, {}
+    for name, sds in shapes.items():
+        caches[name] = sds
+        if ".mamba.conv" in name:
+            shards[name] = _ns(mesh, None, dp, None, "model")
+        elif ".mamba.h" in name:
+            shards[name] = _ns(mesh, None, dp, "model", None)
+        elif name.endswith(".latent") or name.endswith(".rope"):
+            w_ax = "model" if dp is not None else ("data", "model")
+            shards[name] = _ns(mesh, None, dp, w_ax, None)
+        else:  # gqa k/v: (P, B, W, Hkv, hd)
+            w_ax = "model" if dp is not None else ("data", "model")
+            w = sds.shape[2]
+            axes_sz = (mesh.shape["model"] if w_ax == "model" else
+                       mesh.shape["data"] * mesh.shape["model"])
+            if w % axes_sz != 0:
+                w_ax = None
+            shards[name] = _ns(mesh, None, dp, w_ax, None, None)
+    state = ServeState(caches=caches,
+                       lengths=_sds((b,), jnp.int32))
+    shard = ServeState(caches=shards, lengths=_ns(mesh, dp))
+    return state, shard
+
+
+def serve_param_shardings(cfg: ModelConfig, mesh: Mesh):
+    from repro.models.transformer import init_transformer
+    params_shape = jax.eval_shape(
+        lambda k: init_transformer(k, cfg), jax.random.key(0))
+    pspecs = param_pspecs(transformer_specs(cfg), params_shape, mesh)
+    return params_shape, jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    b = shape.global_batch
+    dp = _dp(mesh, b)
+    s_text = shape.seq_len - cfg.num_frontend_tokens
+    toks = _sds((b, s_text), jnp.int32)
+    tshard = _ns(mesh, dp, None)
+    if cfg.frontend != "none":
+        emb = _sds((b, cfg.num_frontend_tokens, cfg.d_model),
+                   jnp.dtype(cfg.dtype))
+        eshard = _ns(mesh, dp, None, None)
+        return (toks, emb), (tshard, eshard)
+    return (toks, None), (tshard, None)

@@ -1,0 +1,133 @@
+"""ISSGD training launcher.
+
+On real hardware this runs the full distributed ISSGD loop on the
+production mesh; on CPU it runs reduced configs end-to-end (the same code
+path, smaller mesh), e.g.:
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --steps 50 --batch 8 --seq 64 --strategy logit_grad
+  PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --steps 300
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.importance import ISConfig
+from repro.core.issgd import ISSGDConfig, init_train_state, make_train_step
+from repro.core.scorer import make_lm_scorer, make_mlp_scorer
+from repro.data import make_svhn_like, make_token_dataset
+from repro.optim import sgd
+
+
+def build_mlp(args):
+    from repro.configs.mlp_svhn import CONFIG, smoke
+    from repro.models.mlp import init_mlp_classifier, per_example_loss
+    cfg = smoke() if args.smoke else CONFIG
+    train, _ = make_svhn_like(jax.random.key(args.seed), n=args.examples,
+                              dim=cfg.input_dim)
+    params = init_mlp_classifier(jax.random.key(args.seed + 1), cfg)
+    pel = lambda p, b: per_example_loss(p, b, cfg)
+    scorer = make_mlp_scorer(cfg, args.strategy)
+    return params, train, pel, scorer
+
+
+def build_lm(args):
+    from repro.configs import get_config, get_smoke_config
+    from repro.models.transformer import init_transformer, per_example_loss
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    train = make_token_dataset(jax.random.key(args.seed), n=args.examples,
+                               seq=args.seq + 1, vocab=cfg.vocab_size)
+    params = init_transformer(jax.random.key(args.seed + 1), cfg)
+    pel = lambda p, b: per_example_loss(p, cfg, b)[0]
+    scorer = make_lm_scorer(cfg, args.strategy)
+    return params, train, pel, scorer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mlp_svhn")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--score-batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--examples", type=int, default=4096)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--mode", default="relaxed",
+                    choices=["relaxed", "exact", "uniform", "fused"])
+    ap.add_argument("--probe-every", type=int, default=8,
+                    help="fused mode: run a coverage probe every K steps")
+    ap.add_argument("--strategy", default="ghost",
+                    choices=["loss", "logit_grad", "ghost", "ghost_rev", "full"])
+    ap.add_argument("--smoothing", type=float, default=1.0)
+    ap.add_argument("--refresh-every", type=int, default=8)
+    ap.add_argument("--staleness-threshold", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args()
+
+    if args.arch == "mlp_svhn":
+        params, train, pel, scorer = build_mlp(args)
+    else:
+        params, train, pel, scorer = build_lm(args)
+
+    fused_score = None
+    if args.mode == "fused":
+        if args.arch == "mlp_svhn":
+            from repro.configs.mlp_svhn import CONFIG, smoke
+            from repro.models.mlp import per_example_loss_and_score
+            _cfg = smoke() if args.smoke else CONFIG
+            fused_score = lambda p, b: per_example_loss_and_score(p, b, _cfg)
+        else:
+            from repro.configs import get_config, get_smoke_config
+            from repro.models.transformer import per_example_loss_and_score
+            _cfg = (get_smoke_config(args.arch) if args.smoke
+                    else get_config(args.arch))
+            fused_score = lambda p, b: per_example_loss_and_score(p, _cfg, b)
+
+    opt = sgd(args.lr)
+    tcfg = ISSGDConfig(
+        batch_size=args.batch, score_batch_size=args.score_batch,
+        refresh_every=args.refresh_every, mode=args.mode,
+        is_cfg=ISConfig(smoothing=args.smoothing,
+                        staleness_threshold=args.staleness_threshold))
+    step = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
+                                   fused_score=fused_score))
+    probe = None
+    if args.mode == "fused":
+        from repro.core.issgd import make_score_step
+        probe = jax.jit(make_score_step(scorer, tcfg, train.size))
+    state = init_train_state(params, opt, train.size, seed=args.seed)
+
+    history = []
+    t0 = time.time()
+    for i in range(args.steps):
+        state, m = step(state, train.arrays)
+        if probe is not None and i % args.probe_every == 0:
+            state = probe(state, train.arrays)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            rec = {"step": i, "loss": float(m.loss),
+                   "grad_norm": float(m.grad_norm),
+                   "trace_ideal": float(m.trace_ideal),
+                   "trace_stale": float(m.trace_stale),
+                   "trace_unif": float(m.trace_unif),
+                   "ess_frac": float(m.ess_frac),
+                   "elapsed_s": round(time.time() - t0, 2)}
+            history.append(rec)
+            print(f"step {i:5d} loss {rec['loss']:.4f} "
+                  f"√TrΣ ideal/stale/unif = {rec['trace_ideal']:.3f}/"
+                  f"{rec['trace_stale']:.3f}/{rec['trace_unif']:.3f} "
+                  f"ess {rec['ess_frac']:.3f}", flush=True)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,288 @@
+"""Attention mixers: GQA (with sliding-window option) and MLA.
+
+Train/prefill paths chunk the query dimension (lax.map over query blocks)
+so the S×S logits matrix is never materialized — the pure-jnp analogue of
+flash attention that lowers on every backend; on TPU the decode path swaps
+in the Pallas flash-decode kernel via the kernel policy.
+
+MLA (multi-head latent attention, MiniCPM3/DeepSeek-V2 style) implements
+both the materialized train path and the *absorbed* decode path where the
+KV cache stores only the compressed latent (kv_lora_rank + rope dims) and
+the query is projected into the latent space — the serving memory win that
+makes MLA interesting.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, Tape, _dense_init, init_rmsnorm, rmsnorm, rope, specs_rmsnorm, tapped_linear
+
+_NEG = -1e30
+
+
+# ===================================================================== GQA
+def init_attn(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(k1, cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": _dense_init(k2, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": _dense_init(k3, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": _dense_init(k4, cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def specs_attn() -> Params:
+    return {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+            "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+
+
+def _causal_window_mask(q_pos, k_pos, window: int):
+    """(..., Q, K) boolean mask: causal, optionally sliding-window."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return m
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, window: int, q_chunk: int):
+    """q:(B,Sq,Hkv,rep,hd) k,v:(B,Sk,Hkv,hd). Returns (B,Sq,Hkv,rep,hd)."""
+    bsz, sq, hkv, rep, hd = q.shape
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, sq)
+    pad = (-sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+    nc = (sq + pad) // q_chunk
+    qs = q.reshape(bsz, nc, q_chunk, hkv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    qps = q_pos.reshape(bsz, nc, q_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one_chunk(args):
+        qc, qp = args  # (B,qc,Hkv,rep,hd), (B,qc)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qc.astype(jnp.float32) * scale,
+                            k.astype(jnp.float32))
+        mask = _causal_window_mask(qp, k_pos, window)  # (B,qc,Sk)
+        logits = jnp.where(mask[:, None, None], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(one_chunk, (qs, qps))  # (nc,B,qc,Hkv,rep,hd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(bsz, sq + pad, hkv, rep, hd)
+    return out[:, :sq]
+
+
+def attn(params: Params, x: jax.Array, cfg: ModelConfig,
+         positions: jax.Array, tape: Optional[Tape] = None,
+         prefix: str = "attn", q_chunk: int = 512,
+         collector: Optional[dict] = None,
+         impl: str = "ref") -> jax.Array:
+    """Full training/prefill GQA self-attention. x: (B,S,D).
+
+    impl="pallas" uses the flash-attention kernel (forward-only — the
+    serving-prefill hot path); "ref" is the chunked-jnp path (training,
+    autodiff-friendly, lowers on every backend).
+    """
+    bsz, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    rep = h // hkv
+
+    q = tapped_linear(x, params["wq"], f"{prefix}.wq", tape)
+    k = tapped_linear(x, params["wk"], f"{prefix}.wk", tape)
+    v = tapped_linear(x, params["wv"], f"{prefix}.wv", tape)
+    q = rope(q.reshape(bsz, s, h, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(bsz, s, hkv, hd), positions, cfg.rope_theta)
+    v = v.reshape(bsz, s, hkv, hd)
+    if collector is not None:  # prefill: roped K and V feed the KV cache
+        collector[f"{prefix}.k"] = k
+        collector[f"{prefix}.v"] = v
+
+    if impl == "pallas":
+        from repro.kernels import ops
+        out = ops.flash_attention(q, k, v, window=cfg.sliding_window)
+        out = out.reshape(bsz, s, h * hd)
+    else:
+        qg = q.reshape(bsz, s, hkv, rep, hd)
+        out = _chunked_attention(qg, k, v, positions, positions,
+                                 cfg.sliding_window, q_chunk)
+        out = out.reshape(bsz, s, h * hd)
+    return tapped_linear(out, params["wo"], f"{prefix}.wo", tape)
+
+
+def attn_decode(params: Params, x: jax.Array, cfg: ModelConfig,
+                k_cache: jax.Array, v_cache: jax.Array,
+                cache_positions: jax.Array, lengths: jax.Array,
+                decode_kernel=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B,D); caches (B,W,Hkv,hd) with absolute
+    positions `cache_positions` (B,W) (supports ring buffers); `lengths`
+    (B,) = number of valid cache slots *including* the new token's slot.
+
+    Returns (out (B,D), k_new, v_new) — cache writing is the caller's job
+    (the serving engine owns the layout).
+    """
+    bsz, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    pos = lengths - 1  # absolute position of the new token... caller overrides
+
+    q = (x @ params["wq"]).reshape(bsz, h, hd)
+    k_new = (x @ params["wk"]).reshape(bsz, hkv, hd)
+    v_new = (x @ params["wv"]).reshape(bsz, hkv, hd)
+    return q, k_new, v_new  # projection only; engine runs the kernel
+
+
+# ===================================================================== MLA
+def init_mla(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    h = cfg.num_heads
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    qr = cfg.q_lora_rank or cfg.d_model
+    p = {
+        "wkv_a": _dense_init(ks[0], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        "kv_norm": init_rmsnorm(cfg.kv_lora_rank, dtype),
+        "wkv_b": _dense_init(ks[1], cfg.kv_lora_rank,
+                             h * (cfg.qk_nope_dim + cfg.v_head_dim), dtype),
+        "wo": _dense_init(ks[2], h * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = _dense_init(ks[3], cfg.d_model, qr, dtype)
+        p["q_norm"] = init_rmsnorm(qr, dtype)
+        p["wq_b"] = _dense_init(ks[4], qr, h * qk_dim, dtype)
+    else:
+        p["wq"] = _dense_init(ks[5], cfg.d_model, h * qk_dim, dtype)
+    return p
+
+
+def specs_mla(cfg: ModelConfig) -> Params:
+    p = {"wkv_a": ("embed", "rank"), "kv_norm": specs_rmsnorm(),
+         "wkv_b": ("rank", "heads"), "wo": ("heads", "embed")}
+    if cfg.q_lora_rank:
+        p["wq_a"] = ("embed", "rank")
+        p["q_norm"] = specs_rmsnorm()
+        p["wq_b"] = ("rank", "heads")
+    else:
+        p["wq"] = ("embed", "heads")
+    return p
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions, tape, prefix):
+    """Shared projections. Returns q_nope,q_rope,k_nope,k_rope,v, latent."""
+    bsz, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    if cfg.q_lora_rank:
+        qa = tapped_linear(x, params["wq_a"], f"{prefix}.wq_a", tape)
+        qa = rmsnorm(params["q_norm"], qa, cfg.norm_eps)
+        q = tapped_linear(qa, params["wq_b"], f"{prefix}.wq_b", tape)
+    else:
+        q = tapped_linear(x, params["wq"], f"{prefix}.wq", tape)
+    q = q.reshape(bsz, s, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = tapped_linear(x, params["wkv_a"], f"{prefix}.wkv_a", tape)
+    latent, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    latent = rmsnorm(params["kv_norm"], latent, cfg.norm_eps)
+    k_rope = rope(k_rope[..., None, :], positions, cfg.rope_theta)  # (B,S,1,r)
+
+    kv = tapped_linear(latent, params["wkv_b"], f"{prefix}.wkv_b", tape)
+    kv = kv.reshape(bsz, s, h, nope + vdim)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    return q_nope, q_rope, k_nope, k_rope, v, latent
+
+
+def mla(params: Params, x: jax.Array, cfg: ModelConfig,
+        positions: jax.Array, tape: Optional[Tape] = None,
+        prefix: str = "attn", q_chunk: int = 512,
+        collector: Optional[dict] = None) -> jax.Array:
+    """Materialized MLA for train/prefill. x: (B,S,D)."""
+    bsz, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope, k_nope, k_rope, v, latent = _mla_qkv(
+        params, x, cfg, positions, tape, prefix)
+    if collector is not None:  # prefill: the *compressed* MLA cache
+        collector[f"{prefix}.latent"] = latent
+        collector[f"{prefix}.rope"] = k_rope[:, :, 0, :]
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+
+    q_chunk = min(q_chunk, s)
+    pad = (-s) % q_chunk
+    qn = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qp = jnp.pad(positions, ((0, 0), (0, pad)))
+    nc = (s + pad) // q_chunk
+
+    @jax.checkpoint
+    def one_chunk(args):
+        qn_c, qr_c, qp_c = args
+        lg = jnp.einsum("bqhd,bkhd->bhqk", qn_c.astype(jnp.float32),
+                        k_nope.astype(jnp.float32))
+        lg += jnp.einsum("bqhd,bkxd->bhqk", qr_c.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+        lg *= scale
+        mask = _causal_window_mask(qp_c, positions, 0)
+        lg = jnp.where(mask[:, None], lg, _NEG)
+        p = jax.nn.softmax(lg, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
+
+    def split(a, i):
+        return a.reshape(bsz, nc, q_chunk, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    outs = jax.lax.map(one_chunk, (split(qn, 0), split(qr, 1),
+                                   qp.reshape(bsz, nc, q_chunk).transpose(1, 0, 2)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(bsz, s + pad, h, cfg.v_head_dim)[:, :s]
+    out = out.reshape(bsz, s, h * cfg.v_head_dim)
+    return tapped_linear(out, params["wo"], f"{prefix}.wo", tape)
+
+
+def mla_decode(params: Params, x: jax.Array, cfg: ModelConfig,
+               latent_cache: jax.Array, rope_cache: jax.Array,
+               position: jax.Array, lengths: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed one-token MLA decode over the *compressed* cache.
+
+    latent_cache: (B, W, kv_lora), rope_cache: (B, W, qk_rope_dim);
+    position: (B,) absolute position of the new token; lengths: (B,) valid
+    slots including the new one.  Returns (out (B,D), latent_new, rope_new).
+    """
+    bsz, _ = x.shape
+    h = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = (nope + rdim) ** -0.5
+
+    xs = x[:, None, :]  # (B,1,D)
+    pos = position[:, None]
+    q_nope, q_rope, _, k_rope_new, _, latent_new = _mla_qkv(
+        params, xs, cfg, pos, None, "decode")
+    # absorb W_kv_b's key half into the query:  q_c = q_nope @ W_k^T (per head)
+    wkv_b = params["wkv_b"].reshape(cfg.kv_lora_rank, h, nope + vdim)
+    w_k = wkv_b[..., :nope]              # (r, h, nope)
+    w_v = wkv_b[..., nope:]              # (r, h, vdim)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                     w_k.astype(jnp.float32))        # (B,h,r)
+
+    # write the new token into the cache view (caller persists it)
+    slot = (lengths - 1)
+    lc = latent_cache.at[jnp.arange(bsz), slot].set(latent_new[:, 0].astype(latent_cache.dtype))
+    rc = rope_cache.at[jnp.arange(bsz), slot].set(k_rope_new[:, 0, 0].astype(rope_cache.dtype))
+
+    lg = jnp.einsum("bhr,bkr->bhk", q_c, lc.astype(jnp.float32))
+    lg += jnp.einsum("bhd,bkd->bhk", q_rope[:, 0].astype(jnp.float32),
+                     rc.astype(jnp.float32))
+    lg *= scale
+    mask = jnp.arange(lc.shape[1])[None] < lengths[:, None]
+    lg = jnp.where(mask[:, None], lg, _NEG)
+    p = jax.nn.softmax(lg, axis=-1)
+    ctx = jnp.einsum("bhk,bkr->bhr", p, lc.astype(jnp.float32))   # (B,h,r)
+    out_h = jnp.einsum("bhr,rhd->bhd", ctx, w_v.astype(jnp.float32))  # (B,h,v)
+    out = out_h.reshape(bsz, h * vdim).astype(x.dtype) @ params["wo"]
+    return out, latent_new[:, 0], k_rope_new[:, 0, 0]

@@ -1,0 +1,158 @@
+"""Shared neural-net layers: plain-pytree params, explicit init/apply/specs.
+
+Conventions
+-----------
+* ``init_*(key, cfg, ...) -> params``  nested dicts of jnp arrays.
+* ``specs_*(cfg) -> same tree`` of *logical axis* tuples (strings) that
+  ``repro.dist.sharding`` maps onto the production mesh.
+* Ghost-tape protocol: layers route every shared linear through
+  :func:`tapped_linear`.  When a ``Tape`` is threaded, the layer input is
+  recorded and a per-call "tap" (a zeros array added to the output) is
+  injected so ∂L/∂tap recovers dL/dY for the ghost-norm scorer without
+  touching parameter gradients.  With ``tape=None`` this is a plain matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+# ---------------------------------------------------------------- ghost tape
+@dataclasses.dataclass
+class Tape:
+    """Mutable trace-time container for ghost scoring (see core/scorer.py)."""
+    taps: Optional[dict] = None         # name -> array to ADD at linear output
+    records: Optional[dict] = None      # name -> linear INPUT (set if not None)
+    tap_shapes: Optional[dict] = None   # name -> ShapeDtypeStruct (collect mode)
+
+    def linear(self, name: str, x: jax.Array, y: jax.Array) -> jax.Array:
+        if self.records is not None:
+            self.records[name] = x
+        if self.tap_shapes is not None:
+            self.tap_shapes[name] = jax.ShapeDtypeStruct(y.shape, jnp.float32)
+        if self.taps is not None and name in self.taps:
+            y = y + self.taps[name].astype(y.dtype)
+        return y
+
+
+def tapped_linear(x: jax.Array, w: jax.Array, name: str,
+                  tape: Optional[Tape]) -> jax.Array:
+    """y = x @ w with ghost-tape routing. x: (..., din), w: (din, dout)."""
+    y = jnp.einsum("...i,io->...o", x, w)
+    if tape is not None:
+        y = tape.linear(name, x, y)
+    return y
+
+
+# ------------------------------------------------------------------- inits
+def _dense_init(key, din, dout, dtype, scale: float | None = None):
+    scale = scale if scale is not None else din ** -0.5
+    return (jax.random.normal(key, (din, dout), jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def specs_rmsnorm() -> Params:
+    return {"scale": ()}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) or (..., H, hd) with positions broadcastable."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # add head axis
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------- activation
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": _dense_init(k1, cfg.d_model, cfg.d_ff, dtype),
+        "w_gate": _dense_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        "w_out": _dense_init(k3, cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def specs_mlp() -> Params:
+    return {
+        "w_in": ("embed", "ffn"),
+        "w_gate": ("embed", "ffn"),
+        "w_out": ("ffn", "embed"),
+    }
+
+
+def mlp(params: Params, x: jax.Array, cfg: ModelConfig,
+        tape: Optional[Tape] = None, prefix: str = "mlp") -> jax.Array:
+    act = activation(cfg.act)
+    h_in = tapped_linear(x, params["w_in"], f"{prefix}.w_in", tape)
+    h_gate = tapped_linear(x, params["w_gate"], f"{prefix}.w_gate", tape)
+    h = act(h_gate) * h_in
+    return tapped_linear(h, params["w_out"], f"{prefix}.w_out", tape)
+
+
+# --------------------------------------------------------------- embeddings
+def init_embed(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tokens": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def specs_embed(cfg: ModelConfig) -> Params:
+    p = {"tokens": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("embed", "vocab")
+    return p
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return params["tokens"][tokens]
+
+
+def unembed(params: Params, h: jax.Array, cfg: ModelConfig,
+            tape: Optional[Tape] = None) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", h, params["tokens"])
+        if tape is not None:
+            logits = tape.linear("unembed", h, logits)
+    else:
+        logits = tapped_linear(h, params["unembed"], "unembed", tape)
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits

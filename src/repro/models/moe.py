@@ -1,0 +1,109 @@
+"""Mixture-of-experts feed-forward with sort-based (megablocks-style) dispatch.
+
+TPU adaptation: instead of the dense one-hot dispatch einsum (O(T·E·C)
+memory) we sort token-replicas by expert id, place them into a
+capacity-bounded (E, C, d) buffer with a single scatter, run the grouped
+SwiGLU einsum on the MXU, and gather/combine back.  Tokens beyond capacity
+are dropped (contribute zero), standard practice with capacity_factor ≥ 1.25.
+
+Expert weights carry logical axes ("expert", "embed", "ffn") so storage is
+FSDP over data and tensor-parallel over model; the scatter/gather pair is
+what XLA turns into all-to-alls when the token and expert shardings differ.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, Tape, _dense_init, activation, tapped_linear
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array          # load-balance loss (Switch-style)
+    dropped_frac: jax.Array      # monitoring
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    scale = d ** -0.5
+    return {
+        "router": _dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_in": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_gate": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * (f ** -0.5)).astype(dtype),
+    }
+
+
+def specs_moe() -> Params:
+    return {
+        "router": ("embed", None),
+        "w_in": ("expert", "embed", "ffn"),
+        "w_gate": ("expert", "embed", "ffn"),
+        "w_out": ("expert", "ffn", "embed"),
+    }
+
+
+def moe(params: Params, x: jax.Array, cfg: ModelConfig,
+        tape: Optional[Tape] = None, prefix: str = "moe",
+        dropless: bool = False) -> MoEOut:
+    """x: (B,S,D) → MoEOut with y: (B,S,D).
+
+    dropless=True sets capacity = all token replicas (exact, used at decode
+    where T is tiny); training uses the capacity factor (tokens past
+    capacity are dropped, standard for capacity-based MoE).
+    """
+    bsz, s, d = x.shape
+    t = bsz * s
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    act = activation(cfg.act)
+
+    xf = x.reshape(t, d)
+    logits = tapped_linear(xf, params["router"].astype(x.dtype),
+                           f"{prefix}.router", tape).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T,E)
+    gates, eidx = jax.lax.top_k(probs, k)                      # (T,k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch Transformer eq. 4-6)
+    me = jnp.mean(probs, axis=0)                               # mean router prob
+    one_hot_top = jax.nn.one_hot(eidx[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top, axis=0)                         # top-1 load
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    # ---- sort-based dispatch
+    tk = t * k
+    if dropless:
+        cap = tk
+    else:
+        cap = max(int(cfg.moe_capacity_factor * tk / e + 0.5), 1)
+    eflat = eidx.reshape(tk)
+    token_of = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(eflat)                                 # stable
+    sorted_e = eflat[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(tk) - first
+    keep = pos_in_e < cap
+    dst = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # OOB → dropped
+
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[dst].set(xf[token_of[order]], mode="drop")
+    buf = buf.reshape(e, cap, d)
+
+    h_in = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    y_buf = jnp.einsum("ecf,efd->ecd", act(h_gate) * h_in, params["w_out"])
+
+    y_sorted = jnp.take(y_buf.reshape(e * cap, d), dst, axis=0,
+                        mode="fill", fill_value=0)             # (Tk, d)
+    inv = jnp.argsort(order)
+    y_flat = y_sorted[inv].reshape(t, k, d)
+    y = jnp.sum(y_flat * gates[..., None].astype(x.dtype), axis=1)
+
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return MoEOut(y.reshape(bsz, s, d), aux, dropped)

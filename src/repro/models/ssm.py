@@ -1,0 +1,136 @@
+"""Mamba-1 block (falcon-mamba / jamba mixer).
+
+Channel dimension d_inner is tensor-parallel over the `model` mesh axis
+(the scan is independent per channel); the sequence recurrence runs through
+either the chunked Pallas kernel (TPU) or the pure-jnp sequential oracle
+(CPU validation / dry-run lowering) — selected by `mode`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, Tape, _dense_init, tapped_linear
+
+
+class MambaState(NamedTuple):
+    """Decode-time recurrent state (the SSM's 'KV cache')."""
+    conv: jax.Array   # (B, conv_width-1, d_inner) trailing inputs
+    h: jax.Array      # (B, d_inner, d_state)
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    d, di = cfg.d_model, cfg.resolved_d_inner
+    ds, dtr, w = cfg.ssm_state, cfg.resolved_dt_rank, cfg.conv_width
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": _dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (w, di), jnp.float32) * (w ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _dense_init(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj": _dense_init(ks[3], dtr, di, jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of uniform dt init
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[5], di, d, dtype),
+    }
+
+
+def specs_mamba() -> Params:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"),
+        "dt_bias": ("inner",),
+        "a_log": ("inner", None),
+        "d_skip": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. x: (B,S,di), w: (W,di)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    # unrolled taps (width is 4): avoids conv lowering corner cases
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(width))
+    return y + b[None, None]
+
+
+def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
+          tape: Optional[Tape] = None, prefix: str = "mamba",
+          mode: str = "ref", collector: Optional[dict] = None) -> jax.Array:
+    """Full-sequence mamba mixer. x: (B,S,D) → (B,S,D)."""
+    di, ds, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+
+    xz = tapped_linear(x, params["in_proj"], f"{prefix}.in_proj", tape)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
+
+    proj = tapped_linear(x_c, params["x_proj"], f"{prefix}.x_proj", tape)
+    dt_r = proj[..., :dtr]
+    b_mat = proj[..., dtr:dtr + ds]
+    c_mat = proj[..., dtr + ds:]
+    delta = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    if collector is not None:  # prefill: recurrent state for decode
+        y, h_final = ref.selective_scan_ref(x_c, delta, a, b_mat, c_mat,
+                                            params["d_skip"], return_state=True)
+        w = params["conv_w"].shape[0]
+        collector[f"{prefix}.conv"] = x_in[:, -(w - 1):, :]
+        collector[f"{prefix}.h"] = h_final
+    elif mode == "pallas":
+        y = ops.selective_scan(x_c, delta.astype(x_c.dtype), a, b_mat, c_mat,
+                               params["d_skip"])
+    else:
+        y = ref.selective_scan_ref(x_c, delta, a, b_mat, c_mat,
+                                   params["d_skip"],
+                                   scan_dtype=jnp.dtype(cfg.ssm_scan_dtype),
+                                   unroll=cfg.ssm_scan_unroll)
+
+    y = y * jax.nn.silu(z)
+    return tapped_linear(y, params["out_proj"], f"{prefix}.out_proj", tape)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    di = cfg.resolved_d_inner
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+        h=jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba_decode(params: Params, x: jax.Array, cfg: ModelConfig,
+                 state: MambaState) -> tuple[jax.Array, MambaState]:
+    """One-token decode. x: (B,D) → (B,D), updated state."""
+    di, ds, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    w = params["conv_w"].shape[0]
+
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                     # (B,di)
+    window = jnp.concatenate([state.conv, x_in[:, None]], axis=1)  # (B,W,di)
+    x_c = jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"]
+    x_c = jax.nn.silu(x_c)
+
+    proj = x_c @ params["x_proj"]
+    dt_r, b_t, c_t = proj[..., :dtr], proj[..., dtr:dtr + ds], proj[..., dtr + ds:]
+    delta = jax.nn.softplus(
+        dt_r.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    h, y = ref.selective_scan_step_ref(state.h, x_c, delta, a, b_t, c_t,
+                                       params["d_skip"])
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, MambaState(conv=window[:, 1:], h=h)

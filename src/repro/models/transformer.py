@@ -1,0 +1,352 @@
+"""Decoder stack: scan-over-periods, remat, ghost-tape threading, decode.
+
+The depth is organized as `num_periods` repetitions of a short layer
+*period* (see ModelConfig.layer_specs) so heterogeneous stacks (jamba's
+mamba/attention interleave, MoE-every-other-layer) still compile to one
+rolled lax.scan.  Ghost taps enter as scan xs (stacked over periods) and
+activation records leave as scan ys, which is what lets the scorer compute
+exact per-example gradient norms through the scanned stack.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (Params, Tape, embed, init_embed, init_mlp,
+                                 init_rmsnorm, mlp, rmsnorm, specs_embed,
+                                 specs_mlp, specs_rmsnorm, unembed)
+
+
+class Aux(NamedTuple):
+    aux_loss: jax.Array                 # MoE load-balance loss (0 for dense)
+    records: Optional[dict] = None      # name -> stacked activations (P,...)
+    cache: Optional[dict] = None        # name -> stacked decode caches (P,...)
+
+
+# ------------------------------------------------------------------- init
+def _init_layer(key, cfg: ModelConfig, spec) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {
+        "ln1": init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+    if spec.mixer == "attn":
+        p["mixer"] = (attn_mod.init_mla(k1, cfg) if cfg.attention == "mla"
+                      else attn_mod.init_attn(k1, cfg))
+    else:
+        p["mixer"] = ssm_mod.init_mamba(k1, cfg)
+    if cfg.d_ff > 0:  # pure-SSM stacks (falcon-mamba) have no FF sub-layer
+        p["ln2"] = init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype))
+        p["ff"] = (moe_mod.init_moe(k2, cfg) if spec.ff == "moe"
+                   else init_mlp(k2, cfg))
+    return p
+
+
+def _layer_specs_tree(cfg: ModelConfig, spec) -> Params:
+    p: dict[str, Any] = {"ln1": specs_rmsnorm()}
+    if spec.mixer == "attn":
+        p["mixer"] = (attn_mod.specs_mla(cfg) if cfg.attention == "mla"
+                      else attn_mod.specs_attn())
+    else:
+        p["mixer"] = ssm_mod.specs_mamba()
+    if cfg.d_ff > 0:
+        p["ln2"] = specs_rmsnorm()
+        p["ff"] = moe_mod.specs_moe() if spec.ff == "moe" else specs_mlp()
+    return p
+
+
+def init_transformer(key, cfg: ModelConfig) -> Params:
+    specs = cfg.layer_specs()
+    k_embed, k_layers, k_final = jax.random.split(key, 3)
+
+    def init_period(k):
+        ks = jax.random.split(k, len(specs))
+        return {f"l{i}": _init_layer(ks[i], cfg, s) for i, s in enumerate(specs)}
+
+    period_keys = jax.random.split(k_layers, cfg.num_periods)
+    layers = jax.vmap(init_period)(period_keys)  # leading period axis
+
+    return {
+        "embed": init_embed(k_embed, cfg),
+        "layers": layers,
+        "final_norm": init_rmsnorm(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+
+
+def transformer_specs(cfg: ModelConfig) -> Params:
+    """Logical-axis tree matching init_transformer (period axis is first,
+    expressed as a leading None in repro.dist.sharding)."""
+    specs = cfg.layer_specs()
+    return {
+        "embed": specs_embed(cfg),
+        "layers": {f"l{i}": _layer_specs_tree(cfg, s)
+                   for i, s in enumerate(specs)},
+        "final_norm": specs_rmsnorm(),
+    }
+
+
+# ---------------------------------------------------------------- forward
+def _apply_layer(lp: Params, h: jax.Array, cfg: ModelConfig, spec,
+                 positions: jax.Array, tape: Optional[Tape], prefix: str,
+                 ssm_mode: str,
+                 collector: Optional[dict] = None,
+                 attn_impl: str = "ref") -> tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    if spec.mixer == "attn":
+        if cfg.attention == "mla":
+            mix = attn_mod.mla(lp["mixer"], hn, cfg, positions, tape,
+                               prefix=f"{prefix}.attn", collector=collector)
+        else:
+            mix = attn_mod.attn(lp["mixer"], hn, cfg, positions, tape,
+                                prefix=f"{prefix}.attn", collector=collector,
+                                impl=attn_impl, q_chunk=cfg.attn_chunk)
+    else:
+        mix = ssm_mod.mamba(lp["mixer"], hn, cfg, tape,
+                            prefix=f"{prefix}.mamba", mode=ssm_mode,
+                            collector=collector)
+    h = h + mix
+    if cfg.d_ff == 0:
+        return h, aux
+    hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    if spec.ff == "moe":
+        out = moe_mod.moe(lp["ff"], hn, cfg, tape, prefix=f"{prefix}.moe")
+        ff_y, aux = out.y, out.aux_loss
+    else:
+        ff_y = mlp(lp["ff"], hn, cfg, tape, prefix=f"{prefix}.mlp")
+    return h + ff_y, aux
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                      # (B, S_text) int32
+    *,
+    embeds: Optional[jax.Array] = None,     # (B, N_front, D) frontend stub
+    positions: Optional[jax.Array] = None,
+    taps: Optional[dict] = None,            # name -> (P, ...) stacked taps
+    collect: bool = False,
+    collect_cache: bool = False,
+    ssm_mode: str = "ref",
+    attn_impl: str = "ref",                 # "pallas" = flash kernel (fwd-only)
+    return_hidden: bool = False,            # skip unembed, return final h
+) -> tuple[jax.Array, Aux]:
+    """Returns logits (B, S_total, vocab) and Aux.
+
+    collect_cache=True additionally returns, in Aux.cache, the per-layer
+    decode caches (roped K/V, MLA latents, mamba states) stacked over
+    periods — the prefill path of the serving engine.
+    """
+    from repro.dist.context import constrain_batch_dim as _cbd
+    specs = cfg.layer_specs()
+    h = embed(params["embed"], tokens, cfg)
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    h = _cbd(h)
+    bsz, s, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+
+    # the unembed tap lives outside the scan (no period axis)
+    head_tap = None
+    if taps is not None and "unembed" in taps:
+        taps = dict(taps)
+        head_tap = taps.pop("unembed")
+
+    from repro.dist.context import constrain_batch_dim
+
+    def period_body(carry, per):
+        h, aux_acc = carry
+        h = constrain_batch_dim(h)
+        pp, ptaps = per
+        tape = Tape(taps=ptaps, records={} if collect else None)
+        cache = {} if collect_cache else None
+        for i, spec in enumerate(specs):
+            h, aux = _apply_layer(pp[f"l{i}"], h, cfg, spec, positions,
+                                  tape, f"l{i}", ssm_mode, collector=cache,
+                                  attn_impl=attn_impl)
+            aux_acc = aux_acc + aux
+        ys = (tape.records if collect else 0,
+              cache if collect_cache else 0)
+        return (h, aux_acc), ys
+
+    if cfg.remat:
+        period_body = jax.checkpoint(period_body)
+
+    if taps is None:
+        # feed dummy zero-leaf xs so the scan signature is stable
+        taps_xs = jnp.zeros((cfg.num_periods,), jnp.float32)
+        per_xs = (params["layers"], taps_xs)
+
+        def body(carry, per):
+            pp, _ = per
+            return period_body(carry, (pp, None))
+    else:
+        per_xs = (params["layers"], taps)
+        body = period_body
+
+    (h, aux_loss), (records, cache) = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), per_xs)
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if return_hidden:
+        return h, Aux(aux_loss=aux_loss,
+                      records=records if collect else None,
+                      cache=cache if collect_cache else None)
+    head_tape = Tape(taps={"unembed": head_tap} if head_tap is not None else None,
+                     records={} if collect else None)
+    logits = unembed(params["embed"], h, cfg, tape=head_tape)
+    if collect:
+        records = dict(records)
+        records.update(head_tape.records)
+    return logits, Aux(aux_loss=aux_loss,
+                       records=records if collect else None,
+                       cache=cache if collect_cache else None)
+
+
+def tap_structure(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStructs (with the leading period axis) for every tap."""
+    specs = cfg.layer_specs()
+    h = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    positions = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+    # shapes only — use eval_shape with abstract params from init structure
+    layer0 = jax.eval_shape(
+        lambda k: {f"l{i}": _init_layer(k, cfg, s)
+                   for i, s in enumerate(specs)}, jax.random.key(0))
+
+    tap_shapes: dict = {}
+
+    def run(h, positions, layers0):
+        tape = Tape(tap_shapes=tap_shapes)
+        hh = h
+        for i, spec in enumerate(specs):
+            hh, _ = _apply_layer(layers0[f"l{i}"], hh, cfg, spec, positions,
+                                 tape, f"l{i}", "ref")
+        return hh
+
+    jax.eval_shape(run, h, positions, layer0)
+    out = {
+        name: jax.ShapeDtypeStruct((cfg.num_periods,) + sds.shape, sds.dtype)
+        for name, sds in tap_shapes.items()
+    }
+    out["unembed"] = jax.ShapeDtypeStruct((batch, seq, cfg.vocab_size),
+                                          jnp.float32)
+    return out
+
+
+# ------------------------------------------------------------------- loss
+def lm_head_metrics(params, cfg: ModelConfig, h: jax.Array,
+                    targets: jax.Array,
+                    mask: Optional[jax.Array] = None):
+    """Chunked unembed + CE: per-example (mean_nll, logit_grad_norm).
+
+    Never materializes the full (B,S,V) logits — each sequence chunk is
+    projected, reduced, and rematerialized in the backward pass
+    (jax.checkpoint).  This is what lets the 100k+-vocab configs train.
+
+    logit_grad_norm is ||∂L_n/∂logits||₂ of the *mean* per-example loss —
+    the forward-only scoring proxy (see core/scorer.py).
+    """
+    bsz, s, _ = h.shape
+    chunk = cfg.loss_chunk if cfg.loss_chunk > 0 else s
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None
+                       else jnp.ones((bsz, s), jnp.float32),
+                       ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((bsz, s), jnp.float32)
+    nc = (s + pad) // chunk
+
+    def split(a):
+        return a.reshape(bsz, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def one(args):
+        h_c, t_c, m_c = args
+        logits = unembed(params["embed"], h_c, cfg).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, t_c[..., None], -1)[..., 0]
+        p = jnp.exp(lp)
+        p_y = jnp.take_along_axis(p, t_c[..., None], -1)[..., 0]
+        gsq = jnp.sum(jnp.square(p), -1) - 2.0 * p_y + 1.0
+        return (jnp.sum(nll * m_c, -1), jnp.sum(gsq * m_c, -1))
+
+    nll_c, gsq_c = jax.lax.map(one, (split(h), split(targets), split(mask)))
+    count = jnp.maximum(jnp.sum(mask, -1), 1.0)
+    mean_nll = jnp.sum(nll_c, 0) / count
+    grad_norm = jnp.sqrt(jnp.sum(gsq_c, 0)) / count
+    return mean_nll, grad_norm
+
+
+def per_example_loss(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    taps: Optional[dict] = None,
+    collect: bool = False,
+    ssm_mode: str = "ref",
+) -> tuple[jax.Array, Aux]:
+    """Mean next-token CE per example. batch: {tokens (B,S), [embeds]}.
+
+    Frontend embeds (if any) are prepended; loss is computed on the token
+    region only.
+    """
+    tokens = batch["tokens"]
+    embeds = batch.get("embeds")
+    n_front = embeds.shape[1] if embeds is not None else 0
+    targets = tokens[:, 1:]
+    if cfg.loss_chunk > 0 and taps is None:
+        h, aux = forward(params, cfg, tokens[:, :-1], embeds=embeds,
+                         collect=collect, ssm_mode=ssm_mode,
+                         return_hidden=True)
+        h = h[:, n_front:]
+        mask = batch.get("mask")
+        mean_nll, _ = lm_head_metrics(params, cfg, h, targets,
+                                      None if mask is None else
+                                      mask[:, 1:].astype(jnp.float32))
+        return mean_nll, aux
+    logits, aux = forward(params, cfg, tokens[:, :-1], embeds=embeds,
+                          taps=taps, collect=collect, ssm_mode=ssm_mode)
+    logits = logits[:, n_front:]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        loss = jnp.sum(nll * m, axis=-1) / jnp.maximum(jnp.sum(m, -1), 1.0)
+    else:
+        loss = jnp.mean(nll, axis=-1)
+    return loss, aux
+
+
+def per_example_loss_and_score(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    ssm_mode: str = "ref",
+) -> tuple[jax.Array, jax.Array]:
+    """Fused-mode objective: (losses (B,), logit-grad scores (B,)) from a
+    SINGLE forward pass — the scores the paper's workers compute in a
+    separate pass come for free from the head computation (see
+    core/issgd.py mode='fused')."""
+    tokens = batch["tokens"]
+    embeds = batch.get("embeds")
+    n_front = embeds.shape[1] if embeds is not None else 0
+    h, _ = forward(params, cfg, tokens[:, :-1], embeds=embeds,
+                   ssm_mode=ssm_mode, return_hidden=True)
+    mask = batch.get("mask")
+    mean_nll, grad_norm = lm_head_metrics(
+        params, cfg, h[:, n_front:], tokens[:, 1:],
+        None if mask is None else mask[:, 1:].astype(jnp.float32))
+    return mean_nll, grad_norm

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adam, apply_updates, sgd,
+                                    global_norm, clip_by_global_norm,
+                                    cosine_schedule, warmup_cosine)
+
+__all__ = ["Optimizer", "adam", "sgd", "apply_updates", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "warmup_cosine"]

@@ -1,0 +1,121 @@
+"""Minimal optimizer library (no optax in this environment).
+
+Optimizers are (init, update) pairs over plain pytrees.  State trees mirror
+the param tree, so the ZeRO sharding rules of repro.dist apply to them
+unchanged (the roofline perf pass relies on this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), n
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
+    """Plain SGD (the paper's optimizer), optional heavy-ball momentum."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _tree_zeros_like(params, jnp.float32)
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+            params, new_m)
+        return new_params, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with f32 moments (ZeRO-shardable alongside the params)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": _tree_zeros_like(params, jnp.float32),
+                "v": _tree_zeros_like(params, jnp.float32)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, total_steps - warmup, final_frac)
+    def fn(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return fn

@@ -1,0 +1,6 @@
+from repro.serving.engine import (ServeState, init_serve_state, prefill,
+                                  decode_step, generate)
+from repro.serving.sharded_decode import sharded_decode_attention
+
+__all__ = ["ServeState", "init_serve_state", "prefill", "decode_step",
+           "generate", "sharded_decode_attention"]

@@ -1,0 +1,114 @@
+"""Continuous batching: slot-based request scheduling over the decode engine.
+
+Production serving rarely sees aligned request batches; this layer keeps a
+fixed pool of `num_slots` cache slots, prefills arriving requests into
+free slots (one dynamic_update_slice per cache buffer), decodes all active
+slots in lock-step, and evicts on EOS/max-tokens.  Per-slot `lengths`
+already drive the attention masking, so slots at different positions
+coexist in one batched decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.serving.engine import (ServeState, decode_step, init_serve_state,
+                                  prefill)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jax.Array            # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1             # -1 = never
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class ContinuousBatcher:
+    """Drive a params+config pair as a multi-tenant decode server."""
+
+    def __init__(self, params, cfg: ModelConfig, num_slots: int,
+                 max_len: int, decode_kernel: str = "ref",
+                 sample: Optional[Callable] = None):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.state = init_serve_state(cfg, batch=num_slots, max_len=max_len)
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self._next_tok = jnp.zeros((num_slots,), jnp.int32)
+        self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
+        self._decode = jax.jit(
+            lambda p, t, s: decode_step(p, cfg, t, s,
+                                        decode_kernel=decode_kernel))
+        self._prefill = jax.jit(
+            lambda p, t: prefill(p, cfg, t, max_len=max_len))
+        self.finished: dict[int, list[int]] = {}
+
+    # ------------------------------------------------------------- admission
+    def try_insert(self, req: Request) -> bool:
+        """Prefill `req` into a free slot. Returns False if none free."""
+        slot_id = next((i for i, s in enumerate(self.slots) if s.free), None)
+        if slot_id is None:
+            return False
+        logits, st1 = self._prefill(self.params, req.prompt[None])
+        # splice the single-sequence caches/length into the batch state
+        caches = dict(self.state.caches)
+        for name, buf in caches.items():
+            caches[name] = buf.at[:, slot_id].set(
+                st1.caches[name][:, 0].astype(buf.dtype))
+        lengths = self.state.lengths.at[slot_id].set(st1.lengths[0])
+        self.state = ServeState(caches=caches, lengths=lengths)
+        tok = self.sample(logits)[0].astype(jnp.int32)
+        self._next_tok = self._next_tok.at[slot_id].set(tok)
+        self.slots[slot_id] = _Slot(request=req, generated=[int(tok)])
+        return True
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> int:
+        """One lock-step decode over all slots. Returns #active slots."""
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        if not active:
+            return 0
+        logits, self.state = self._decode(self.params, self._next_tok,
+                                          self.state)
+        toks = self.sample(logits).astype(jnp.int32)
+        self._next_tok = toks
+        for i in active:
+            slot = self.slots[i]
+            tok = int(toks[i])
+            slot.generated.append(tok)
+            done = (len(slot.generated) >= slot.request.max_new_tokens or
+                    tok == slot.request.eos_id)
+            if done:
+                self.finished[slot.request.uid] = slot.generated
+                self.slots[i] = _Slot()
+                # freeze the freed slot (its cache entries are dead weight
+                # until the next insert overwrites them)
+                self.state = self.state._replace(
+                    lengths=self.state.lengths.at[i].set(0))
+        return len([s for s in self.slots if not s.free])
+
+    def run(self, requests: list[Request], max_steps: int = 10_000) -> dict:
+        """Serve a request list to completion (greedy admission)."""
+        pending = list(requests)
+        for _ in range(max_steps):
+            while pending and self.try_insert(pending[0]):
+                pending.pop(0)
+            if self.step() == 0 and not pending:
+                break
+        return self.finished

@@ -1,0 +1,214 @@
+"""Batched serving engine: prefill + one-token decode over layer caches.
+
+Cache layout (everything carries a leading period axis P so the decode step
+scans over periods exactly like training does):
+
+  GQA   k/v     (P, B, W, Hkv, hd)   W = sliding window (ring) or max_len
+  MLA   latent  (P, B, W, kv_lora)   the *compressed* cache (absorbed decode)
+        rope    (P, B, W, qk_rope)
+  Mamba conv    (P, B, conv_w-1, d_inner)   constant-size recurrent state
+        h       (P, B, d_inner, d_state)
+
+Sliding-window caches are ring buffers: slot = position mod W.  RoPE is
+applied at write time with absolute positions, so ring reordering is
+harmless (softmax is permutation-invariant; validity is tracked by
+`lengths` alone because a full ring holds exactly the last W tokens).
+
+`decode_kernel="pallas"` routes GQA cache attention through the
+flash-decode Pallas kernel; "ref" uses the jnp oracle (CPU / dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import embed, mlp, rmsnorm, rope, unembed
+from repro.models.transformer import forward
+
+
+class ServeState(NamedTuple):
+    caches: dict[str, jax.Array]   # name -> (P, ...) cache arrays
+    lengths: jax.Array             # (B,) absolute tokens processed
+
+
+def _window(cfg: ModelConfig, max_len: int) -> int:
+    return min(cfg.sliding_window, max_len) if cfg.sliding_window > 0 else max_len
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStructs of every cache buffer (used by init and dry-run)."""
+    p = cfg.num_periods
+    w = _window(cfg, max_len)
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    for i, spec in enumerate(cfg.layer_specs()):
+        if spec.mixer == "attn":
+            if cfg.attention == "mla":
+                out[f"l{i}.attn.latent"] = jax.ShapeDtypeStruct(
+                    (p, batch, max_len, cfg.kv_lora_rank), dtype)
+                out[f"l{i}.attn.rope"] = jax.ShapeDtypeStruct(
+                    (p, batch, max_len, cfg.qk_rope_dim), dtype)
+            else:
+                kv = (p, batch, w, cfg.num_kv_heads, hd)
+                out[f"l{i}.attn.k"] = jax.ShapeDtypeStruct(kv, dtype)
+                out[f"l{i}.attn.v"] = jax.ShapeDtypeStruct(kv, dtype)
+        else:
+            di = cfg.resolved_d_inner
+            out[f"l{i}.mamba.conv"] = jax.ShapeDtypeStruct(
+                (p, batch, cfg.conv_width - 1, di), dtype)
+            out[f"l{i}.mamba.h"] = jax.ShapeDtypeStruct(
+                (p, batch, di, cfg.ssm_state), jnp.float32)
+    return out
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int) -> ServeState:
+    caches = {k: jnp.zeros(v.shape, v.dtype)
+              for k, v in cache_shapes(cfg, batch, max_len).items()}
+    return ServeState(caches=caches, lengths=jnp.zeros((batch,), jnp.int32))
+
+
+# ------------------------------------------------------------------ decode
+def _gqa_decode(lp, hn, cfg: ModelConfig, k_cache, v_cache, pos, window,
+                decode_kernel: str):
+    """hn: (B,D); caches (B,W,Hkv,hd); pos: (B,) absolute position."""
+    bsz = hn.shape[0]
+    hd = cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+
+    q = (hn @ lp["wq"]).reshape(bsz, h, hd)
+    k_new = (hn @ lp["wk"]).reshape(bsz, hkv, hd)
+    v_new = (hn @ lp["wv"]).reshape(bsz, hkv, hd)
+    q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k_new = rope(k_new[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+    slot = pos % window
+    barange = jnp.arange(bsz)
+    k_cache = k_cache.at[barange, slot].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[barange, slot].set(v_new.astype(v_cache.dtype))
+    lengths = jnp.minimum(pos + 1, window)
+
+    if decode_kernel == "pallas":
+        o = ops.decode_attention(q, k_cache, v_cache, lengths)
+    else:
+        o = ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    out = o.reshape(bsz, h * hd) @ lp["wo"]
+    return out, k_cache, v_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array,
+                state: ServeState, decode_kernel: str = "ref",
+                max_len: Optional[int] = None):
+    """One new token per sequence. tokens: (B,) → (logits (B,V), state)."""
+    specs = cfg.layer_specs()
+    caches = state.caches
+    pos = state.lengths                          # (B,)
+    bsz = tokens.shape[0]
+    any_cache = next(iter(caches.values()))
+    # window is static: recover it from the cache buffers themselves
+    h = embed(params["embed"], tokens[:, None], cfg)[:, 0]   # (B,D)
+
+    def period_body(h, per):
+        pp, pc = per
+        new_pc = dict(pc)
+        for i, spec in enumerate(specs):
+            lp = pp[f"l{i}"]
+            hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            if spec.mixer == "attn":
+                if cfg.attention == "mla":
+                    out, latent_new, rope_new = attn_mod.mla_decode(
+                        lp["mixer"], hn, cfg,
+                        pc[f"l{i}.attn.latent"], pc[f"l{i}.attn.rope"],
+                        pos, pos + 1)
+                    slot = pos
+                    ar = jnp.arange(bsz)
+                    new_pc[f"l{i}.attn.latent"] = pc[f"l{i}.attn.latent"].at[
+                        ar, slot].set(latent_new.astype(any_cache.dtype))
+                    new_pc[f"l{i}.attn.rope"] = pc[f"l{i}.attn.rope"].at[
+                        ar, slot].set(rope_new.astype(any_cache.dtype))
+                else:
+                    w = pc[f"l{i}.attn.k"].shape[1]
+                    out, kc, vc = _gqa_decode(
+                        lp["mixer"], hn, cfg, pc[f"l{i}.attn.k"],
+                        pc[f"l{i}.attn.v"], pos, w, decode_kernel)
+                    new_pc[f"l{i}.attn.k"] = kc
+                    new_pc[f"l{i}.attn.v"] = vc
+            else:
+                mstate = ssm_mod.MambaState(conv=pc[f"l{i}.mamba.conv"],
+                                            h=pc[f"l{i}.mamba.h"])
+                out, mstate = ssm_mod.mamba_decode(lp["mixer"], hn, cfg, mstate)
+                new_pc[f"l{i}.mamba.conv"] = mstate.conv
+                new_pc[f"l{i}.mamba.h"] = mstate.h
+            h = h + out
+            if cfg.d_ff > 0:
+                hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+                if spec.ff == "moe":
+                    ff = moe_mod.moe(lp["ff"], hn[:, None], cfg,
+                                     dropless=True).y[:, 0]
+                else:
+                    ff = mlp(lp["ff"], hn[:, None], cfg)[:, 0]
+                h = h + ff
+        return h, new_pc
+
+    h, new_caches = jax.lax.scan(period_body, h, (params["layers"], caches))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)
+    return logits, ServeState(caches=new_caches, lengths=state.lengths + 1)
+
+
+# ----------------------------------------------------------------- prefill
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, max_len: int,
+            embeds: Optional[jax.Array] = None, attn_impl: str = "ref"):
+    """Process the prompt and build decode caches.
+
+    tokens: (B, S_prompt).  Returns (last_logits (B,V), ServeState).
+    attn_impl="pallas" routes prefill attention through the flash kernel.
+    """
+    bsz, s = tokens.shape
+    logits, aux = forward(params, cfg, tokens, embeds=embeds,
+                          collect_cache=True, attn_impl=attn_impl)
+    n_front = embeds.shape[1] if embeds is not None else 0
+    s_total = s + n_front
+    w = _window(cfg, max_len)
+    shapes = cache_shapes(cfg, bsz, max_len)
+    caches = {}
+    for name, sds in shapes.items():
+        got = aux.cache[name]                   # (P, B, S_total, ...) or state
+        buf = jnp.zeros(sds.shape, sds.dtype)
+        if ".mamba." in name:
+            caches[name] = got.astype(sds.dtype)
+            continue
+        cap = sds.shape[2]                      # W or max_len
+        if s_total <= cap:
+            buf = jax.lax.dynamic_update_slice_in_dim(
+                buf, got.astype(sds.dtype), 0, axis=2)
+        else:  # ring placement of the last `cap` positions
+            tail = got[:, :, -cap:]
+            positions = (jnp.arange(s_total - cap, s_total)) % cap
+            buf = buf.at[:, :, positions].set(tail.astype(sds.dtype))
+        caches[name] = buf
+    st = ServeState(caches=caches,
+                    lengths=jnp.full((bsz,), s_total, jnp.int32))
+    return logits[:, -1], st
+
+
+def generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,
+             max_len: int, decode_kernel: str = "ref",
+             embeds: Optional[jax.Array] = None):
+    """Greedy generation. Returns (B, steps) sampled tokens."""
+    logits, st = prefill(params, cfg, prompt, max_len, embeds=embeds)
+    toks = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(steps):
+        toks.append(tok)
+        logits, st = decode_step(params, cfg, tok, st,
+                                 decode_kernel=decode_kernel)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,85 @@
+"""Sequence-sharded decode attention (long-context serving, DESIGN §5).
+
+For long_500k-class caches the KV sequence dim is sharded across the data
+axes.  Each shard computes flash-decode partial statistics (m, ℓ, o) over
+its local KV block; the exact global softmax is recovered with one psum
+per statistic (log-sum-exp merge):
+
+    m* = max_shards m_i                 (psum of exp-shifted works too; we
+    ℓ* = Σ_i ℓ_i · exp(m_i − m*)         use pmax + two psums)
+    o* = Σ_i o_i · ℓ_i·exp(m_i − m*) / ℓ*
+
+This is flash-decoding's split-K reduction expressed as jax collectives —
+communication is 2 scalars + one hd-vector per (batch, head), independent
+of sequence length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_NEG = -1e30
+
+
+def _partial_stats(q, k, v, valid, scale):
+    """Local flash-decode partials. q:(B,H,hd) k,v:(B,W_loc,Hkv,hd),
+    valid:(B,W_loc) bool. Returns m:(B,H), l:(B,H), o:(B,H,hd)."""
+    bsz, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = (q.astype(jnp.float32) * scale).reshape(bsz, hkv, rep, hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, k.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    m = jnp.max(s, axis=-1)                                  # (B,g,r)
+    p = jnp.exp(s - m[..., None])
+    p = p * (s > _NEG / 2).astype(jnp.float32)               # all-masked → 0
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32))
+    return (m.reshape(bsz, h), l.reshape(bsz, h),
+            o.reshape(bsz, h, hd))
+
+
+def sharded_decode_attention(
+    q: jax.Array,        # (B, H, hd)      replicated over the seq shards
+    k: jax.Array,        # (B, W, Hkv, hd) W sharded over `axes`
+    v: jax.Array,
+    lengths: jax.Array,  # (B,) global valid prefix
+    mesh: Mesh,
+    axes: tuple[str, ...] = ("data",),
+    scale: float | None = None,
+) -> jax.Array:
+    """Exact decode attention over a sequence-sharded KV cache."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else hd ** -0.5
+    w = k.shape[1]
+
+    def body(q, k_loc, v_loc, lengths):
+        # global position of each local slot
+        shard_id = jnp.zeros((), jnp.int32)
+        for ax in axes:
+            shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        w_loc = k_loc.shape[1]
+        pos = shard_id * w_loc + jnp.arange(w_loc)
+        valid = pos[None, :] < lengths[:, None]
+
+        m, l, o = _partial_stats(q, k_loc, v_loc, valid, scale)
+        m_star = jax.lax.pmax(m, axes[0]) if len(axes) == 1 else \
+            functools.reduce(lambda a, ax: jax.lax.pmax(a, ax), axes, m)
+        corr = jnp.exp(m - m_star)
+        l_corr = l * corr
+        o_corr = o * corr[..., None]
+        for ax in axes:
+            l_corr = jax.lax.psum(l_corr, ax)
+            o_corr = jax.lax.psum(o_corr, ax)
+        return (o_corr / jnp.maximum(l_corr[..., None], 1e-20)).astype(q.dtype)
+
+    kv_spec = P(None, axes if len(axes) > 1 else axes[0], None, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), kv_spec, kv_spec, P()),
+        out_specs=P(),
+        check_vma=False,
+    )(q, k, v, lengths)

@@ -1,0 +1,47 @@
+"""Continuous batching: staggered multi-tenant decode == isolated decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_transformer
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.engine import generate
+
+
+def test_batched_requests_match_isolated_generation():
+    cfg = get_smoke_config("glm4-9b")
+    params = init_transformer(jax.random.key(0), cfg)
+
+    prompts = [
+        jax.random.randint(jax.random.key(i + 1), (6 + i,), 0,
+                           cfg.vocab_size)
+        for i in range(3)
+    ]
+    want = {
+        i: generate(params, cfg, p[None], steps=5, max_len=32)[0].tolist()
+        for i, p in enumerate(prompts)
+    }
+
+    batcher = ContinuousBatcher(params, cfg, num_slots=2, max_len=32)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    got = batcher.run(reqs)
+
+    assert set(got) == {0, 1, 2}
+    for uid in got:
+        assert got[uid] == want[uid], (uid, got[uid], want[uid])
+
+
+def test_more_requests_than_slots_all_finish():
+    cfg = get_smoke_config("falcon-mamba-7b")
+    params = init_transformer(jax.random.key(0), cfg)
+    reqs = [Request(uid=i,
+                    prompt=jax.random.randint(jax.random.key(i), (4,), 0,
+                                              cfg.vocab_size),
+                    max_new_tokens=3)
+            for i in range(5)]
+    batcher = ContinuousBatcher(params, cfg, num_slots=2, max_len=16)
+    got = batcher.run(reqs)
+    assert set(got) == set(range(5))
+    assert all(len(v) == 3 for v in got.values())

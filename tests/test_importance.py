@@ -1,0 +1,166 @@
+"""Unit + property tests for the core importance-sampling math (paper §3-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import importance as imp
+from repro.core import variance as var
+from repro.core.importance import ISConfig
+from repro.core.sampler import sample_indices
+from repro.core.weight_store import init_store, read_proposal, write_scores
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _weights(draw_len=st.integers(4, 64)):
+    return st.lists(
+        st.floats(0.01, 100.0, allow_nan=False, allow_infinity=False),
+        min_size=4, max_size=64,
+    )
+
+
+# ---------------------------------------------------------------- smoothing
+@given(_weights(), st.floats(0.0, 50.0))
+@settings(max_examples=50, deadline=None)
+def test_smoothing_positive_and_monotone(ws, c):
+    w = jnp.asarray(ws, jnp.float32)
+    cfg = ISConfig(smoothing=c)
+    s = imp.smooth_weights(w, cfg)
+    assert bool(jnp.all(s > 0))
+    # smoothing preserves the ordering of weights
+    order_raw = jnp.argsort(w, stable=True)
+    order_s = jnp.argsort(s, stable=True)
+    np.testing.assert_array_equal(np.asarray(order_raw), np.asarray(order_s))
+
+
+@given(_weights())
+@settings(max_examples=30, deadline=None)
+def test_smoothing_limit_is_uniform(ws):
+    """B.3: c → ∞ recovers plain SGD (uniform proposal)."""
+    w = jnp.asarray(ws, jnp.float32)
+    s = imp.smooth_weights(w, ISConfig(smoothing=1e9))
+    p = np.asarray(imp.normalize(s))
+    np.testing.assert_allclose(p, np.full_like(p, 1.0 / len(p)), rtol=1e-4)
+
+
+# ------------------------------------------------------------ loss scaling
+def test_is_scale_uniform_weights_is_identity():
+    """Paper §4.1 sanity check: equal ω̃ → scale 1/M·mean = plain SGD."""
+    w = jnp.full((16,), 3.7)
+    scale = imp.is_loss_scale(w[:4], jnp.mean(w))
+    np.testing.assert_allclose(np.asarray(scale), np.ones(4), rtol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_is_estimator_unbiased(seed):
+    """The IS gradient estimator has the same expectation as the full mean.
+
+    f(x_n) here is a vector per example; we draw many minibatches with the
+    proposal ∝ ω̃ and check the IS-weighted mean converges to the true mean.
+    """
+    rng = np.random.default_rng(seed)
+    N, d = 64, 8
+    f = rng.normal(size=(N, d)).astype(np.float32)
+    w = rng.uniform(0.1, 10.0, size=N).astype(np.float32)
+    true_mean = f.mean(axis=0)
+
+    key = jax.random.key(seed)
+    M = 4096 * 8
+    idx = np.asarray(sample_indices(key, jnp.asarray(w), M))
+    scale = np.asarray(imp.is_loss_scale(jnp.asarray(w)[idx], jnp.mean(jnp.asarray(w))))
+    est = (f[idx] * scale[:, None]).mean(axis=0)
+    # Monte-Carlo: tolerance scales with the estimator std
+    g2 = (np.linalg.norm(f, axis=1) ** 2 / w).mean() * w.mean()
+    tol = 5.0 * np.sqrt(g2 / M) + 1e-4
+    assert np.linalg.norm(est - true_mean) < tol
+
+
+# -------------------------------------------------------- variance monitors
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_trace_sigma_matches_bruteforce(seed):
+    """Eq. 6 equals the brute-force covariance trace of the IS estimator."""
+    rng = np.random.default_rng(seed)
+    N, d = 32, 5
+    f = rng.normal(size=(N, d)).astype(np.float64)
+    w = rng.uniform(0.5, 4.0, size=N).astype(np.float64)
+    p = w / w.sum()
+    mu = f.mean(axis=0)
+    # estimator for draw n:  (1/N) * f_n / p_n  = f_n * mean(w)/w_n
+    est = f * (w.mean() / w)[:, None]
+    second = (p[:, None] * est * est).sum(axis=0)  # E[est⊙est]
+    brute = second.sum() - (mu ** 2).sum()
+    ours = float(var.trace_sigma(
+        jnp.asarray(np.linalg.norm(f, axis=1)), jnp.asarray(w),
+        g_true_sq=float((mu ** 2).sum())))
+    np.testing.assert_allclose(ours, brute, rtol=1e-5, atol=1e-8)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_ideal_is_lower_bound(seed):
+    """Theorem 1: Tr(Σ(q*)) ≤ Tr(Σ(q)) for any positive weighting q."""
+    rng = np.random.default_rng(seed)
+    N = 48
+    g = rng.uniform(0.0, 5.0, size=N).astype(np.float64)
+    ideal = float(var.trace_sigma_ideal(jnp.asarray(g)))
+    unif = float(var.trace_sigma_unif(jnp.asarray(g)))
+    assert ideal <= unif + 1e-9
+    for _ in range(5):
+        w = rng.uniform(0.05, 10.0, size=N)
+        other = float(var.trace_sigma(jnp.asarray(g), jnp.asarray(w)))
+        assert ideal <= other + 1e-7 * max(1.0, abs(other))
+
+
+def test_ideal_achieved_by_grad_norm_weights():
+    """Using ω̃_n = g_n exactly attains eq. 7 from eq. 6."""
+    g = jnp.asarray([0.5, 1.0, 2.0, 4.0, 0.1])
+    np.testing.assert_allclose(
+        float(var.trace_sigma(g, g)), float(var.trace_sigma_ideal(g)), rtol=1e-6)
+
+
+# ------------------------------------------------------------- weight store
+def test_store_roundtrip_and_staleness():
+    store = init_store(10)
+    cfg = ISConfig(smoothing=1.0, staleness_threshold=5)
+    # cold store == uniform proposal
+    p0 = np.asarray(read_proposal(store, 0, cfg))
+    np.testing.assert_allclose(p0, p0[0])
+
+    store = write_scores(store, jnp.asarray([1, 3]), jnp.asarray([9.0, 4.0]), step=2)
+    p = np.asarray(read_proposal(store, step=3, cfg=cfg))
+    assert p[1] == pytest.approx(10.0) and p[3] == pytest.approx(5.0)
+    assert p[0] == pytest.approx(1.0)
+
+    # after the staleness window, entries revert to neutral (B.1)
+    p_old = np.asarray(read_proposal(store, step=20, cfg=cfg))
+    np.testing.assert_allclose(p_old, p_old[0])
+
+
+def test_ess_and_entropy():
+    u = jnp.ones((32,))
+    assert float(imp.effective_sample_size(u)) == pytest.approx(32.0)
+    peaked = jnp.zeros((32,)).at[0].set(1.0) + 1e-9
+    assert float(imp.effective_sample_size(peaked)) < 1.5
+    assert float(imp.proposal_entropy(u)) == pytest.approx(np.log(32), rel=1e-5)
+    assert float(imp.proposal_entropy(peaked)) < 0.01
+
+
+# ------------------------------------------------------------------ sampler
+def test_sampler_distribution_chi2():
+    N = 256
+    w = np.linspace(1, 4, N).astype(np.float32)
+    idx = np.asarray(sample_indices(jax.random.key(7), jnp.asarray(w), 100_000))
+    h = np.bincount(idx, minlength=N) / 100_000
+    p = w / w.sum()
+    tv = 0.5 * np.abs(h - p).sum()
+    assert tv < 0.05
+
+
+def test_sampler_zero_weight_never_sampled():
+    w = jnp.asarray([0.0, 1.0, 0.0, 1.0])
+    idx = np.asarray(sample_indices(jax.random.key(0), w, 4096))
+    assert set(np.unique(idx)) <= {1, 3}

@@ -1,0 +1,133 @@
+"""ISSGD train-step behaviour (paper §4 + §5 claims at test scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.importance import ISConfig
+from repro.core.issgd import ISSGDConfig, init_train_state, make_train_step
+from repro.core.scorer import make_mlp_scorer
+from repro.data import make_svhn_like
+from repro.models.mlp import MLPConfig, init_mlp_classifier, accuracy
+from repro.models.mlp import per_example_loss as mlp_pel
+from repro.optim import sgd
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = MLPConfig(input_dim=32, hidden=(64, 64), num_classes=10)
+    train, test = make_svhn_like(jax.random.key(0), n=2048, dim=32)
+    params = init_mlp_classifier(jax.random.key(1), cfg)
+    return cfg, train, test, params
+
+
+def _run(setup, mode, steps=200, smoothing=0.1, strategy="ghost",
+         refresh_every=4, staleness_threshold=0):
+    cfg, train, test, params = setup
+    opt = sgd(0.05)
+    tcfg = ISSGDConfig(
+        batch_size=64, score_batch_size=256, refresh_every=refresh_every,
+        mode=mode,
+        is_cfg=ISConfig(smoothing=smoothing,
+                        staleness_threshold=staleness_threshold))
+    step = jax.jit(make_train_step(
+        lambda p, b: mlp_pel(p, b, cfg),
+        make_mlp_scorer(cfg, strategy), opt, tcfg, train.size))
+    st = init_train_state(params, opt, train.size)
+    ms = []
+    for _ in range(steps):
+        st, m = step(st, train.arrays)
+        ms.append(m)
+    return st, ms
+
+
+def test_variance_ordering(setup):
+    """Paper §4.2: Tr(Σ(q_IDEAL)) ≤ Tr(Σ(q_STALE)) ≤ Tr(Σ(q_UNIF))."""
+    _, ms = _run(setup, "relaxed", steps=120)
+    late = ms[40:]
+    ideal = np.mean([float(m.trace_ideal) for m in late])
+    stale = np.mean([float(m.trace_stale) for m in late])
+    unif = np.mean([float(m.trace_unif) for m in late])
+    assert ideal <= stale * 1.02
+    assert stale <= unif * 1.02
+    # and the reduction must be real, not epsilon
+    assert stale < 0.9 * unif
+
+
+def test_issgd_trains(setup):
+    cfg, train, test, params = setup
+    st, ms = _run(setup, "relaxed", steps=300)
+    acc = float(accuracy(st.params, test.arrays, cfg))
+    assert acc > 0.75
+    assert float(ms[-1].loss) < float(ms[0].loss)
+
+
+def test_uniform_mode_is_plain_sgd(setup):
+    st, ms = _run(setup, "uniform", steps=60)
+    # IS scales are exactly 1 → loss path equals plain SGD; just sanity
+    assert np.isfinite(float(ms[-1].loss))
+
+
+def test_exact_mode_matches_oracle_freshness(setup):
+    """Exact mode: every weight is re-scored each step → stale == fresh, so
+    Tr(Σ(q_STALE)) collapses onto Tr(Σ(q)) with current weights."""
+    _, ms = _run(setup, "exact", steps=20, smoothing=0.0)
+    m = ms[-1]
+    # with fresh raw grad-norm weights, stale proposal == ideal proposal
+    np.testing.assert_allclose(float(m.trace_stale), float(m.trace_ideal),
+                               rtol=5e-2)
+
+
+def test_huge_smoothing_recovers_uniform_variance(setup):
+    """B.3: c → ∞ ⇒ ISSGD becomes plain SGD (stale trace → unif trace)."""
+    _, ms = _run(setup, "relaxed", steps=60, smoothing=1e7)
+    m = ms[-1]
+    np.testing.assert_allclose(float(m.trace_stale), float(m.trace_unif),
+                               rtol=1e-2)
+
+
+def test_staleness_threshold_masks_old_entries(setup):
+    """B.1: tiny staleness window → all but the freshest slices revert to
+    the neutral (uniform) weight."""
+    from repro.core.importance import ISConfig
+    from repro.core.weight_store import read_proposal
+    st, ms = _run(setup, "relaxed", steps=30, staleness_threshold=1,
+                  smoothing=0.1)
+    prop = np.asarray(read_proposal(
+        st.store, st.step,
+        ISConfig(smoothing=0.1, staleness_threshold=1)))
+    neutral = np.isclose(prop, 0.1).mean()
+    # scored slices within the window: 2 slices of 256 out of 2048 examples
+    assert neutral > 0.7, f"expected most entries neutral, got {neutral}"
+
+
+def test_unbiasedness_of_is_gradient(setup):
+    """The expected ISSGD minibatch gradient equals the full-dataset mean
+    gradient (the paper's core guarantee), tested by Monte-Carlo."""
+    cfg, train, _, params = setup
+    sub = {k: v[:256] for k, v in train.arrays.items()}
+    n = 256
+
+    def mean_grad(p):
+        return jax.grad(lambda q: jnp.mean(mlp_pel(q, sub, cfg)))(p)
+
+    true_g = mean_grad(params)
+    w = np.asarray(make_mlp_scorer(cfg, "ghost")(params, sub)) + 0.1
+    wj = jnp.asarray(w)
+
+    from repro.core.sampler import sample_indices
+    from repro.core.importance import is_loss_scale
+    key = jax.random.key(9)
+    m = 8192
+    idx = sample_indices(key, wj, m)
+    scales = is_loss_scale(wj[idx], jnp.mean(wj))
+
+    def is_loss(p):
+        batch = {k: v[idx] for k, v in sub.items()}
+        return jnp.mean(mlp_pel(p, batch, cfg) * scales)
+
+    est_g = jax.grad(is_loss)(params)
+    t = jnp.concatenate([x.ravel() for x in jax.tree.leaves(true_g)])
+    e = jnp.concatenate([x.ravel() for x in jax.tree.leaves(est_g)])
+    rel = float(jnp.linalg.norm(e - t) / jnp.linalg.norm(t))
+    assert rel < 0.15, f"IS gradient deviates {rel:.3f} from true mean"

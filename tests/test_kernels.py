@@ -1,0 +1,241 @@
+"""Per-kernel correctness: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ghost_norm import ghost_norm as ghost_kernel
+from repro.kernels.per_example_sqnorm import per_example_sqnorm as pesn_kernel
+from repro.kernels.selective_scan import selective_scan as scan_kernel
+from repro.kernels.decode_attention import decode_attention as dattn_kernel
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ------------------------------------------------------- per_example_sqnorm
+@pytest.mark.parametrize("b,din,dout", [
+    (4, 32, 32), (8, 300, 100), (16, 1024, 7), (3, 2048, 4096), (128, 512, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_bias", [True, False])
+def test_per_example_sqnorm(b, din, dout, dtype, with_bias):
+    k1, k2 = jax.random.split(jax.random.key(b * din + dout))
+    x, d = _rand(k1, (b, din), dtype), _rand(k2, (b, dout), dtype)
+    got = pesn_kernel(x, d, with_bias=with_bias, block_b=8, block_k=64,
+                      interpret=True)
+    want = ref.per_example_sqnorm_ref(x, d, with_bias=with_bias)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol)
+
+
+# --------------------------------------------------------------- ghost_norm
+@pytest.mark.parametrize("b,s,din,dout", [
+    (2, 16, 32, 32), (3, 100, 64, 24), (2, 128, 300, 500), (1, 64, 1024, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("symmetric", [False, True])
+def test_ghost_norm_kernel(b, s, din, dout, dtype, symmetric):
+    k1, k2 = jax.random.split(jax.random.key(s + din))
+    x, d = _rand(k1, (b, s, din), dtype), _rand(k2, (b, s, dout), dtype)
+    got = ghost_kernel(x, d, block_s=32, block_k=64, symmetric=symmetric,
+                       interpret=True)
+    want = ref.ghost_norm_ref(x, d)
+    rtol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol)
+
+
+def test_ghost_oracles_agree():
+    """The two reference formulations compute the same quantity."""
+    k1, k2 = jax.random.split(jax.random.key(0))
+    x = jax.random.normal(k1, (4, 33, 48))
+    d = jax.random.normal(k2, (4, 33, 16))
+    np.testing.assert_allclose(
+        np.asarray(ref.ghost_norm_ref(x, d)),
+        np.asarray(ref.ghost_norm_direct_ref(x, d)), rtol=1e-4)
+
+
+def test_ghost_norm_equals_true_per_example_grad():
+    """End-to-end: ghost norm == ||∂L_n/∂W||²_F from real autodiff."""
+    key = jax.random.key(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    bsz, s, din, dout = 3, 8, 10, 6
+    x = jax.random.normal(k1, (bsz, s, din))
+    w = jax.random.normal(k2, (din, dout)) * 0.3
+    tgt = jax.random.normal(k3, (bsz, s, dout))
+
+    def loss_n(w, x_n, t_n):
+        y = x_n @ w
+        return jnp.sum((y - t_n) ** 2)
+
+    per_ex_grads = jax.vmap(jax.grad(loss_n), in_axes=(None, 0, 0))(w, x, tgt)
+    want = jnp.sum(per_ex_grads ** 2, axis=(1, 2))
+
+    # deltas dL/dY for the summed loss
+    def loss(w):
+        return jnp.sum((jnp.einsum("bsi,io->bso", x, w) - tgt) ** 2)
+    y = jnp.einsum("bsi,io->bso", x, w)
+    dy = 2 * (y - tgt)
+    got = ops.ghost_norm(x, dy, force="gram")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+    got2 = ops.ghost_norm(x, dy, force="direct")
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want), rtol=1e-4)
+
+
+def test_prop1_equals_true_per_example_grad():
+    """Paper Prop. 1 against autodiff for an MLP layer (incl. bias)."""
+    key = jax.random.key(5)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    bsz, din, dout = 5, 12, 7
+    x = jax.random.normal(k1, (bsz, din))
+    w = jax.random.normal(k2, (din, dout)) * 0.4
+    bvec = jax.random.normal(k3, (dout,)) * 0.1
+    tgt = jax.random.normal(k4, (bsz, dout))
+
+    def loss_n(params, x_n, t_n):
+        w, bvec = params
+        return jnp.sum((x_n @ w + bvec - t_n) ** 2)
+
+    gw, gb = jax.vmap(jax.grad(loss_n), in_axes=(None, 0, 0))((w, bvec), x, tgt)
+    want = jnp.sum(gw ** 2, axis=(1, 2)) + jnp.sum(gb ** 2, axis=1)
+
+    dy = 2 * (x @ w + bvec - tgt)
+    got = ops.per_example_sqnorm(x, dy, with_bias=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ----------------------------------------------------------- selective scan
+@pytest.mark.parametrize("b,s,di,ds", [
+    (2, 16, 32, 4), (1, 64, 48, 16), (2, 100, 30, 8), (3, 128, 256, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_selective_scan(b, s, di, ds, dtype):
+    keys = jax.random.split(jax.random.key(s * di), 6)
+    u = _rand(keys[0], (b, s, di), dtype)
+    delta = jax.nn.softplus(_rand(keys[1], (b, s, di), jnp.float32)).astype(dtype)
+    a = -jnp.exp(jax.random.normal(keys[2], (di, ds)) * 0.5)
+    bm = _rand(keys[3], (b, s, ds), dtype)
+    c = _rand(keys[4], (b, s, ds), dtype)
+    d = jax.random.normal(keys[5], (di,))
+    got = ops.selective_scan(u, delta, a, bm, c, d, chunk=32, block_d=16)
+    want = ref.selective_scan_ref(u, delta, a, bm, c, d)
+    rtol, atol = (8e-2, 1e-2) if dtype == jnp.bfloat16 else (2e-4, 1e-5)
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32), rtol=rtol, atol=atol)
+
+
+def test_selective_scan_matches_stepwise_decode():
+    """Chunked train-time scan and one-token decode recurrence agree."""
+    keys = jax.random.split(jax.random.key(11), 6)
+    b, s, di, ds = 2, 24, 16, 4
+    u = jax.random.normal(keys[0], (b, s, di))
+    delta = jax.nn.softplus(jax.random.normal(keys[1], (b, s, di)))
+    a = -jnp.exp(jax.random.normal(keys[2], (di, ds)) * 0.3)
+    bm = jax.random.normal(keys[3], (b, s, ds))
+    c = jax.random.normal(keys[4], (b, s, ds))
+    d = jax.random.normal(keys[5], (di,))
+    y_scan = ref.selective_scan_ref(u, delta, a, bm, c, d)
+    h = jnp.zeros((b, di, ds))
+    ys = []
+    for t in range(s):
+        h, y_t = ref.selective_scan_step_ref(h, u[:, t], delta[:, t], a,
+                                             bm[:, t], c[:, t], d)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_scan), rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------- decode attention
+@pytest.mark.parametrize("b,s,h,hkv,hd", [
+    (2, 64, 4, 4, 32), (2, 128, 8, 2, 64), (1, 100, 6, 1, 16), (3, 256, 16, 8, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, s, h, hkv, hd, dtype):
+    keys = jax.random.split(jax.random.key(s + h), 4)
+    q = _rand(keys[0], (b, h, hd), dtype)
+    k = _rand(keys[1], (b, s, hkv, hd), dtype)
+    v = _rand(keys[2], (b, s, hkv, hd), dtype)
+    lengths = jax.random.randint(keys[3], (b,), 1, s + 1)
+    got = dattn_kernel(q, k, v, lengths, block_s=32, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    rtol, atol = (3e-2, 3e-2) if dtype == jnp.bfloat16 else (2e-5, 2e-6)
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32), rtol=rtol, atol=atol)
+
+
+def test_decode_attention_length_zero_safe():
+    q = jnp.ones((1, 2, 8))
+    k = jnp.ones((1, 16, 2, 8))
+    v = jnp.ones((1, 16, 2, 8))
+    out = dattn_kernel(q, k, v, jnp.asarray([0]), block_s=8, interpret=True)
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,s,h,hkv,hd,win", [
+    (2, 64, 4, 2, 32, 0), (1, 100, 8, 8, 16, 0), (2, 128, 4, 1, 32, 24),
+    (1, 96, 6, 3, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, s, h, hkv, hd, win, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(jax.random.key(s + h), 3)
+    q = _rand(ks[0], (b, s, h, hd), dtype)
+    k = _rand(ks[1], (b, s, hkv, hd), dtype)
+    v = _rand(ks[2], (b, s, hkv, hd), dtype)
+    got = flash_attention(q, k, v, window=win, block_q=32, block_k=16,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=win)
+    rtol, atol = (4e-2, 2e-2) if dtype == jnp.bfloat16 else (2e-5, 2e-6)
+    np.testing.assert_allclose(np.asarray(got, jnp.float32),
+                               np.asarray(want, jnp.float32),
+                               rtol=rtol, atol=atol)
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel agrees with the model's chunked-jnp attention end to end."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import _chunked_attention
+    b, s, hkv, rep, hd = 2, 48, 2, 2, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hkv, rep, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    want = _chunked_attention(q, k, v, pos, pos, 0, 16)
+    got = flash_attention(q.reshape(b, s, hkv * rep, hd), k, v,
+                          block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want.reshape(b, s, hkv * rep, hd)),
+        rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("b,s,h,hkv,hd,win", [
+    (2, 48, 4, 2, 16, 0), (1, 64, 4, 4, 32, 0), (2, 64, 4, 1, 16, 24),
+])
+def test_flash_attention_backward(b, s, h, hkv, hd, win):
+    """FlashAttention-2-style backward kernels == autodiff of the oracle
+    (dq/dk/dv, incl. GQA head accumulation and sliding windows)."""
+    ks = jax.random.split(jax.random.key(s + h + win), 4)
+    q = jax.random.normal(ks[0], (b, s, h, hd)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, hkv, hd)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, hkv, hd)) * 0.5
+    tgt = jax.random.normal(ks[3], (b, s, h, hd))
+    fa = ops.make_flash_attention_trainable(window=win, block_q=16,
+                                            block_k=16)
+
+    def loss_fa(q, k, v):
+        return jnp.sum((fa(q, k, v) - tgt) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum((ref.flash_attention_ref(q, k, v, window=win)
+                        - tgt) ** 2)
+
+    g1 = jax.grad(loss_fa, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b2 in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b2),
+                                   rtol=1e-4, atol=1e-5)

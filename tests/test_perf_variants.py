@@ -1,0 +1,110 @@
+"""Correctness of the §Perf optimization knobs (EXPERIMENTS.md §Perf):
+every speedup must keep the math right (or have a bounded, measured error).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.models.mlp import (MLPConfig, init_mlp_classifier,
+                              per_example_loss, per_example_loss_and_score)
+from repro.core.scorer import make_mlp_scorer
+
+
+def _scan_inputs(key, b=2, s=256, di=32, ds=8):
+    ks = jax.random.split(key, 6)
+    u = jax.random.normal(ks[0], (b, s, di))
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)))
+    a = -jnp.exp(jax.random.normal(ks[2], (di, ds)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, ds))
+    c = jax.random.normal(ks[4], (b, s, ds))
+    d = jax.random.normal(ks[5], (di,))
+    return u, delta, a, bm, c, d
+
+
+def test_scan_unroll_is_exact():
+    """lax.scan unrolling is a pure scheduling change — bitwise-compatible
+    math, so outputs must agree to float tolerance."""
+    args = _scan_inputs(jax.random.key(0))
+    y1 = ref.selective_scan_ref(*args, unroll=1)
+    y8 = ref.selective_scan_ref(*args, unroll=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y8),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_scan_bf16_error_bounded():
+    """bf16 recurrence state: relative error stays small over long
+    sequences (the decay keeps error accumulation contractive)."""
+    args = _scan_inputs(jax.random.key(1), s=1024)
+    y32 = np.asarray(ref.selective_scan_ref(*args, scan_dtype=jnp.float32),
+                     np.float32)
+    y16 = np.asarray(ref.selective_scan_ref(*args, scan_dtype=jnp.bfloat16),
+                     np.float32)
+    rel = np.abs(y16 - y32) / (np.abs(y32) + 1e-3)
+    assert np.median(rel) < 0.02, np.median(rel)
+    assert np.mean(rel) < 0.05, np.mean(rel)
+
+
+def test_fused_score_matches_logit_grad_scorer():
+    """Fused-mode scores == the standalone logit_grad scorer (same math,
+    one forward pass saved)."""
+    cfg = MLPConfig(input_dim=16, hidden=(24,), num_classes=5)
+    params = init_mlp_classifier(jax.random.key(0), cfg)
+    batch = {"x": jax.random.normal(jax.random.key(1), (12, 16)),
+             "y": jax.random.randint(jax.random.key(2), (12,), 0, 5)}
+    losses, scores = per_example_loss_and_score(params, batch, cfg)
+    np.testing.assert_allclose(
+        np.asarray(losses), np.asarray(per_example_loss(params, batch, cfg)),
+        rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(scores),
+        np.asarray(make_mlp_scorer(cfg, "logit_grad")(params, batch)),
+        rtol=1e-5)
+
+
+def test_lm_fused_score_matches_scorer():
+    from repro.configs import get_smoke_config
+    from repro.core.scorer import make_lm_scorer
+    from repro.models.transformer import (init_transformer,
+                                          per_example_loss_and_score)
+    cfg = get_smoke_config("deepseek-7b")
+    params = init_transformer(jax.random.key(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (3, 18), 0,
+                                          cfg.vocab_size)}
+    _, scores = per_example_loss_and_score(params, cfg, batch)
+    want = make_lm_scorer(cfg, "logit_grad")(params, batch)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want),
+                               rtol=1e-4)
+
+
+def test_fused_mode_trains_and_reduces_variance():
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import (ISSGDConfig, init_train_state,
+                                  make_score_step, make_train_step)
+    from repro.data import make_svhn_like
+    from repro.optim import sgd
+
+    cfg = MLPConfig(input_dim=32, hidden=(64,), num_classes=10)
+    train, _ = make_svhn_like(jax.random.key(0), n=1024, dim=32)
+    params = init_mlp_classifier(jax.random.key(1), cfg)
+    opt = sgd(0.05)
+    tcfg = ISSGDConfig(batch_size=64, score_batch_size=256, mode="fused",
+                       is_cfg=ISConfig(smoothing=0.1))
+    step = jax.jit(make_train_step(
+        lambda p, b: per_example_loss(p, b, cfg),
+        make_mlp_scorer(cfg, "logit_grad"), opt, tcfg, train.size,
+        fused_score=lambda p, b: per_example_loss_and_score(p, b, cfg)))
+    probe = jax.jit(make_score_step(make_mlp_scorer(cfg, "logit_grad"),
+                                    tcfg, train.size))
+    st = init_train_state(params, opt, train.size)
+    first = None
+    for i in range(150):
+        st, m = step(st, train.arrays)
+        if i % 8 == 0:
+            st = probe(st, train.arrays)
+        if first is None:
+            first = float(m.loss)
+    assert float(m.loss) < first
+    assert float(m.trace_stale) < float(m.trace_unif)

@@ -1,0 +1,99 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.importance import ISConfig, is_loss_scale, smooth_weights
+from repro.core.sampler import sample_indices
+from repro.core.variance import trace_sigma, trace_sigma_ideal
+from repro.core.weight_store import (init_store, read_proposal, write_scores)
+
+
+# ----------------------------------------------------------------- sampler
+@given(st.integers(0, 2**31 - 1), st.integers(8, 200), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_sampler_indices_in_range(seed, n, m):
+    w = jax.random.uniform(jax.random.key(seed), (n,)) + 1e-3
+    idx = np.asarray(sample_indices(jax.random.key(seed + 1), w, m))
+    assert idx.shape == (m,)
+    assert (idx >= 0).all() and (idx < n).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 64))
+@settings(max_examples=25, deadline=None)
+def test_sampler_respects_support(seed, n):
+    """Zero-weight examples are never drawn — q > 0 only where w > 0."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 2.0, n)
+    dead = rng.choice(n, size=max(1, n // 3), replace=False)
+    w[dead] = 0.0
+    idx = np.asarray(sample_indices(jax.random.key(seed), jnp.asarray(w),
+                                    512))
+    assert not np.isin(idx, dead).any()
+
+
+# ------------------------------------------------------------- weight store
+@given(st.integers(0, 2**31 - 1), st.integers(8, 64), st.integers(1, 20))
+@settings(max_examples=30, deadline=None)
+def test_store_write_read_consistency(seed, n, k):
+    """A write is visible exactly at the written indices; everything else
+    keeps the neutral/previous value."""
+    rng = np.random.default_rng(seed)
+    store = init_store(n)
+    idx = jnp.asarray(rng.choice(n, size=min(k, n), replace=False))
+    vals = jnp.asarray(rng.uniform(0.5, 5.0, size=len(idx)), dtype=jnp.float32)
+    store = write_scores(store, idx, vals, step=3)
+    cfg = ISConfig(smoothing=0.0, floor=1e-8)
+    prop = np.asarray(read_proposal(store, step=4, cfg=cfg))
+    np.testing.assert_allclose(prop[np.asarray(idx)], np.asarray(vals),
+                               rtol=1e-6)
+    others = np.setdiff1d(np.arange(n), np.asarray(idx))
+    if len(others):
+        np.testing.assert_allclose(prop[others], cfg.floor)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_scale_times_probability_is_constant(seed):
+    """ω_n · scale_n = mean(ω̃)/N · N — the IS identity that guarantees
+    unbiasedness: E_q[scale · f] = Σ q_n · scale_n · f_n = mean over n."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.uniform(0.1, 10.0, 32), dtype=jnp.float32)
+    q = w / jnp.sum(w)
+    scale = is_loss_scale(w, jnp.mean(w))
+    prod = np.asarray(q * scale)
+    np.testing.assert_allclose(prod, np.full(32, 1 / 32), rtol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_smoothing_interpolates_variance_monotonically(seed, c):
+    """Tr(Σ) under smoothed weights lies between ideal and uniform and
+    moves toward uniform as c grows."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.uniform(0.1, 5.0, 48), dtype=jnp.float32)
+    cfg0 = ISConfig(smoothing=c)
+    cfg1 = ISConfig(smoothing=c + 10.0)
+    t0 = float(trace_sigma(g, smooth_weights(g, cfg0)))
+    t1 = float(trace_sigma(g, smooth_weights(g, cfg1)))
+    ideal = float(trace_sigma_ideal(g))
+    unif = float(trace_sigma(g, jnp.ones_like(g)))
+    assert ideal - 1e-5 <= t0 <= unif + 1e-5
+    assert t0 <= t1 + 1e-5 <= unif + 1e-4 * max(1, abs(unif))
+
+
+# ---------------------------------------------------------------- ghost ops
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 24),
+       st.integers(2, 24))
+@settings(max_examples=20, deadline=None)
+def test_ghost_norm_nonnegative_and_scale_quadratic(seed, b, s, d):
+    """||X^T D||²_F ≥ 0 and scales quartically under joint scaling."""
+    from repro.kernels.ref import ghost_norm_ref
+    ks = jax.random.split(jax.random.key(seed), 2)
+    x = jax.random.normal(ks[0], (b, s, d))
+    dd = jax.random.normal(ks[1], (b, s, d))
+    g1 = np.asarray(ghost_norm_ref(x, dd))
+    assert (g1 >= -1e-6).all()
+    g2 = np.asarray(ghost_norm_ref(2.0 * x, 2.0 * dd))
+    np.testing.assert_allclose(g2, 16.0 * g1, rtol=1e-4)
