@@ -10,6 +10,7 @@ from __future__ import annotations
 import argparse
 import csv
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -91,14 +92,28 @@ def _roofline():
     return run()
 
 
+@bench("sharded_scaling")
+def _sharded_scaling():
+    from benchmarks.sharded_scaling import sharded_scaling
+    return sharded_scaling()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--bench-json", default="",
+                    help="also write the summaries to this path (CI "
+                    "uploads it as the BENCH_* artifact)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero if any selected benchmark errored "
+                    "or the --only filter matched nothing (CI gate; "
+                    "default keeps the harness running)")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
 
     print("name,us_per_call,derived")
     all_summaries = {}
+    errors = []
     for name, fn in BENCHES.items():
         if only and not any(o in name for o in only):
             continue
@@ -107,6 +122,7 @@ def main() -> None:
             rows, summary = fn()
         except Exception as e:  # keep the harness running
             print(f"{name},ERROR,{e!r}")
+            errors.append(name)
             continue
         dt_us = (time.time() - t0) * 1e6
         _write_rows(name, rows)
@@ -117,6 +133,13 @@ def main() -> None:
     RESULTS_DIR.mkdir(exist_ok=True)
     with open(RESULTS_DIR / "summaries.json", "w") as f:
         json.dump(all_summaries, f, indent=2, default=str)
+    if args.bench_json:
+        with open(args.bench_json, "w") as f:
+            json.dump(all_summaries, f, indent=2, default=str)
+    if args.strict and (errors or not all_summaries):
+        print(f"STRICT: {len(errors)} errored, "
+              f"{len(all_summaries)} succeeded", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,130 @@
+"""Sharded-ISSGD scaling: scoring throughput and step time vs device count.
+
+Each device count runs in a fresh subprocess because the XLA host-device
+count is fixed at first backend init.  The child times (a) the standalone
+scoring fan-out (zero-collective, the paper's workers) and (b) the full
+sharded train step, on the shared benchmark MLP setup.
+
+On CPU the forced host devices share the same cores, so absolute speedups
+are not the claim — the recorded numbers pin down the *overhead* of the
+sharded path (collective cost per step) and become real scaling curves on
+a pod.  Standalone:
+
+  PYTHONPATH=src python -m benchmarks.sharded_scaling --devices 1,2,4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = """
+    import json, time
+    import jax
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import ISSGDConfig, init_train_state
+    from repro.core import distributed as dist
+    from repro.core.scorer import make_mlp_scorer
+    from repro.data import make_svhn_like
+    from repro.models.mlp import MLPConfig, init_mlp_classifier
+    from repro.models.mlp import per_example_loss as mlp_pel
+    from repro.optim import sgd
+
+    ND = {nd}
+    STEPS = {steps}
+    cfg = MLPConfig(input_dim={dim}, hidden=(256, 256), num_classes=10)
+    train, _ = make_svhn_like(jax.random.key(0), n={n}, dim=cfg.input_dim)
+    params = init_mlp_classifier(jax.random.key(1), cfg)
+    opt = sgd(0.02)
+    tcfg = ISSGDConfig(batch_size=64, score_batch_size={sb},
+                       mode="relaxed", is_cfg=ISConfig(smoothing=1.0),
+                       score_shards={w})
+    mesh = jax.make_mesh((ND,), ("data",))
+    pel = lambda p, b: mlp_pel(p, b, cfg)
+    scorer = make_mlp_scorer(cfg, "ghost")
+    step, tcfg = dist.make_sharded_train_step(
+        pel, scorer, opt, tcfg, train.size, mesh, train.arrays)
+    step = jax.jit(step)
+    score = jax.jit(dist.make_sharded_score_step(
+        scorer, tcfg, train.size, mesh, train.arrays))
+    state = dist.shard_train_state(
+        init_train_state(params, opt, train.size), mesh)
+    data = dist.shard_dataset(train.arrays, mesh)
+
+    def timed(fn, s):
+        s2 = fn(s, data)                       # compile + warm
+        jax.block_until_ready(s2)
+        t0 = time.perf_counter()
+        for _ in range(STEPS):
+            s = fn(s, data)
+        jax.block_until_ready(s)
+        return (time.perf_counter() - t0) / STEPS, s
+
+    dt_score, state = timed(score, state)
+    dt_step, state = timed(lambda s, d: step(s, d)[0], state)
+    print(json.dumps({{
+        "devices": ND,
+        "score_ms": dt_score * 1e3,
+        "score_examples_per_s": {sb} / dt_score,
+        "step_ms": dt_step * 1e3,
+    }}))
+"""
+
+
+def _run_child(nd: int, *, n: int, dim: int, sb: int, w: int,
+               steps: int) -> dict:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={nd}",
+               PYTHONPATH=os.path.join(repo, "src"))
+    code = textwrap.dedent(_CHILD).format(nd=nd, n=n, dim=dim, sb=sb, w=w,
+                                          steps=steps)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=repo, timeout=560)
+    if r.returncode != 0:
+        raise RuntimeError(f"devices={nd} failed:\n{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def sharded_scaling(device_counts=(1, 2, 4), n: int = 4096, dim: int = 96,
+                    sb: int = 512, steps: int = 10):
+    """Benchmark-harness entry: (rows, summary)."""
+    w = max(device_counts)  # same logical decomposition at every size
+    rows = []
+    for nd in device_counts:
+        rows.append(_run_child(nd, n=n, dim=dim, sb=sb, w=w, steps=steps))
+    summary = {}
+    base = min(rows, key=lambda r: r["devices"])
+    for r in rows:
+        d = r["devices"]
+        summary[f"step_ms/{d}dev"] = r["step_ms"]
+        summary[f"score_throughput/{d}dev"] = r["score_examples_per_s"]
+        summary[f"speedup_vs_{base['devices']}dev/{d}dev"] = (
+            base["step_ms"] / r["step_ms"])
+    return rows, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", default="1,2,4")
+    ap.add_argument("--examples", type=int, default=4096)
+    ap.add_argument("--score-batch", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    counts = tuple(int(x) for x in args.devices.split(","))
+    rows, summary = sharded_scaling(counts, n=args.examples,
+                                    sb=args.score_batch, steps=args.steps)
+    for r in rows:
+        print(r)
+    print(json.dumps(summary, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "summary": summary}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

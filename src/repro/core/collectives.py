@@ -1,0 +1,84 @@
+"""Axis-polymorphic collectives — the one-code-path primitive layer.
+
+Every ISSGD step helper is written against a tuple of mesh axis names
+`axes`.  Inside ``shard_map`` the tuple names real mesh axes and these
+helpers lower to psums; with ``axes=()`` (single device, no shard_map)
+they degenerate to exact local arithmetic.  That is what makes the
+single-device train step literally the mesh-size-1 special case of the
+sharded one rather than a second implementation.
+
+The gather/scatter helpers assume the standard contiguous layout for an
+example-axis array sharded over `axes`: global index ``g`` lives on the
+device with linear id ``g // n_local`` at local offset ``g % n_local``.
+Cross-device reads are one-owner masked psums (the non-owners contribute
+exact zeros, so the combined value is bitwise the owner's row — this is
+what keeps sharded and single-device runs numerically identical).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Axes = tuple
+
+
+def psum(x, axes: Axes):
+    """lax.psum over `axes`; identity when axes is empty."""
+    if not axes:
+        return x
+    return jax.lax.psum(x, axes if len(axes) > 1 else axes[0])
+
+
+def axis_size(ax: str) -> int:
+    """Static size of a mapped axis (psum-of-1 constant-folds on every
+    jax version; jax.lax.axis_size only exists on newer ones)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)
+
+
+def axis_info(axes: Axes) -> tuple[jax.Array, int]:
+    """(linear device id over `axes`, static total device count)."""
+    if not axes:
+        return jnp.zeros((), jnp.int32), 1
+    dev = jnp.zeros((), jnp.int32)
+    n = 1
+    for ax in axes:
+        size = axis_size(ax)
+        dev = dev * size + jax.lax.axis_index(ax)
+        n *= size
+    return dev, n
+
+
+def gather_rows(arrays: Any, idx: jax.Array, axes: Axes) -> Any:
+    """Gather rows at *global* indices `idx` from example-axis-sharded
+    arrays; the result is replicated (identical on every device).
+
+    arrays: pytree whose leaves are local shards with a common leading
+    example axis.  With axes=() this is exactly ``leaf[idx]``.
+    """
+    dev_id, _ = axis_info(axes)
+
+    def one(a):
+        n_local = a.shape[0]
+        lidx = idx - dev_id * n_local
+        mine = (lidx >= 0) & (lidx < n_local)
+        rows = a[jnp.clip(lidx, 0, n_local - 1)]
+        mask = mine.reshape((-1,) + (1,) * (rows.ndim - 1))
+        return psum(jnp.where(mask, rows, jnp.zeros_like(rows)), axes)
+
+    return jax.tree.map(one, arrays)
+
+
+def scatter_rows(array: jax.Array, idx: jax.Array, values: jax.Array,
+                 axes: Axes) -> jax.Array:
+    """Write `values` at *global* indices `idx` into an example-axis-sharded
+    array; each device applies only the writes it owns (others drop)."""
+    dev_id, _ = axis_info(axes)
+    n_local = array.shape[0]
+    lidx = idx - dev_id * n_local
+    mine = (lidx >= 0) & (lidx < n_local)
+    safe = jnp.where(mine, lidx, n_local)  # out of bounds → dropped
+    return array.at[safe].set(values.astype(array.dtype), mode="drop")

@@ -1,0 +1,165 @@
+"""Distributed ISSGD execution: the paper's system shape on a mesh.
+
+Runs the one-code-path step of core/issgd.py under ``shard_map`` on meshes
+from launch/mesh.py:
+
+  * the dataset and the WeightStore (`weights`, `scored_at`) are sharded
+    over the data axes (contiguous blocks of the example dim per device);
+  * each device scores the round-robin slices of the logical scoring
+    shards it owns — the paper's worker fan-out, with zero communication;
+  * sampling is hierarchical two-stage (W block totals shared by one psum
+    of a W-float vector, then within-block resolution by the owner), so no
+    step ever gathers the full f32[N] table — the wire cost per step is
+    W floats + B indices + B proposal rows, the paper's "one float per
+    sample instead of gradients";
+  * parameters stay replicated and the master update is computed
+    redundantly on every device (bitwise-identical), which keeps the
+    sharded run numerically equal to the single-device one.
+
+`launch/train.py --mesh N` is the CLI entry; on CPU it forces N host
+devices via XLA_FLAGS so the whole path is testable without a pod.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.issgd import (ISSGDConfig, StepMetrics, TrainState,
+                              make_score_step, make_train_step)
+from repro.core.weight_store import WeightStore
+from repro.dist import data_axes, shard_map
+from repro.dist.sharding import dim_spec
+
+
+def _dspec(axes: tuple[str, ...]) -> P:
+    return P(dim_spec(axes))
+
+
+def mesh_device_count(mesh: Mesh, axes: Optional[tuple[str, ...]] = None) -> int:
+    axes = data_axes(mesh) if axes is None else axes
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def train_state_pspecs(mesh: Mesh) -> TrainState:
+    """PartitionSpec tree for TrainState: params/opt replicated, the
+    WeightStore sharded over the data axes."""
+    axes = data_axes(mesh)
+    return TrainState(
+        params=P(), opt_state=P(), stale_params=P(),
+        store=WeightStore(weights=_dspec(axes), scored_at=_dspec(axes)),
+        step=P(), rng=P(),
+    )
+
+
+def dataset_pspecs(data: dict, mesh: Mesh) -> dict:
+    """Example-axis sharding for every dataset array."""
+    axes = data_axes(mesh)
+    return {k: P(dim_spec(axes), *([None] * (v.ndim - 1)))
+            for k, v in data.items()}
+
+
+def shard_dataset(data: dict, mesh: Mesh) -> dict:
+    specs = dataset_pspecs(data, mesh)
+    return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
+            for k, v in data.items()}
+
+
+def shard_train_state(state: TrainState, mesh: Mesh) -> TrainState:
+    """Place a TrainState on `mesh`: replicated params, sharded store."""
+    specs = train_state_pspecs(mesh)
+
+    def place(subtree, spec):
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, spec)), subtree)
+
+    return TrainState(
+        params=place(state.params, specs.params),
+        opt_state=place(state.opt_state, specs.opt_state),
+        stale_params=place(state.stale_params, specs.stale_params),
+        store=WeightStore(
+            weights=place(state.store.weights, specs.store.weights),
+            scored_at=place(state.store.scored_at, specs.store.scored_at)),
+        step=place(state.step, specs.step),
+        rng=place(state.rng, specs.rng),
+    )
+
+
+def resolve_score_shards(cfg: ISSGDConfig, mesh: Mesh) -> ISSGDConfig:
+    """Default W to the device count when the config leaves it at 1, and
+    validate divisibility (W must be a multiple of the data-axis size)."""
+    import dataclasses
+    nd = mesh_device_count(mesh)
+    w = cfg.score_shards
+    if w <= 1:
+        return dataclasses.replace(cfg, score_shards=nd)
+    if w % nd:
+        raise ValueError(f"score_shards={w} must be a multiple of the "
+                         f"data-axis device count {nd}")
+    return cfg
+
+
+def make_sharded_train_step(
+    per_example_loss: Callable,
+    scorer: Callable,
+    optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    mesh: Mesh,
+    data_template: dict,
+    aux_loss: Optional[Callable] = None,
+    fused_score: Optional[Callable] = None,
+) -> tuple[Callable, ISSGDConfig]:
+    """The ISSGD step under shard_map over `mesh`.
+
+    Returns (step, cfg) where `step(state, data) -> (state, metrics)` —
+    state/data must be placed with `shard_train_state`/`shard_dataset` —
+    and `cfg` has score_shards resolved against the mesh.  The returned fn
+    is shard_map-wrapped but not jitted; wrap in jax.jit at the call site.
+    """
+    axes = data_axes(mesh)
+    nd = mesh_device_count(mesh, axes)
+    cfg = resolve_score_shards(cfg, mesh)
+    if num_examples % nd:
+        raise ValueError(f"num_examples={num_examples} not divisible by "
+                         f"{nd} devices")
+
+    body = make_train_step(per_example_loss, scorer, optimizer, cfg,
+                           num_examples, aux_loss=aux_loss,
+                           fused_score=fused_score, axes=axes)
+    state_specs = train_state_pspecs(mesh)
+    dspecs = dataset_pspecs(data_template, mesh)
+    metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
+
+    step = shard_map(
+        body, mesh=mesh,
+        in_specs=(state_specs, dspecs),
+        out_specs=(state_specs, metric_specs),
+    )
+    return step, cfg
+
+
+def make_sharded_score_step(
+    scorer: Callable,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    mesh: Mesh,
+    data_template: dict,
+) -> Callable:
+    """The standalone probe/scoring pass under shard_map (fused-mode
+    coverage).  Fully shard-local: compiles to zero collectives."""
+    axes = data_axes(mesh)
+    cfg = resolve_score_shards(cfg, mesh)
+    body = make_score_step(scorer, cfg, num_examples, axes=axes)
+    state_specs = train_state_pspecs(mesh)
+    dspecs = dataset_pspecs(data_template, mesh)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(state_specs, dspecs),
+        out_specs=state_specs,
+    )

@@ -87,14 +87,19 @@ def is_loss_scale(
     return mean_weight / sampled_weights
 
 
-def effective_sample_size(weights: jax.Array) -> jax.Array:
+def effective_sample_size(
+    weights: jax.Array,
+    s1: Optional[jax.Array] = None,
+    s2: Optional[jax.Array] = None,
+) -> jax.Array:
     """Kish ESS of the proposal over the table — a monitoring quantity.
 
     ESS = (Σw)² / Σw².  Equals N for uniform weights; small ESS warns that
-    the proposal is peaked (the B.3 time-bomb regime).
+    the proposal is peaked (the B.3 time-bomb regime).  `s1`/`s2` let
+    distributed callers pass psummed global sums over a sharded table.
     """
-    s1 = jnp.sum(weights)
-    s2 = jnp.sum(jnp.square(weights))
+    s1 = jnp.sum(weights) if s1 is None else s1
+    s2 = jnp.sum(jnp.square(weights)) if s2 is None else s2
     return jnp.square(s1) / jnp.maximum(s2, 1e-30)
 
 

@@ -22,6 +22,20 @@ Modes:
             store is refreshed for those examples at ~zero extra cost.
             Coverage of unsampled examples comes from an optional probe
             step (make_score_step) the launcher runs every K steps.
+
+Distribution (core/distributed.py wires this under shard_map):
+
+The step body is written against `axes`, a tuple of mesh axis names over
+which the dataset, the WeightStore, and the scoring fan-out are sharded.
+`cfg.score_shards` (W) fixes a *logical* decomposition of the table into W
+contiguous scoring shards, independent of the device count: each device
+owns W/num_devices of them, scores a round-robin slice of each per step,
+and sampling is hierarchical (block totals → within-block resolve; see
+core/sampler.py).  Because W — not the mesh — defines the decomposition,
+running with axes=() on one device is bitwise the same algorithm, which is
+what the sharded-equivalence tests pin down.  The full f32[N] table is
+never gathered: the master only ever touches B sampled rows (one-owner
+masked psums) and W block totals.
 """
 from __future__ import annotations
 
@@ -32,10 +46,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import variance
-from repro.core.importance import ISConfig, is_loss_scale
-from repro.core.sampler import sample_indices
+from repro.core.collectives import axis_info, gather_rows, psum
+from repro.core.importance import (ISConfig, effective_sample_size,
+                                   is_loss_scale)
+from repro.core.sampler import two_stage_sample
 from repro.core.weight_store import (WeightStore, init_store, read_proposal,
-                                     write_scores)
+                                     write_scores, write_scores_global)
 from repro.data.pipeline import gather_batch
 from repro.optim import Optimizer, global_norm
 
@@ -45,9 +61,10 @@ class ISSGDConfig:
     batch_size: int = 64
     score_batch_size: int = 256        # examples rescored per step ("workers")
     refresh_every: int = 8             # θ_stale refresh period (param pushes)
-    mode: str = "relaxed"              # relaxed | exact | uniform
+    mode: str = "relaxed"              # relaxed | exact | uniform | fused
     is_cfg: ISConfig = ISConfig()
     grad_clip: float = 0.0
+    score_shards: int = 1              # W: logical scoring shards (mesh-free)
 
 
 class TrainState(NamedTuple):
@@ -83,6 +100,34 @@ def init_train_state(params, optimizer: Optimizer, num_examples: int,
     )
 
 
+def _resolve_shards(cfg: ISSGDConfig, num_examples: int, sb: int,
+                    n_local: int, n_dev: int) -> tuple[int, int, int]:
+    """(w_loc, n_w, sb_w): per-device logical shards, shard length, and
+    per-shard scoring slice — validated against the static shapes."""
+    w = max(cfg.score_shards, 1)
+    if w % n_dev:
+        raise ValueError(f"score_shards={w} must be divisible by the "
+                         f"device count {n_dev}")
+    if num_examples % w:
+        raise ValueError(f"num_examples={num_examples} not divisible by "
+                         f"score_shards={w}")
+    if sb % w:
+        raise ValueError(f"score_batch_size={sb} not divisible by "
+                         f"score_shards={w}")
+    if n_local * n_dev != num_examples:
+        raise ValueError(f"store shard of {n_local} rows × {n_dev} devices "
+                         f"≠ num_examples={num_examples}")
+    w_loc = w // n_dev
+    return w_loc, n_local // w_loc, sb // w
+
+
+def _score_slice(step: jax.Array, w_loc: int, n_w: int, sb_w: int) -> jax.Array:
+    """Local indices of this step's round-robin scoring slice: each of the
+    device's `w_loc` logical shards contributes `sb_w` examples."""
+    base = (step * sb_w + jnp.arange(sb_w)) % n_w            # (sb_w,)
+    return (jnp.arange(w_loc)[:, None] * n_w + base[None, :]).reshape(-1)
+
+
 def make_train_step(
     per_example_loss: Callable,     # (params, batch) -> (B,) losses
     scorer: Callable,               # (params, batch) -> (B,) ω̃ (grad norms)
@@ -94,10 +139,10 @@ def make_train_step(
     # (losses (B,), scores (B,)); required for mode="fused" — the training
     # forward emits its own importance scores (paper §6 direction)
     constrain_batch: Optional[Callable] = None,  # batch -> batch with
-    # sharding constraints; SPMD launchers pass one so the gathered
-    # minibatch is batch-sharded over the data axes (the dataset gather
-    # otherwise leaves the batch replicated and every chip computes all
-    # examples)
+    # sharding constraints; jit-partitioned launchers (dryrun) pass one so
+    # the gathered minibatch is batch-sharded over the data axes
+    axes: tuple[str, ...] = (),     # mesh axes the example dim is sharded
+    # over when the step runs inside shard_map; () = single-device
 ) -> Callable:
     """Build the fused ISSGD step: (state, dataset_arrays) -> (state, metrics)."""
     is_cfg = cfg.is_cfg
@@ -107,21 +152,22 @@ def make_train_step(
         raise ValueError("mode='fused' requires fused_score")
     if constrain_batch is None:
         constrain_batch = lambda b: b
+    axes = tuple(axes)
 
     def train_step(state: TrainState, data: dict) -> tuple[TrainState, StepMetrics]:
         rng, k_sample = jax.random.split(state.rng)
         step = state.step
+        _, n_dev = axis_info(axes)
+        n_local = state.store.weights.shape[0]
+        w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
 
-        # ---- 1. scoring pass (the "workers") --------------------------------
+        # ---- 1. scoring fan-out (the "workers"), shard-local -----------------
         if cfg.mode == "fused":
             store = state.store   # scores arrive from the train fwd below
         else:
-            if cfg.mode == "exact":
-                score_idx = jnp.arange(n)
-                score_params = state.params      # barriers on: fresh params
-            else:
-                score_idx = (step * sb + jnp.arange(sb)) % n
-                score_params = state.stale_params
+            score_params = (state.params if cfg.mode == "exact"
+                            else state.stale_params)
+            score_idx = _score_slice(step, w_loc, n_w, sb_w)
             score_batch = constrain_batch(gather_batch(data, score_idx))
             fresh_scores = scorer(score_params, score_batch)
             # stale view of the slice BEFORE the write (for eq. 9 monitor)
@@ -129,19 +175,27 @@ def make_train_step(
             stale_slice = pre_proposal[score_idx]
             store = write_scores(state.store, score_idx, fresh_scores, step)
 
-        # ---- 2. master reads the proposal (B.1 + B.3) -----------------------
+        # ---- 2. master reads the proposal (B.1 + B.3), shard-local -----------
         proposal = read_proposal(store, step, is_cfg)
+        sum_w = psum(jnp.sum(proposal), axes)
+        mean_weight = sum_w / n
 
-        # ---- 3. compose the minibatch ---------------------------------------
+        # ---- 3. compose the minibatch (two-stage sample + one-owner gather) --
         if cfg.mode == "uniform":
             idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
             scales = jnp.ones((cfg.batch_size,), jnp.float32)
         else:
-            idx = sample_indices(k_sample, proposal, cfg.batch_size)
-            scales = is_loss_scale(proposal[idx], jnp.mean(proposal))
-        batch = constrain_batch(gather_batch(data, idx))
+            idx = two_stage_sample(k_sample, proposal, cfg.batch_size,
+                                   axes=axes, shards_per_device=w_loc)
+            sampled_w = gather_rows(proposal, idx, axes)
+            scales = is_loss_scale(sampled_w, mean_weight)
+        batch = constrain_batch(gather_rows(data, idx, axes))
 
         # ---- 4. unbiased IS-scaled update (§4.1) ----------------------------
+        # The gathered minibatch is replicated; every device computes the
+        # identical master update (the paper's single master, SPMD-style) —
+        # the parallelism win is the scoring fan-out above, which is the
+        # dominant cost (score_batch_size ≫ batch_size).
         def loss_fn(params):
             if cfg.mode == "fused":
                 losses, scores = fused_score(params, batch)
@@ -162,9 +216,9 @@ def make_train_step(
             # trace_stale is biased upward (high-weight examples are
             # over-represented); use the probe step's uniform slices for
             # faithful monitoring in fused mode.
-            score_idx, fresh_scores = idx, batch_scores
-            stale_slice = proposal[idx]
-            store = write_scores(store, idx, fresh_scores, step)
+            fresh_scores = batch_scores
+            stale_slice = sampled_w  # proposal at idx, already gathered
+            store = write_scores_global(store, idx, batch_scores, step, axes)
         gnorm = global_norm(grads)
         if cfg.grad_clip > 0:
             from repro.optim import clip_by_global_norm
@@ -183,18 +237,21 @@ def make_train_step(
 
         # ---- 6. paper fig. 4 monitors over the scored slice ------------------
         # ||g_TRUE||² upper bound (B.2): the minibatch gradient norm
-        tr_ideal = variance.trace_sigma_ideal(fresh_scores)
-        tr_stale = variance.trace_sigma(fresh_scores, stale_slice)
-        tr_unif = variance.trace_sigma_unif(fresh_scores)
-        from repro.core.importance import effective_sample_size
-        ess = effective_sample_size(proposal) / n
+        if cfg.mode == "fused":
+            # replicated minibatch slice: no psum (it would double-count)
+            traces = variance.trace_sigma_all(fresh_scores, stale_slice)
+        else:
+            traces = variance.trace_sigma_all_dist(fresh_scores, stale_slice,
+                                                   axes, n_total=sb)
+        sum_w2 = psum(jnp.sum(jnp.square(proposal)), axes)
+        ess = effective_sample_size(proposal, s1=sum_w, s2=sum_w2) / n
 
         metrics = StepMetrics(
             loss=loss, grad_norm=gnorm,
-            trace_ideal=jnp.sqrt(jnp.maximum(tr_ideal, 0.0)),
-            trace_stale=jnp.sqrt(jnp.maximum(tr_stale, 0.0)),
-            trace_unif=jnp.sqrt(jnp.maximum(tr_unif, 0.0)),
-            ess_frac=ess, mean_weight=jnp.mean(proposal),
+            trace_ideal=jnp.sqrt(jnp.maximum(traces.ideal, 0.0)),
+            trace_stale=jnp.sqrt(jnp.maximum(traces.stale, 0.0)),
+            trace_unif=jnp.sqrt(jnp.maximum(traces.unif, 0.0)),
+            ess_frac=ess, mean_weight=mean_weight,
             sample_indices=idx,
         )
         new_state = TrainState(params, opt_state, stale_params, store,
@@ -209,18 +266,24 @@ def make_score_step(
     cfg: ISSGDConfig,
     num_examples: int,
     constrain_batch: Optional[Callable] = None,
+    axes: tuple[str, ...] = (),
 ) -> Callable:
     """Standalone probe/scoring step: rescore a round-robin slice with the
     workers' stale params and push to the store.  Used (a) by the fused
     mode to keep coverage of unsampled examples, and (b) to amortize
-    scoring over K train steps (the B.1 staleness/throughput trade)."""
+    scoring over K train steps (the B.1 staleness/throughput trade).
+    Shard-local end to end: no collectives at all."""
     n = num_examples
     sb = cfg.score_batch_size
     if constrain_batch is None:
         constrain_batch = lambda b: b
+    axes = tuple(axes)
 
     def score_step(state: TrainState, data: dict) -> TrainState:
-        score_idx = (state.step * sb + jnp.arange(sb)) % n
+        _, n_dev = axis_info(axes)
+        n_local = state.store.weights.shape[0]
+        w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
+        score_idx = _score_slice(state.step, w_loc, n_w, sb_w)
         batch = constrain_batch(gather_batch(data, score_idx))
         scores = scorer(state.stale_params, batch)
         store = write_scores(state.store, score_idx, scores, state.step)

@@ -1,17 +1,22 @@
-"""Multinomial (with replacement) sampling from the weight table.
+"""Hierarchical multinomial (with replacement) sampling from the ω̃ table.
 
-Single-host path: inverse-CDF via cumsum + searchsorted — O(N + M log N),
-no M×N Gumbel matrix.
+One algorithm for every scale (the paper's "workers communicate one float
+per sample instead of gradients", expressed as a fixed two-stage draw):
 
-Distributed path (`shard_sample`): the table is sharded over the data axes.
-Each shard computes its local weight sum; an all-gather of the (tiny) shard
-sums gives every shard the global CDF *over shards*; each of the M global
-uniform draws lands in exactly one shard, which resolves it against its
-local CDF.  The resolved global indices are combined with a psum (each draw
-is claimed by exactly one shard, all others contribute 0).  Communication:
-one all-gather of `num_shards` floats + one psum of M ints — this is the
-TPU translation of the paper's "workers communicate one float per sample
-instead of gradients".
+  1. the table is divided into W *logical scoring shards* (contiguous
+     blocks); every device owns W/num_devices of them.  Each block's weight
+     mass is summed locally and the W block totals are shared with one
+     psum of a W-float vector;
+  2. each of the M global uniform draws picks a block via the (tiny) block
+     CDF, then resolves within the winning block against that block's local
+     CDF.  The owning device claims the draw; a psum of the one-owner masks
+     combines the M global indices.
+
+Because the block decomposition is fixed by W — NOT by the device count —
+the arithmetic is bitwise identical for any mesh size that divides W:
+single-device execution (axes=()) is the mesh-size-1 special case of the
+sharded path, not a separate code path.  No step ever materializes the
+full f32[N] table on one device.
 """
 from __future__ import annotations
 
@@ -19,19 +24,85 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.collectives import axis_info, psum
+
+
+def two_stage_sample(
+    key: jax.Array,
+    local_weights: jax.Array,
+    num_samples: int,
+    axes: tuple[str, ...] = (),
+    shards_per_device: int = 1,
+) -> jax.Array:
+    """Draw `num_samples` global indices ∝ the sharded, unnormalized table.
+
+    local_weights: this device's (n_local,) slice, viewed as
+    `shards_per_device` contiguous logical blocks.  Every device receives
+    the same `key` and returns the same replicated i32[M] global indices.
+    """
+    w_loc = shards_per_device
+    n_local = local_weights.shape[0]
+    if n_local % w_loc:
+        raise ValueError(f"local table size {n_local} not divisible by "
+                         f"{w_loc} logical shards")
+    n_w = n_local // w_loc
+    dev_id, n_dev = axis_info(axes)
+    num_shards = w_loc * n_dev
+
+    # f64 tables keep their precision through the CDFs (large-N callers)
+    ctype = (jnp.float64 if local_weights.dtype == jnp.float64
+             else jnp.float32)
+    blocks = local_weights.astype(ctype).reshape(w_loc, n_w)
+    block_sums = jnp.sum(blocks, axis=1)                     # (w_loc,)
+    first = dev_id * w_loc
+    sums = jax.lax.dynamic_update_slice(
+        jnp.zeros((num_shards,), ctype), block_sums, (first,))
+    sums = psum(sums, axes)                                  # (W,) everywhere
+
+    shard_cdf = jnp.cumsum(sums)
+    total = shard_cdf[-1]
+    shard_starts = shard_cdf - sums
+
+    # Same key on every device → identical global draws.
+    u = jax.random.uniform(key, (num_samples,), ctype) * total
+
+    owner = jnp.clip(jnp.searchsorted(shard_cdf, u, side="right"),
+                     0, num_shards - 1)
+    mine = (owner >= first) & (owner < first + w_loc)
+    lb = jnp.clip(owner - first, 0, w_loc - 1)
+
+    # Resolve within the winning block (mesh-invariant: block CDF + global
+    # block start only — never a cross-block flattened CDF).  Vectorized
+    # bisect_right over (block, u) pairs: O(M·log n_w) scalar gathers,
+    # never an (M, n_w) gathered-CDF intermediate; the result is the exact
+    # searchsorted count, so the algorithm change is bitwise-invisible.
+    block_cdf = jnp.cumsum(blocks, axis=1)                   # (w_loc, n_w)
+    local_u = u - shard_starts[owner]
+    lo = jnp.zeros(u.shape, jnp.int32)
+    hi = jnp.full(u.shape, n_w, jnp.int32)
+    for _ in range(max(n_w.bit_length(), 1)):
+        mid = (lo + hi) // 2
+        go_right = block_cdf[lb, mid] <= local_u             # side="right"
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    pos = jnp.clip(lo, 0, n_w - 1)
+
+    gidx = dev_id * n_local + lb * n_w + pos
+    gidx = psum(jnp.where(mine, gidx, 0), axes)
+    return gidx.astype(jnp.int32)
+
 
 def sample_indices(
     key: jax.Array,
     weights: jax.Array,
     num_samples: int,
+    num_shards: int = 1,
 ) -> jax.Array:
-    """Multinomial-with-replacement over unnormalized `weights` (host path)."""
-    cdf = jnp.cumsum(weights.astype(jnp.float64) if weights.dtype == jnp.float64
-                     else weights.astype(jnp.float32))
-    total = cdf[-1]
-    u = jax.random.uniform(key, (num_samples,), dtype=cdf.dtype) * total
-    idx = jnp.searchsorted(cdf, u, side="right")
-    return jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)
+    """Host-path multinomial: the axes=() special case of the two-stage
+    draw.  `num_shards` controls the logical block decomposition (must
+    match the distributed run it is being compared against)."""
+    return two_stage_sample(key, weights, num_samples, axes=(),
+                            shards_per_device=num_shards)
 
 
 def shard_sample(
@@ -40,62 +111,20 @@ def shard_sample(
     num_samples: int,
     axis_names: tuple[str, ...],
 ) -> jax.Array:
-    """SPMD body (call inside shard_map): sample M global indices from the
-    sharded table.  Every shard receives the same `key` and returns the same
-    M global indices (replicated output).
-
-    axis_names: mesh axes the table's example-dim is sharded over, e.g.
-    ("pod", "data") or ("data",).
-    """
-    n_local = local_weights.shape[0]
-    local_sum = jnp.sum(local_weights, dtype=jnp.float32)
-
-    # Flatten the (possibly multi-axis) shard grid into a linear shard id.
-    shard_id = jnp.zeros((), jnp.int32)
-    num_shards = 1
-    for ax in axis_names:
-        size = jax.lax.axis_size(ax)
-        shard_id = shard_id * size + jax.lax.axis_index(ax)
-        num_shards *= size
-
-    # All shards learn all shard sums (num_shards floats).
-    contrib = jnp.zeros((num_shards,), jnp.float32).at[shard_id].set(local_sum)
-    shard_sums = contrib
-    for ax in axis_names:
-        shard_sums = jax.lax.psum(shard_sums, ax)
-
-    shard_cdf = jnp.cumsum(shard_sums)
-    total = shard_cdf[-1]
-    shard_starts = shard_cdf - shard_sums  # prefix of weight mass per shard
-
-    # Same key on every shard → identical global draws.
-    u = jax.random.uniform(key, (num_samples,), jnp.float32) * total
-
-    # Which shard owns each draw?
-    owner = jnp.searchsorted(shard_cdf, u, side="right")
-    owner = jnp.clip(owner, 0, num_shards - 1)
-    mine = owner == shard_id
-
-    # Resolve *all* draws against the local CDF (masked later).
-    local_cdf = jnp.cumsum(local_weights.astype(jnp.float32))
-    local_u = u - shard_starts[owner]
-    local_idx = jnp.searchsorted(local_cdf, local_u, side="right")
-    local_idx = jnp.clip(local_idx, 0, n_local - 1)
-
-    global_idx = jnp.where(mine, local_idx + shard_id * n_local, 0)
-    for ax in axis_names:
-        global_idx = jax.lax.psum(global_idx, ax)
-    return global_idx.astype(jnp.int32)
+    """SPMD body (call inside shard_map): one logical shard per device."""
+    return two_stage_sample(key, local_weights, num_samples,
+                            axes=tuple(axis_names), shards_per_device=1)
 
 
 def make_distributed_sampler(mesh, table_axes: tuple[str, ...]):
-    """Wrap `shard_sample` in a shard_map over `mesh`.
+    """Wrap the two-stage draw in a shard_map over `mesh`.
 
     Returns fn(key, weights_sharded, num_samples) -> replicated i32[M].
     """
-    shard_map = jax.shard_map
+    from repro.dist import shard_map
+    from repro.dist.sharding import dim_spec
 
-    table_spec = P(table_axes)
+    table_spec = P(dim_spec(table_axes))
 
     def sampler(key, weights, num_samples: int):
         def body(key, local_w):
@@ -106,7 +135,6 @@ def make_distributed_sampler(mesh, table_axes: tuple[str, ...]):
             mesh=mesh,
             in_specs=(P(), table_spec),
             out_specs=P(),
-            check_vma=False,
         )(key, weights)
 
     return sampler

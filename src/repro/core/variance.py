@@ -81,6 +81,31 @@ def trace_sigma_all(
     )
 
 
+def trace_sigma_all_dist(
+    grad_norms: jax.Array,
+    stale_weights: jax.Array,
+    axes: tuple[str, ...],
+    n_total: jax.Array | int,
+    g_true_sq: jax.Array | float = 0.0,
+) -> TraceSigma:
+    """Figure-4 monitors over a *sharded* scored slice: shard-local partial
+    sums are psummed over `axes` before the eq. 6-9 formulas.  With
+    axes=() this equals `trace_sigma_all` on the full arrays."""
+    from repro.core.collectives import psum
+    g = grad_norms.astype(jnp.float32)
+    w = stale_weights.astype(jnp.float32)
+    n = jnp.asarray(n_total, jnp.float32)
+    sum_g = psum(jnp.sum(g), axes)
+    sum_g2 = psum(jnp.sum(jnp.square(g)), axes)
+    sum_w = psum(jnp.sum(w), axes)
+    sum_ratio = psum(jnp.sum(jnp.square(g) / jnp.maximum(w, 1e-30)), axes)
+    return TraceSigma(
+        ideal=jnp.square(sum_g / n) - g_true_sq,
+        stale=(sum_w / n) * (sum_ratio / n) - g_true_sq,
+        unif=sum_g2 / n - g_true_sq,
+    )
+
+
 def g_true_sq_upper_bound(minibatch_mean_grad_norms: jax.Array) -> jax.Array:
     """B.2: average of per-minibatch mean-gradient norms, squared.
 

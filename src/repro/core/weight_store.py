@@ -51,6 +51,26 @@ def write_scores(
     )
 
 
+def write_scores_global(
+    store: WeightStore,
+    global_indices: jax.Array,
+    scores: jax.Array,
+    step: jax.Array | int,
+    axes: tuple[str, ...] = (),
+) -> WeightStore:
+    """Push fresh ω̃ at *global* indices into an example-axis-sharded store:
+    each device applies the writes it owns, the rest drop (the fused mode's
+    replicated minibatch scores land on whichever shard holds each row).
+    With axes=() this is exactly `write_scores`."""
+    from repro.core.collectives import scatter_rows
+    step = jnp.broadcast_to(jnp.asarray(step, jnp.int32),
+                            global_indices.shape)
+    return WeightStore(
+        weights=scatter_rows(store.weights, global_indices, scores, axes),
+        scored_at=scatter_rows(store.scored_at, global_indices, step, axes),
+    )
+
+
 def read_proposal(
     store: WeightStore,
     step: jax.Array | int,

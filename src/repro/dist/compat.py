@@ -1,0 +1,21 @@
+"""shard_map across jax versions.
+
+Newer jax exposes `jax.shard_map` (with `check_vma`); the 0.4.x line only
+has `jax.experimental.shard_map.shard_map` (with `check_rep`).  Every SPMD
+module goes through this wrapper so the call sites stay uniform.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_rep)
+        except TypeError:
+            pass  # older signature without check_vma
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_rep)

@@ -1,0 +1,41 @@
+"""Activation-sharding context.
+
+Model code calls :func:`constrain_batch_dim` on the residual stream so the
+SPMD partitioner keeps activations batch-sharded over the data axes instead
+of replicating them.  Outside a launcher-installed context it is a no-op,
+which is what lets the same forward run un-meshed in unit tests.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STACK: list = []
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, batch_axes):
+    """Install (mesh, batch_axes) for constrain_batch_dim inside the body."""
+    _STACK.append((mesh, tuple(batch_axes) if batch_axes else ()))
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def constrain_batch_dim(h: jax.Array) -> jax.Array:
+    """Shard the leading (batch) dim of `h` over the active batch axes."""
+    if not _STACK:
+        return h
+    mesh, axes = _STACK[-1]
+    if not axes:
+        return h
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if h.shape[0] % total != 0:
+        return h
+    spec = P(axes if len(axes) > 1 else axes[0], *([None] * (h.ndim - 1)))
+    return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, spec))

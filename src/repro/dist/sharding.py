@@ -1,0 +1,78 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Layer ``specs_*`` functions annotate every parameter with *logical* axis
+names (``("embed", "heads")`` …).  This module maps those names onto the
+physical mesh: tensor-parallel axes go to ``model``, everything else is
+replicated, and any dimension that does not divide its mesh axis falls back
+to replication (uneven vocab, odd head counts in smoke configs).
+
+Stacked layer parameters (the scan-over-periods leading axis) carry one
+more array dimension than their logical spec; the extra leading dims are
+replicated (``None``), which is what keeps one spec tree valid for both the
+per-layer and the period-stacked trees.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+# Logical-name → preferred mesh axis.  `None` = always replicate.
+_RULES = {
+    "embed": None,      # activations/residual dim: replicated (data-parallel)
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "ffn": "model",
+    "inner": "model",   # mamba expanded inner dim
+    "rank": None,       # MLA latent rank: small, replicated
+    "expert": None,     # expert axis: replicated (ffn dim inside is sharded)
+}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of `mesh` (everything but `model`)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dim_spec(axes: tuple[str, ...]):
+    """The PartitionSpec entry sharding ONE dim over `axes`: the bare axis
+    name for a single axis, the tuple for several (P-element convention)."""
+    return axes if len(axes) > 1 else axes[0]
+
+
+def rules_for(mesh: Mesh) -> dict:
+    """The logical→mesh rules restricted to axes that exist in `mesh`."""
+    names = set(mesh.axis_names)
+    return {k: (v if v in names else None) for k, v in _RULES.items()}
+
+
+def logical_to_pspec(logical: tuple, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter.
+
+    `logical` annotates the TRAILING dims of `shape`; leading unannotated
+    dims (the stacked period axis) are replicated.  A mesh axis is used at
+    most once per spec and only when it divides the dimension.
+    """
+    rules = rules_for(mesh)
+    offset = len(shape) - len(logical)
+    if offset < 0:
+        raise ValueError(f"spec {logical} longer than shape {shape}")
+    parts: list = [None] * offset
+    used: set = set()
+    for name, dim in zip(logical, shape[offset:]):
+        ax = rules.get(name) if name is not None else None
+        if (ax is None or ax in used or dim % mesh.shape[ax] != 0):
+            parts.append(None)
+        else:
+            parts.append(ax)
+            used.add(ax)
+    return P(*parts)
+
+
+def param_pspecs(specs, params, mesh: Mesh):
+    """Map a logical-spec tree (tuple leaves) + matching param tree (array
+    or ShapeDtypeStruct leaves) to a tree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda lg, p: logical_to_pspec(lg, p.shape, mesh),
+        specs, params,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, P))

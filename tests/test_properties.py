@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # CI installs it; skip cleanly where absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.importance import ISConfig, is_loss_scale, smooth_weights
