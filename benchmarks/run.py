@@ -98,6 +98,12 @@ def _sharded_scaling():
     return sharded_scaling()
 
 
+@bench("async_overlap")
+def _async_overlap():
+    from benchmarks.async_overlap import async_overlap
+    return async_overlap()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")

@@ -1,0 +1,199 @@
+"""Async scoring pipeline: overlap the worker fan-out with the master update.
+
+The paper's workers are "fire and forget" (§4, fig. 1): they push scores at
+whatever cadence they manage while the master updates without waiting.  The
+fused step of core/issgd.py serializes the two — step t's master samples
+from a proposal that already includes step t's scoring writes.  This module
+splits that step into two independently dispatched computations coordinated
+through the double-buffered WeightStore (core/weight_store.py):
+
+  scoring_step  the shard-local fan-out: rescore this step's round-robin
+                slice with θ_stale and write into ``write_buf`` (donated,
+                so XLA updates the table shard in place);
+  master_step   proposal read from ``read_buf`` → two-stage sample →
+                IS-scaled unbiased update (§4.1).  Never touches write_buf.
+
+Nothing in master_step's dataflow depends on the same step's scoring_step
+(they share no buffers), so JAX async dispatch queues both and the runtime
+is free to overlap them — on a mesh the scoring fan-out is shard-local
+while the master update is replicated.  The only sync point is the buffer
+swap (``weight_store.publish``) every ``swap_every`` steps.
+
+Invariant (pinned in tests/test_async.py): an async run with swap cadence K
+is bitwise a relaxed-mode run whose proposal is L(t) = t − K·⌊t/K⌋ + 1
+steps staler — the master at step t samples from the table as written
+through step K·⌊t/K⌋ − 1.  Unbiasedness (§4.1) is untouched because the
+IS loss scales are computed from the same lagged proposal the sampler drew
+from; the lag is observable through ``read_buf.scored_at``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import variance
+from repro.core.issgd import (ISSGDConfig, StepMetrics, TrainState,
+                              init_train_state, make_master_pass,
+                              make_scoring_pass)
+from repro.core.weight_store import (BufferedWeightStore, publish,
+                                     to_buffered)
+from repro.optim import Optimizer
+
+
+class ScoreMetrics(NamedTuple):
+    """Fig-4 trace monitors, emitted by the scoring step (the master can't
+    compute them in async mode without waiting on the fresh scores)."""
+    trace_ideal: jax.Array
+    trace_stale: jax.Array
+    trace_unif: jax.Array
+
+
+def make_async_steps(
+    per_example_loss: Callable,
+    scorer: Callable,
+    optimizer: Optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    aux_loss: Optional[Callable] = None,
+    constrain_batch: Optional[Callable] = None,
+    axes: tuple[str, ...] = (),
+    monitor_traces: bool = True,
+) -> tuple[Callable, Callable]:
+    """Build the two independently dispatched bodies of the async pipeline.
+
+    Returns ``(scoring_step, master_step)``:
+
+      scoring_step(stale_params, write_buf, step, data)
+          -> (write_buf', ScoreMetrics)
+      master_step(params, opt_state, stale_params, read_buf, step, rng, data)
+          -> (params', opt_state', stale_params', step + 1, rng', StepMetrics)
+
+    With ``monitor_traces=False`` the scoring step skips the fig-4 trace
+    psums and stays collective-free (NaN monitors); the master's metrics
+    always carry NaN traces — AsyncPipeline merges the scoring step's in.
+    """
+    if cfg.mode not in ("relaxed", "uniform"):
+        raise ValueError(
+            "async scoring supports mode='relaxed'/'uniform' (exact needs "
+            "the fig-1 sync barrier; fused already merges the passes), got "
+            f"{cfg.mode!r}")
+    axes = tuple(axes)
+    scoring_pass = make_scoring_pass(scorer, cfg, num_examples,
+                                     constrain_batch, axes)
+    master_pass = make_master_pass(per_example_loss, optimizer, cfg,
+                                   num_examples, aux_loss=aux_loss,
+                                   constrain_batch=constrain_batch, axes=axes)
+    sb = cfg.score_batch_size
+
+    def scoring_step(stale_params, write_buf, step, data):
+        store, fresh_scores, stale_slice = scoring_pass(
+            stale_params, write_buf, step, data)
+        if monitor_traces:
+            traces = variance.trace_sigma_all_dist(fresh_scores, stale_slice,
+                                                   axes, n_total=sb)
+            smetrics = ScoreMetrics(
+                trace_ideal=jnp.sqrt(jnp.maximum(traces.ideal, 0.0)),
+                trace_stale=jnp.sqrt(jnp.maximum(traces.stale, 0.0)),
+                trace_unif=jnp.sqrt(jnp.maximum(traces.unif, 0.0)))
+        else:
+            nan = jnp.full((), jnp.nan, jnp.float32)
+            smetrics = ScoreMetrics(nan, nan, nan)
+        return store, smetrics
+
+    def master_step(params, opt_state, stale_params, read_buf, step, rng,
+                    data):
+        rng, k_sample = jax.random.split(rng)
+        params, opt_state, stale_params, _, metrics = master_pass(
+            params, opt_state, stale_params, read_buf, step, k_sample, data)
+        return params, opt_state, stale_params, step + 1, rng, metrics
+
+    return scoring_step, master_step
+
+
+class AsyncPipeline:
+    """Host-side driver: dispatches the fan-out and the master update as
+    independent computations and runs the swap cadence.
+
+    ``step(state, data)`` expects a TrainState whose ``store`` is a
+    BufferedWeightStore (see ``init_async_state`` / ``to_buffered``).  The
+    scoring step is dispatched first — fire and forget — then the master;
+    async dispatch returns before either executes, and because the master's
+    inputs never include write_buf the runtime can overlap the two.  Every
+    ``swap_every`` steps the freshly written table is published to read_buf
+    (the only sync point between the streams).
+
+    A pipeline instance is per-run: the swap cadence rides on a host-side
+    call counter (initialized from the first state's step), so driving a
+    second, reset TrainState through the same instance phase-shifts the
+    swaps when swap_every > 1.
+    """
+
+    def __init__(self, scoring_step: Callable, master_step: Callable,
+                 swap_every: int = 1, *, jit: bool = True,
+                 donate: bool = True):
+        if swap_every < 1:
+            raise ValueError(f"swap_every must be >= 1, got {swap_every}")
+        if jit:
+            # donate write_buf: the table shard is updated in place
+            scoring_step = jax.jit(
+                scoring_step, donate_argnums=(1,) if donate else ())
+            master_step = jax.jit(master_step)
+        self._scoring = scoring_step
+        self._master = master_step
+        self.swap_every = int(swap_every)
+        self._t: Optional[int] = None  # host-side step counter (swap cadence)
+
+    def step(self, state: TrainState, data: dict
+             ) -> tuple[TrainState, StepMetrics]:
+        if self._t is None:
+            self._t = int(state.step)   # one host sync, at startup only
+        bs: BufferedWeightStore = state.store
+        write_buf, smetrics = self._scoring(state.stale_params, bs.write_buf,
+                                            state.step, data)
+        params, opt_state, stale_params, step, rng, metrics = self._master(
+            state.params, state.opt_state, state.stale_params, bs.read_buf,
+            state.step, state.rng, data)
+        self._t += 1
+        bs = BufferedWeightStore(bs.read_buf, write_buf, bs.synced_at)
+        if self._t % self.swap_every == 0:
+            # stamp with the device-side step (the writes just published run
+            # through state.step) — correct even if the pipeline is reused
+            # with a fresh TrainState; only the swap *cadence* rides on the
+            # host counter, which is why a pipeline instance is per-run.
+            bs = publish(bs, state.step)
+        metrics = metrics._replace(trace_ideal=smetrics.trace_ideal,
+                                   trace_stale=smetrics.trace_stale,
+                                   trace_unif=smetrics.trace_unif)
+        new_state = TrainState(params, opt_state, stale_params, bs, step, rng)
+        return new_state, metrics
+
+
+def make_async_pipeline(
+    per_example_loss: Callable,
+    scorer: Callable,
+    optimizer: Optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    swap_every: int = 1,
+    aux_loss: Optional[Callable] = None,
+    constrain_batch: Optional[Callable] = None,
+    axes: tuple[str, ...] = (),
+    monitor_traces: bool = True,
+    jit: bool = True,
+) -> AsyncPipeline:
+    """Single-call constructor for the (single-device) async pipeline."""
+    scoring_step, master_step = make_async_steps(
+        per_example_loss, scorer, optimizer, cfg, num_examples,
+        aux_loss=aux_loss, constrain_batch=constrain_batch, axes=axes,
+        monitor_traces=monitor_traces)
+    return AsyncPipeline(scoring_step, master_step, swap_every, jit=jit)
+
+
+def init_async_state(params, optimizer: Optimizer, num_examples: int,
+                     seed: int = 0) -> TrainState:
+    """TrainState for the async pipeline: plain init with the store wrapped
+    into a BufferedWeightStore (both buffers cold)."""
+    state = init_train_state(params, optimizer, num_examples, seed=seed)
+    return state._replace(store=to_buffered(state.store))

@@ -75,10 +75,18 @@ def gather_rows(arrays: Any, idx: jax.Array, axes: Axes) -> Any:
 def scatter_rows(array: jax.Array, idx: jax.Array, values: jax.Array,
                  axes: Axes) -> jax.Array:
     """Write `values` at *global* indices `idx` into an example-axis-sharded
-    array; each device applies only the writes it owns (others drop)."""
+    array; each device applies only the writes it owns (others drop).
+
+    Duplicate indices follow **last-write-wins** semantics: fused-mode
+    minibatches sample with replacement, and XLA's scatter leaves the order
+    of colliding updates unspecified, so every occurrence except the last is
+    dropped before the scatter (deterministic on every backend)."""
     dev_id, _ = axis_info(axes)
     n_local = array.shape[0]
     lidx = idx - dev_id * n_local
     mine = (lidx >= 0) & (lidx < n_local)
-    safe = jnp.where(mine, lidx, n_local)  # out of bounds → dropped
+    # i-th write survives only if no j > i targets the same index
+    dup_later = jnp.triu(idx[:, None] == idx[None, :], k=1)
+    is_last = ~jnp.any(dup_later, axis=1)
+    safe = jnp.where(mine & is_last, lidx, n_local)  # out of bounds → dropped
     return array.at[safe].set(values.astype(array.dtype), mode="drop")

@@ -29,13 +29,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.issgd import (ISSGDConfig, StepMetrics, TrainState,
                               make_score_step, make_train_step)
-from repro.core.weight_store import WeightStore
+from repro.core.weight_store import BufferedWeightStore, WeightStore
 from repro.dist import data_axes, shard_map
 from repro.dist.sharding import dim_spec
 
 
 def _dspec(axes: tuple[str, ...]) -> P:
     return P(dim_spec(axes))
+
+
+def _store_pspec(axes: tuple[str, ...]) -> WeightStore:
+    return WeightStore(weights=_dspec(axes), scored_at=_dspec(axes))
 
 
 def mesh_device_count(mesh: Mesh, axes: Optional[tuple[str, ...]] = None) -> int:
@@ -48,11 +52,14 @@ def mesh_device_count(mesh: Mesh, axes: Optional[tuple[str, ...]] = None) -> int
 
 def train_state_pspecs(mesh: Mesh) -> TrainState:
     """PartitionSpec tree for TrainState: params/opt replicated, the
-    WeightStore sharded over the data axes."""
+    WeightStore sharded over the data axes.  (Async states carry a
+    BufferedWeightStore instead — `shard_train_state` places those via
+    `_place_store`; the async step functions take the individual buffers,
+    never the whole state, so no buffered spec tree is needed.)"""
     axes = data_axes(mesh)
     return TrainState(
         params=P(), opt_state=P(), stale_params=P(),
-        store=WeightStore(weights=_dspec(axes), scored_at=_dspec(axes)),
+        store=_store_pspec(axes),
         step=P(), rng=P(),
     )
 
@@ -70,8 +77,24 @@ def shard_dataset(data: dict, mesh: Mesh) -> dict:
             for k, v in data.items()}
 
 
+def _place_store(store, mesh: Mesh, axes: tuple[str, ...]):
+    """Place a (possibly double-buffered) WeightStore on `mesh`."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    if isinstance(store, BufferedWeightStore):
+        return BufferedWeightStore(
+            read_buf=_place_store(store.read_buf, mesh, axes),
+            write_buf=_place_store(store.write_buf, mesh, axes),
+            synced_at=put(store.synced_at, P()))
+    return WeightStore(weights=put(store.weights, _dspec(axes)),
+                       scored_at=put(store.scored_at, _dspec(axes)))
+
+
 def shard_train_state(state: TrainState, mesh: Mesh) -> TrainState:
-    """Place a TrainState on `mesh`: replicated params, sharded store."""
+    """Place a TrainState on `mesh`: replicated params, sharded store
+    (plain or double-buffered)."""
+    axes = data_axes(mesh)
     specs = train_state_pspecs(mesh)
 
     def place(subtree, spec):
@@ -82,9 +105,7 @@ def shard_train_state(state: TrainState, mesh: Mesh) -> TrainState:
         params=place(state.params, specs.params),
         opt_state=place(state.opt_state, specs.opt_state),
         stale_params=place(state.stale_params, specs.stale_params),
-        store=WeightStore(
-            weights=place(state.store.weights, specs.store.weights),
-            scored_at=place(state.store.scored_at, specs.store.scored_at)),
+        store=_place_store(state.store, mesh, axes),
         step=place(state.step, specs.step),
         rng=place(state.rng, specs.rng),
     )
@@ -142,6 +163,63 @@ def make_sharded_train_step(
         out_specs=(state_specs, metric_specs),
     )
     return step, cfg
+
+
+def make_sharded_async_steps(
+    per_example_loss: Callable,
+    scorer: Callable,
+    optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    mesh: Mesh,
+    data_template: dict,
+    aux_loss: Optional[Callable] = None,
+    monitor_traces: bool = True,
+) -> tuple[Callable, Callable, ISSGDConfig]:
+    """The async pipeline's two computations under shard_map over `mesh`.
+
+    Returns ``(scoring_step, master_step, cfg)`` — the raw shard_mapped
+    bodies of core/async_pipeline.make_async_steps, ready to hand to
+    AsyncPipeline (which jits them, donating write_buf).  The scoring step
+    writes only the device-local shard of write_buf; the master samples
+    from the sharded read_buf with the hierarchical two-stage draw, so it
+    never gathers the full f32[N] table (the HLO gate of
+    tests/test_async.py pins this for the async master too).
+
+    With the default ``monitor_traces=True`` the scoring step ends with
+    the fig-4 trace psums (3 scalars — cross-device rendezvous inside the
+    scoring program, parity with the fused step's monitors); pass
+    ``monitor_traces=False`` (train.py ``--no-trace-monitors``) for the
+    strictly collective-free scoring build the HLO gate pins.
+    """
+    from repro.core.async_pipeline import ScoreMetrics, make_async_steps
+
+    axes = data_axes(mesh)
+    nd = mesh_device_count(mesh, axes)
+    cfg = resolve_score_shards(cfg, mesh)
+    if num_examples % nd:
+        raise ValueError(f"num_examples={num_examples} not divisible by "
+                         f"{nd} devices")
+
+    scoring_body, master_body = make_async_steps(
+        per_example_loss, scorer, optimizer, cfg, num_examples,
+        aux_loss=aux_loss, axes=axes, monitor_traces=monitor_traces)
+    store_spec = _store_pspec(axes)
+    dspecs = dataset_pspecs(data_template, mesh)
+    metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
+    smetric_specs = ScoreMetrics(*([P()] * len(ScoreMetrics._fields)))
+
+    scoring_step = shard_map(
+        scoring_body, mesh=mesh,
+        in_specs=(P(), store_spec, P(), dspecs),
+        out_specs=(store_spec, smetric_specs),
+    )
+    master_step = shard_map(
+        master_body, mesh=mesh,
+        in_specs=(P(), P(), P(), store_spec, P(), P(), dspecs),
+        out_specs=(P(), P(), P(), P(), P(), metric_specs),
+    )
+    return scoring_step, master_step, cfg
 
 
 def make_sharded_score_step(

@@ -36,6 +36,12 @@ running with axes=() on one device is bitwise the same algorithm, which is
 what the sharded-equivalence tests pin down.  The full f32[N] table is
 never gathered: the master only ever touches B sampled rows (one-owner
 masked psums) and W block totals.
+
+The step body is factored into two reusable halves — `make_scoring_pass`
+(the workers) and `make_master_pass` (the master) — so that the fused step
+built here (their lag-0 composition over one store) and the async pipeline
+of core/async_pipeline.py (the two halves dispatched concurrently through
+a double-buffered store) are literally the same code.
 """
 from __future__ import annotations
 
@@ -128,9 +134,47 @@ def _score_slice(step: jax.Array, w_loc: int, n_w: int, sb_w: int) -> jax.Array:
     return (jnp.arange(w_loc)[:, None] * n_w + base[None, :]).reshape(-1)
 
 
-def make_train_step(
-    per_example_loss: Callable,     # (params, batch) -> (B,) losses
+def make_scoring_pass(
     scorer: Callable,               # (params, batch) -> (B,) ω̃ (grad norms)
+    cfg: ISSGDConfig,
+    num_examples: int,
+    constrain_batch: Optional[Callable] = None,
+    axes: tuple[str, ...] = (),
+) -> Callable:
+    """The workers' scoring fan-out as a reusable body.
+
+    Returns ``scoring_pass(score_params, store, step, data) ->
+    (store, fresh_scores, stale_slice)``: rescore this step's round-robin
+    slice with `score_params` and push into `store`; `stale_slice` is the
+    proposal over the slice *before* the write (the eq. 9 monitor input).
+    Shard-local end to end (zero collectives) — in the async pipeline this
+    is the computation that overlaps the master update.
+    """
+    is_cfg = cfg.is_cfg
+    n = num_examples
+    sb = n if cfg.mode == "exact" else cfg.score_batch_size
+    if constrain_batch is None:
+        constrain_batch = lambda b: b
+    axes = tuple(axes)
+
+    def scoring_pass(score_params, store: WeightStore, step, data):
+        _, n_dev = axis_info(axes)
+        n_local = store.weights.shape[0]
+        w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
+        score_idx = _score_slice(step, w_loc, n_w, sb_w)
+        score_batch = constrain_batch(gather_batch(data, score_idx))
+        fresh_scores = scorer(score_params, score_batch)
+        # stale view of the slice BEFORE the write (for eq. 9 monitor)
+        pre_proposal = read_proposal(store, step, is_cfg)
+        stale_slice = pre_proposal[score_idx]
+        new_store = write_scores(store, score_idx, fresh_scores, step)
+        return new_store, fresh_scores, stale_slice
+
+    return scoring_pass
+
+
+def make_master_pass(
+    per_example_loss: Callable,     # (params, batch) -> (B,) losses
     optimizer: Optimizer,
     cfg: ISSGDConfig,
     num_examples: int,
@@ -144,7 +188,18 @@ def make_train_step(
     axes: tuple[str, ...] = (),     # mesh axes the example dim is sharded
     # over when the step runs inside shard_map; () = single-device
 ) -> Callable:
-    """Build the fused ISSGD step: (state, dataset_arrays) -> (state, metrics)."""
+    """The master's half of the step as a reusable body.
+
+    Returns ``master_pass(params, opt_state, stale_params, store, step,
+    k_sample, data, fresh_scores=None, stale_slice=None) -> (params,
+    opt_state, stale_params, store, metrics)``: proposal read (B.1 + B.3)
+    → two-stage sample → IS-scaled unbiased update (§4.1) → parameter
+    push.  `store` is whatever proposal source the caller hands it: the
+    freshly written store in the fused-step composition, or the lagged
+    ``read_buf`` in the async pipeline.  `fresh_scores`/`stale_slice` feed
+    the fig-4 trace monitors; when None (async — the monitors ride with
+    the scoring step instead) the traces come back NaN.
+    """
     is_cfg = cfg.is_cfg
     n = num_examples
     sb = n if cfg.mode == "exact" else cfg.score_batch_size
@@ -154,26 +209,12 @@ def make_train_step(
         constrain_batch = lambda b: b
     axes = tuple(axes)
 
-    def train_step(state: TrainState, data: dict) -> tuple[TrainState, StepMetrics]:
-        rng, k_sample = jax.random.split(state.rng)
-        step = state.step
+    def master_pass(params, opt_state, stale_params, store: WeightStore,
+                    step, k_sample, data,
+                    fresh_scores=None, stale_slice=None):
         _, n_dev = axis_info(axes)
-        n_local = state.store.weights.shape[0]
+        n_local = store.weights.shape[0]
         w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
-
-        # ---- 1. scoring fan-out (the "workers"), shard-local -----------------
-        if cfg.mode == "fused":
-            store = state.store   # scores arrive from the train fwd below
-        else:
-            score_params = (state.params if cfg.mode == "exact"
-                            else state.stale_params)
-            score_idx = _score_slice(step, w_loc, n_w, sb_w)
-            score_batch = constrain_batch(gather_batch(data, score_idx))
-            fresh_scores = scorer(score_params, score_batch)
-            # stale view of the slice BEFORE the write (for eq. 9 monitor)
-            pre_proposal = read_proposal(state.store, step, is_cfg)
-            stale_slice = pre_proposal[score_idx]
-            store = write_scores(state.store, score_idx, fresh_scores, step)
 
         # ---- 2. master reads the proposal (B.1 + B.3), shard-local -----------
         proposal = read_proposal(store, step, is_cfg)
@@ -208,7 +249,7 @@ def make_train_step(
             return loss, scores
 
         (loss, batch_scores), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state.params)
+            loss_fn, has_aux=True)(params)
         if cfg.mode == "fused":
             # zero-cost refresh for the examples just trained on.
             # NOTE: the fig-4 monitors below are then computed on an
@@ -223,23 +264,27 @@ def make_train_step(
         if cfg.grad_clip > 0:
             from repro.optim import clip_by_global_norm
             grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
-        params, opt_state = optimizer.update(grads, state.opt_state,
-                                             state.params, step)
+        new_params, opt_state = optimizer.update(grads, opt_state,
+                                                 params, step)
 
         # ---- 5. parameter push to the workers every K steps ------------------
         if cfg.mode == "exact":
-            stale_params = params
+            stale_params = new_params
         else:
             push = (step + 1) % cfg.refresh_every == 0
             stale_params = jax.tree.map(
                 lambda new, old: jnp.where(push, new, old),
-                params, state.stale_params)
+                new_params, stale_params)
 
         # ---- 6. paper fig. 4 monitors over the scored slice ------------------
         # ||g_TRUE||² upper bound (B.2): the minibatch gradient norm
         if cfg.mode == "fused":
             # replicated minibatch slice: no psum (it would double-count)
             traces = variance.trace_sigma_all(fresh_scores, stale_slice)
+        elif fresh_scores is None:
+            # async pipeline: the scoring step owns the trace monitors
+            nan = jnp.full((), jnp.nan, jnp.float32)
+            traces = variance.TraceSigma(ideal=nan, stale=nan, unif=nan)
         else:
             traces = variance.trace_sigma_all_dist(fresh_scores, stale_slice,
                                                    axes, n_total=sb)
@@ -254,6 +299,56 @@ def make_train_step(
             ess_frac=ess, mean_weight=mean_weight,
             sample_indices=idx,
         )
+        return new_params, opt_state, stale_params, store, metrics
+
+    return master_pass
+
+
+def make_train_step(
+    per_example_loss: Callable,     # (params, batch) -> (B,) losses
+    scorer: Callable,               # (params, batch) -> (B,) ω̃ (grad norms)
+    optimizer: Optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    aux_loss: Optional[Callable] = None,
+    fused_score: Optional[Callable] = None,
+    constrain_batch: Optional[Callable] = None,
+    axes: tuple[str, ...] = (),
+) -> Callable:
+    """Build the fused ISSGD step: (state, dataset_arrays) -> (state, metrics).
+
+    This is the synchronous composition ``master_pass ∘ scoring_pass`` over
+    a single-buffer store: step t's master samples from a proposal that
+    already includes step t's scoring writes (lag 0).  The async pipeline
+    (core/async_pipeline.py) runs the same two bodies concurrently through
+    a double-buffered store instead.
+    """
+    axes = tuple(axes)
+    scoring = (None if cfg.mode == "fused" else
+               make_scoring_pass(scorer, cfg, num_examples,
+                                 constrain_batch, axes))
+    master = make_master_pass(per_example_loss, optimizer, cfg, num_examples,
+                              aux_loss=aux_loss, fused_score=fused_score,
+                              constrain_batch=constrain_batch, axes=axes)
+
+    def train_step(state: TrainState, data: dict) -> tuple[TrainState, StepMetrics]:
+        rng, k_sample = jax.random.split(state.rng)
+        step = state.step
+
+        # ---- 1. scoring fan-out (the "workers"), shard-local -----------------
+        if cfg.mode == "fused":
+            store = state.store   # scores arrive from the train fwd instead
+            fresh_scores = stale_slice = None
+        else:
+            score_params = (state.params if cfg.mode == "exact"
+                            else state.stale_params)
+            store, fresh_scores, stale_slice = scoring(
+                score_params, state.store, step, data)
+
+        # ---- 2-6. the master's half ------------------------------------------
+        params, opt_state, stale_params, store, metrics = master(
+            state.params, state.opt_state, state.stale_params, store, step,
+            k_sample, data, fresh_scores, stale_slice)
         new_state = TrainState(params, opt_state, stale_params, store,
                                step + 1, rng)
         return new_state, metrics
@@ -273,20 +368,12 @@ def make_score_step(
     mode to keep coverage of unsampled examples, and (b) to amortize
     scoring over K train steps (the B.1 staleness/throughput trade).
     Shard-local end to end: no collectives at all."""
-    n = num_examples
-    sb = cfg.score_batch_size
-    if constrain_batch is None:
-        constrain_batch = lambda b: b
-    axes = tuple(axes)
+    scoring = make_scoring_pass(scorer, cfg, num_examples,
+                                constrain_batch, axes)
 
     def score_step(state: TrainState, data: dict) -> TrainState:
-        _, n_dev = axis_info(axes)
-        n_local = state.store.weights.shape[0]
-        w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
-        score_idx = _score_slice(state.step, w_loc, n_w, sb_w)
-        batch = constrain_batch(gather_batch(data, score_idx))
-        scores = scorer(state.stale_params, batch)
-        store = write_scores(state.store, score_idx, scores, state.step)
+        store, _, _ = scoring(state.stale_params, state.store,
+                              state.step, data)
         return state._replace(store=store)
 
     return score_step

@@ -71,6 +71,54 @@ def write_scores_global(
     )
 
 
+class BufferedWeightStore(NamedTuple):
+    """Double-buffered store for the async scoring pipeline
+    (core/async_pipeline.py).
+
+    The master samples from ``read_buf`` — a snapshot of the table as of
+    step ``synced_at`` — while the workers' scoring writes land in
+    ``write_buf``, so the two computations share no buffers and can be
+    dispatched concurrently.  ``publish`` is the swap (the pipeline's only
+    sync point): it snapshots write_buf into read_buf.
+
+    With swap cadence K the master at step t samples from the table as
+    written through step K·⌊t/K⌋ − 1, i.e. the run is exactly a
+    relaxed-mode run whose proposal is L(t) = t − K·⌊t/K⌋ + 1 ∈ [1, K]
+    steps staler — same §4.1 unbiasedness (the IS scales come from the
+    same lagged proposal the sampler used), and the lag is observable
+    through ``read_buf.scored_at`` exactly like the paper's B.1 timestamps.
+    """
+    read_buf: WeightStore    # the master's snapshot (proposal source)
+    write_buf: WeightStore   # where the scoring fan-out's writes land
+    synced_at: jax.Array     # i32: last step whose writes read_buf holds
+
+
+def _copy_store(store: WeightStore) -> WeightStore:
+    """Fresh device buffers (sharding-preserving).  The copies matter:
+    read_buf must never alias write_buf, because the scoring step donates
+    write_buf for in-place updates."""
+    return WeightStore(weights=jnp.copy(store.weights),
+                       scored_at=jnp.copy(store.scored_at))
+
+
+def to_buffered(store: WeightStore) -> BufferedWeightStore:
+    """Wrap a plain store for the async pipeline: both buffers start as
+    distinct copies of the current table; nothing published yet."""
+    return BufferedWeightStore(read_buf=_copy_store(store),
+                               write_buf=_copy_store(store),
+                               synced_at=jnp.asarray(-1, jnp.int32))
+
+
+def publish(bstore: BufferedWeightStore,
+            step: jax.Array | int) -> BufferedWeightStore:
+    """The swap: read_buf ← snapshot of write_buf, stamped with the last
+    step whose writes it now holds.  One device-side copy of the table
+    shard every K steps — the async pipeline's only sync point."""
+    return BufferedWeightStore(read_buf=_copy_store(bstore.write_buf),
+                               write_buf=bstore.write_buf,
+                               synced_at=jnp.asarray(step, jnp.int32))
+
+
 def read_proposal(
     store: WeightStore,
     step: jax.Array | int,

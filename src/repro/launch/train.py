@@ -101,6 +101,17 @@ def main():
     ap.add_argument("--score-shards", type=int, default=0,
                     help="logical scoring shards W (0 = auto: mesh size, "
                     "or 1 single-device)")
+    ap.add_argument("--async-scoring", action="store_true",
+                    help="overlap the scoring fan-out with the master "
+                    "update via the double-buffered WeightStore "
+                    "(core/async_pipeline.py; mode relaxed|uniform)")
+    ap.add_argument("--swap-every", type=int, default=1,
+                    help="async: publish write_buf -> read_buf every K "
+                    "steps (the proposal lag is L in [1, K])")
+    ap.add_argument("--no-trace-monitors", action="store_true",
+                    help="async: skip the fig-4 trace monitors in the "
+                    "scoring step (keeps it strictly collective-free; "
+                    "traces log as nan)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
@@ -136,7 +147,32 @@ def main():
     state = init_train_state(params, opt, train.size, seed=args.seed)
     data = train.arrays
     probe = None
-    if args.mesh > 0:
+    pipe = None
+    if args.async_scoring:
+        if args.mode not in ("relaxed", "uniform"):
+            ap.error("--async-scoring requires --mode relaxed|uniform")
+        from repro.core.async_pipeline import AsyncPipeline, make_async_steps
+        from repro.core.weight_store import to_buffered
+        state = state._replace(store=to_buffered(state.store))
+        if args.mesh > 0:
+            from repro.core import distributed as dist
+            from repro.launch.mesh import make_debug_mesh
+            mesh = make_debug_mesh(args.mesh)
+            print(f"mesh: {tuple(mesh.shape.values())} over "
+                  f"{jax.device_count()} devices (async, swap every "
+                  f"{args.swap_every})", flush=True)
+            s_step, m_step, tcfg = dist.make_sharded_async_steps(
+                pel, scorer, opt, tcfg, train.size, mesh, data,
+                monitor_traces=not args.no_trace_monitors)
+            state = dist.shard_train_state(state, mesh)
+            data = dist.shard_dataset(data, mesh)
+        else:
+            print(f"async scoring, swap every {args.swap_every}", flush=True)
+            s_step, m_step = make_async_steps(
+                pel, scorer, opt, tcfg, train.size,
+                monitor_traces=not args.no_trace_monitors)
+        pipe = AsyncPipeline(s_step, m_step, args.swap_every)
+    elif args.mesh > 0:
         from repro.core import distributed as dist
         from repro.launch.mesh import make_debug_mesh
         mesh = make_debug_mesh(args.mesh)
@@ -161,7 +197,10 @@ def main():
     history = []
     t0 = time.time()
     for i in range(args.steps):
-        state, m = step(state, data)
+        if pipe is not None:
+            state, m = pipe.step(state, data)
+        else:
+            state, m = step(state, data)
         if probe is not None and i % args.probe_every == 0:
             state = probe(state, data)
         if i % args.log_every == 0 or i == args.steps - 1:

@@ -1,0 +1,22 @@
+"""Shared test utilities (imported by the test modules; tests/ is on
+sys.path under pytest's rootdir insertion)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 4, timeout: int = 560) -> str:
+    """Run `code` in a subprocess with N forced XLA host devices (the
+    device count is fixed at first backend init, so multi-device tests
+    cannot share the pytest process)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=timeout)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout

@@ -1,0 +1,226 @@
+"""Async scoring pipeline (core/async_pipeline.py).
+
+Pins the PR's key invariant: an async run with swap cadence K is *bitwise*
+a relaxed-mode run whose proposal is L(t) = t − K⌊t/K⌋ + 1 steps staler.
+The reference run is built from the same scoring/master bodies but with a
+single-buffer store and an explicit store *history* (the master reads the
+snapshot from K⌊t/K⌋ writes ago), so the double-buffered swap logic is the
+only thing that differs.  Also: scored_at lag observability, mesh-4
+equivalence, the HLO no-full-table gate for the async master step, and the
+zero-collective guarantee for the scoring step.
+
+Multi-device tests run in subprocesses because the XLA host-device count is
+fixed at first jax init (the main pytest process keeps 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import REPO, run_py as _run_py
+
+
+def _setup(n=512):
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import ISSGDConfig
+    from repro.core.scorer import make_mlp_scorer
+    from repro.data import make_svhn_like
+    from repro.models.mlp import (MLPConfig, init_mlp_classifier,
+                                  per_example_loss)
+    from repro.optim import sgd
+
+    cfg = MLPConfig(input_dim=16, hidden=(32,), num_classes=4)
+    train, _ = make_svhn_like(jax.random.key(0), n=n, dim=16, classes=4)
+    params = init_mlp_classifier(jax.random.key(1), cfg)
+    opt = sgd(0.05)
+    tcfg = ISSGDConfig(batch_size=16, score_batch_size=64, mode="relaxed",
+                       is_cfg=ISConfig(smoothing=0.1), score_shards=4)
+    pel = lambda p, b: per_example_loss(p, b, cfg)
+    scorer = make_mlp_scorer(cfg, "ghost")
+    return pel, scorer, opt, tcfg, params, train
+
+
+_SHARDED_SETUP = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.importance import ISConfig
+        from repro.core.issgd import ISSGDConfig
+        from repro.core import distributed as D
+        from repro.core.async_pipeline import (AsyncPipeline, make_async_steps,
+                                               init_async_state)
+        from repro.core.scorer import make_mlp_scorer
+        from repro.data import make_svhn_like
+        from repro.models.mlp import (MLPConfig, init_mlp_classifier,
+                                      per_example_loss)
+        from repro.optim import sgd
+
+        cfg = MLPConfig(input_dim=16, hidden=(32,), num_classes=4)
+        train, _ = make_svhn_like(jax.random.key(0), n=512, dim=16, classes=4)
+        params = init_mlp_classifier(jax.random.key(1), cfg)
+        opt = sgd(0.05)
+        tcfg = ISSGDConfig(batch_size=16, score_batch_size=64, mode="relaxed",
+                           is_cfg=ISConfig(smoothing=0.1), score_shards=4)
+        pel = lambda p, b: per_example_loss(p, b, cfg)
+        scorer = make_mlp_scorer(cfg, "ghost")
+        data = train.arrays
+        n = train.size
+"""
+
+
+@pytest.mark.parametrize("swap_every", [1, 3])
+def test_async_equals_lagged_relaxed_reference(swap_every):
+    """The tentpole invariant: async(swap cadence K) is bitwise a relaxed
+    run whose proposal lags by L(t) = t − K⌊t/K⌋ + 1 steps."""
+    from repro.core.async_pipeline import (AsyncPipeline, make_async_steps,
+                                           init_async_state)
+    from repro.core.weight_store import init_store
+
+    pel, scorer, opt, tcfg, params, train = _setup()
+    data, n, K, T = train.arrays, train.size, swap_every, 8
+
+    s_step, m_step = make_async_steps(pel, scorer, opt, tcfg, n)
+    pipe = AsyncPipeline(s_step, m_step, swap_every=K)
+    astate = init_async_state(params, opt, n)
+    alog = []
+    for _ in range(T):
+        astate, am = pipe.step(astate, data)
+        alog.append((np.asarray(am.sample_indices), float(am.loss)))
+
+    # reference: same bodies, single buffer, explicit history, no donation
+    score_j, master_j = jax.jit(s_step), jax.jit(m_step)
+    store = init_store(n)
+    hist = [store]
+    p_r, o_r, sp_r = params, opt.init(params), params
+    rng_r = jax.random.key(0)
+    for t in range(T):
+        ts = jnp.asarray(t, jnp.int32)
+        store, _sm = score_j(sp_r, store, ts, data)
+        hist.append(store)
+        lag_store = hist[(t // K) * K]      # writes through step K⌊t/K⌋ − 1
+        p_r, o_r, sp_r, _, rng_r, rm = master_j(p_r, o_r, sp_r, lag_store,
+                                                ts, rng_r, data)
+        ai, al = alog[t]
+        assert np.array_equal(ai, np.asarray(rm.sample_indices)), t
+        assert al == float(rm.loss), t      # bitwise
+
+    for a, b in zip(jax.tree.leaves(astate.params), jax.tree.leaves(p_r)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(astate.store.write_buf.weights),
+                          np.asarray(store.weights))
+    assert np.array_equal(np.asarray(astate.store.read_buf.weights),
+                          np.asarray(hist[(T // K) * K].weights))
+
+
+def test_scored_at_exposes_lag():
+    """The lag is observable through read_buf.scored_at (B.1 timestamps):
+    after step t the snapshot holds writes through K⌊(t+1)/K⌋ − 1 while
+    write_buf holds writes through t."""
+    from repro.core.async_pipeline import (AsyncPipeline, make_async_steps,
+                                           init_async_state)
+
+    pel, scorer, opt, tcfg, params, train = _setup()
+    data, n, K = train.arrays, train.size, 4
+
+    pipe = AsyncPipeline(*make_async_steps(pel, scorer, opt, tcfg, n),
+                         swap_every=K)
+    state = init_async_state(params, opt, n)
+    assert int(state.store.synced_at) == -1
+    for t in range(10):
+        state, _ = pipe.step(state, data)
+        synced = ((t + 1) // K) * K - 1
+        assert int(state.store.synced_at) == synced, t
+        assert int(state.store.read_buf.scored_at.max()) == synced, t
+        assert int(state.store.write_buf.scored_at.max()) == t, t
+
+
+def test_async_rejects_exact_and_fused():
+    import dataclasses
+    from repro.core.async_pipeline import make_async_steps
+
+    pel, scorer, opt, tcfg, params, train = _setup()
+    for mode in ("exact", "fused"):
+        bad = dataclasses.replace(tcfg, mode=mode)
+        with pytest.raises(ValueError, match="async"):
+            make_async_steps(pel, scorer, opt, bad, train.size)
+
+
+def test_async_sharded_matches_single_device():
+    """Same-seed equivalence of the async pipeline on a 4-device mesh vs
+    one device — the one-code-path property carries over to the split
+    step."""
+    out = _run_py(_SHARDED_SETUP + """
+        K = 2
+        s1, m1 = make_async_steps(pel, scorer, opt, tcfg, n)
+        pipe1 = AsyncPipeline(s1, m1, swap_every=K)
+        st1 = init_async_state(params, opt, n)
+
+        mesh = jax.make_mesh((4,), ('data',))
+        s4, m4, _ = D.make_sharded_async_steps(pel, scorer, opt, tcfg, n,
+                                               mesh, data)
+        pipe4 = AsyncPipeline(s4, m4, swap_every=K)
+        st4 = D.shard_train_state(init_async_state(params, opt, n), mesh)
+        data4 = D.shard_dataset(data, mesh)
+
+        for t in range(8):
+            st1, a = pipe1.step(st1, data)
+            st4, b = pipe4.step(st4, data4)
+            assert np.array_equal(np.asarray(a.sample_indices),
+                                  np.asarray(b.sample_indices)), t
+            np.testing.assert_allclose(float(a.loss), float(b.loss),
+                                       rtol=1e-5, atol=1e-6, err_msg=str(t))
+        np.testing.assert_allclose(np.asarray(st1.store.write_buf.weights),
+                                   np.asarray(st4.store.write_buf.weights),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st1.store.read_buf.weights),
+                                   np.asarray(st4.store.read_buf.weights),
+                                   rtol=1e-4, atol=1e-5)
+        print('async sharded equivalent')
+    """)
+    assert "async sharded equivalent" in out
+
+
+def test_async_master_step_hlo_gates():
+    """The HLO no-full-table gate of tests/test_sharded.py holds for the
+    async master step, and the scoring step (monitors off) compiles to
+    zero collectives."""
+    out = _run_py(_SHARDED_SETUP + """
+        import re
+        mesh = jax.make_mesh((4,), ('data',))
+        s4, m4, _ = D.make_sharded_async_steps(pel, scorer, opt, tcfg, n,
+                                               mesh, data)
+        st4 = D.shard_train_state(init_async_state(params, opt, n), mesh)
+        data4 = D.shard_dataset(data, mesh)
+
+        hlo = jax.jit(m4).lower(
+            st4.params, st4.opt_state, st4.stale_params, st4.store.read_buf,
+            st4.step, st4.rng, data4).compile().as_text()
+        full = re.findall(rf"[fs]32\\[{n}\\]", hlo)
+        assert not full, f"full-table tensors in async master HLO: {full[:5]}"
+
+        s4nc, _, _ = D.make_sharded_async_steps(pel, scorer, opt, tcfg, n,
+                                                mesh, data,
+                                                monitor_traces=False)
+        hlo_s = jax.jit(s4nc).lower(
+            st4.stale_params, st4.store.write_buf, st4.step,
+            data4).compile().as_text()
+        assert "all-reduce" not in hlo_s, "collectives in the scoring step"
+        print('async hlo gates pass')
+    """)
+    assert "async hlo gates pass" in out
+
+
+@pytest.mark.slow
+def test_train_cli_async_mesh4():
+    """End-to-end CLI gate: --async-scoring --swap-every 2 --mesh 4."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)  # train.py must force the devices itself
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "mlp_svhn",
+         "--smoke", "--mesh", "4", "--steps", "8", "--examples", "1024",
+         "--async-scoring", "--swap-every", "2"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "async" in r.stdout, r.stdout[-1000:]

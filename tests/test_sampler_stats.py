@@ -1,0 +1,200 @@
+"""Statistical test battery (marker: `stats`).
+
+Pins the distributional claims the async PR leans on:
+
+  * chi-squared goodness-of-fit of `two_stage_sample` against the target
+    multinomial, across `axes=()` shard decompositions and real 2/4-device
+    meshes (the two-stage draw must *be* the multinomial, not just close);
+  * §4.1 unbiasedness: E[IS-scaled minibatch gradient] equals the
+    full-batch gradient within CLT tolerance for the relaxed, fused, and
+    async modes — including a deliberately skewed store, where the scales
+    (mean ω̃ / ω̃_i) do the heavy lifting.
+
+All tests use fixed seeds, so they are deterministic; the thresholds are
+set at ≈4σ so a correct sampler passes with huge margin.  Deselect with
+``-m "not stats"`` on flaky CPU runners — tier-1 keeps them by default.
+
+Multi-device legs run in subprocesses (XLA device count is fixed at first
+backend init).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import run_py as _run_py
+
+
+def chi2_critical(df: int, z: float = 3.719) -> float:
+    """Wilson–Hilferty upper-tail critical value; z=3.719 ≈ α = 1e-4."""
+    a = 2.0 / (9.0 * df)
+    return df * (1.0 - a + z * math.sqrt(a)) ** 3
+
+
+def _target_weights(n: int) -> jnp.ndarray:
+    """A lumpy but strictly positive target (spread ≈ 70×)."""
+    w = (jnp.arange(n, dtype=jnp.float32) % 17) + 0.25
+    return w.at[:: n // 8].mul(4.0)
+
+
+@pytest.mark.stats
+@pytest.mark.parametrize("shards", [1, 4, 8])
+def test_two_stage_sample_chi2_gof(shards):
+    """axes=(): the hierarchical draw matches the target multinomial under
+    a chi-squared GOF test for every logical shard decomposition."""
+    from repro.core.sampler import two_stage_sample
+
+    n, m = 256, 200_000
+    w = _target_weights(n)
+    idx = np.asarray(two_stage_sample(jax.random.key(7), w, m,
+                                      shards_per_device=shards))
+    counts = np.bincount(idx, minlength=n)
+    p = np.asarray(w / w.sum(), np.float64)
+    expected = m * p
+    assert expected.min() > 20          # chi-squared validity regime
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    crit = chi2_critical(n - 1)
+    assert chi2 < crit, f"chi2={chi2:.1f} >= crit={crit:.1f}"
+
+
+@pytest.mark.stats
+@pytest.mark.parametrize("devices,score_shards", [(2, 4), (4, 8)])
+def test_two_stage_sample_chi2_gof_sharded(devices, score_shards):
+    """The same GOF battery with the table sharded over a real 2/4-device
+    mesh and the draw running under shard_map."""
+    out = _run_py(f"""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.sampler import two_stage_sample
+        from repro.dist import shard_map
+
+        ND, W = {devices}, {score_shards}
+        n, m_batch, n_batches = 256, 50_000, 4
+        w = (jnp.arange(n, dtype=jnp.float32) % 17) + 0.25
+        w = w.at[:: n // 8].mul(4.0)
+        mesh = jax.make_mesh((ND,), ('data',))
+        w_sharded = jax.device_put(w, NamedSharding(mesh, P('data')))
+
+        def body(key, local_w):
+            return two_stage_sample(key, local_w, m_batch, axes=('data',),
+                                    shards_per_device=W // ND)
+
+        draw = jax.jit(shard_map(body, mesh=mesh,
+                                 in_specs=(P(), P('data')), out_specs=P()))
+        counts = np.zeros(n, np.int64)
+        for i in range(n_batches):
+            idx = np.asarray(draw(jax.random.key(100 + i), w_sharded))
+            counts += np.bincount(idx, minlength=n)
+        m = m_batch * n_batches
+        p = np.asarray(w / w.sum(), np.float64)
+        chi2 = float(((counts - m * p) ** 2 / (m * p)).sum())
+        print(json.dumps(dict(chi2=chi2, df=n - 1)))
+    """, devices=devices)
+    import json
+    rec = json.loads(out.strip().splitlines()[-1])
+    crit = chi2_critical(rec["df"])
+    assert rec["chi2"] < crit, f"chi2={rec['chi2']:.1f} >= crit={crit:.1f}"
+
+
+# ---------------------------------------------------------------------------
+# §4.1 unbiasedness: E[IS-scaled minibatch grad] == full-batch grad
+# ---------------------------------------------------------------------------
+
+def _unbias_setup():
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import ISSGDConfig
+    from repro.core.scorer import make_mlp_scorer
+    from repro.core.weight_store import WeightStore
+    from repro.data import make_svhn_like
+    from repro.models.mlp import (MLPConfig, init_mlp_classifier,
+                                  per_example_loss, per_example_loss_and_score)
+    from repro.optim import sgd
+
+    n = 256
+    cfg = MLPConfig(input_dim=8, hidden=(16,), num_classes=4)
+    train, _ = make_svhn_like(jax.random.key(2), n=n, dim=8, classes=4)
+    params = init_mlp_classifier(jax.random.key(3), cfg)
+    opt = sgd(1.0)  # lr=1 → grad estimate = params - new_params, exactly
+    tcfg = ISSGDConfig(batch_size=32, score_batch_size=64, mode="relaxed",
+                       is_cfg=ISConfig(smoothing=0.05), score_shards=4)
+    pel = lambda p, b: per_example_loss(p, b, cfg)
+    fused = lambda p, b: per_example_loss_and_score(p, b, cfg)
+    scorer = make_mlp_scorer(cfg, "ghost")
+
+    # deliberately skewed store: 40× spread, everything freshly stamped
+    skew = (jnp.arange(n, dtype=jnp.float32) * 37.0 % 97.0) / 97.0
+    skewed_store = WeightStore(weights=0.1 + 4.0 * skew ** 3,
+                               scored_at=jnp.zeros((n,), jnp.int32))
+
+    flat = lambda tree: np.concatenate(
+        [np.asarray(x).ravel() for x in jax.tree.leaves(tree)])
+    full_grad = flat(jax.grad(
+        lambda p: jnp.mean(per_example_loss(p, train.arrays, cfg)))(params))
+    return (train, params, opt, tcfg, pel, fused, scorer, skewed_store,
+            flat, full_grad)
+
+
+def _assert_clt_close(grads: np.ndarray, full_grad: np.ndarray):
+    """Componentwise z-test: |mean − truth| ≤ 4·SEM (+ float atol)."""
+    mean = grads.mean(axis=0)
+    sem = grads.std(axis=0) / math.sqrt(grads.shape[0])
+    err = np.abs(mean - full_grad)
+    bound = 4.0 * sem + 1e-6
+    worst = np.argmax(err - bound)
+    assert np.all(err <= bound), (
+        f"component {worst}: |{mean[worst]:.5f} - {full_grad[worst]:.5f}| "
+        f"> 4*sem={4 * sem[worst]:.5f}")
+
+
+@pytest.mark.stats
+@pytest.mark.parametrize("mode", ["relaxed", "fused", "async"])
+def test_is_gradient_unbiased_clt(mode):
+    from repro.core.issgd import TrainState, make_train_step
+    import dataclasses
+
+    (train, params, opt, tcfg, pel, fused, scorer, skewed_store, flat,
+     full_grad) = _unbias_setup()
+    data, n, trials = train.arrays, train.size, 300
+    opt_state = opt.init(params)
+
+    if mode == "async":
+        from repro.core.async_pipeline import make_async_pipeline
+        from repro.core.weight_store import to_buffered
+        pipe = make_async_pipeline(pel, scorer, opt, tcfg, n, swap_every=1)
+        def one_trial(r):
+            state = TrainState(params, opt_state, params,
+                               to_buffered(skewed_store),
+                               jnp.zeros((), jnp.int32),
+                               jax.random.key(1000 + r))
+            new_state, _ = pipe.step(state, data)
+            return flat(params) - flat(new_state.params)
+    else:
+        tcfg_m = dataclasses.replace(tcfg, mode=mode)
+        step = jax.jit(make_train_step(
+            pel, scorer, opt, tcfg_m, n,
+            fused_score=fused if mode == "fused" else None))
+        def one_trial(r):
+            state = TrainState(params, opt_state, params, skewed_store,
+                               jnp.zeros((), jnp.int32),
+                               jax.random.key(1000 + r))
+            new_state, _ = step(state, data)
+            return flat(params) - flat(new_state.params)
+
+    grads = np.stack([one_trial(r) for r in range(trials)])
+    _assert_clt_close(grads, full_grad)
+
+
+@pytest.mark.stats
+def test_uniform_store_gives_unit_scales():
+    """Sanity anchor for the battery: with a flat store the IS scales are
+    exactly 1 (the paper's plain-SGD recovery)."""
+    from repro.core.importance import ISConfig, is_loss_scale
+    from repro.core.weight_store import init_store, read_proposal
+
+    store = init_store(64)
+    proposal = read_proposal(store, 0, ISConfig(smoothing=1.0))
+    scales = is_loss_scale(proposal[:8], jnp.mean(proposal))
+    np.testing.assert_array_equal(np.asarray(scales), np.ones(8, np.float32))

@@ -7,25 +7,13 @@ fixed at first jax init (the main pytest process keeps 1 device).
 import os
 import subprocess
 import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run_py(code: str, devices: int = 4, timeout: int = 560) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, env=env, cwd=REPO,
-                       timeout=timeout)
-    assert r.returncode == 0, r.stderr[-3000:]
-    return r.stdout
+from _helpers import REPO, run_py as _run_py
 
 
 _SETUP = """
@@ -197,6 +185,62 @@ def test_write_scores_global_drops_foreign_rows():
     np.testing.assert_array_equal(np.asarray(a.weights), np.asarray(b.weights))
     np.testing.assert_array_equal(np.asarray(a.scored_at),
                                   np.asarray(b.scored_at))
+
+
+def test_scatter_rows_duplicate_indices_last_write_wins():
+    """Fused mode samples with replacement, so one batch can write the same
+    row twice; XLA scatter order is unspecified, so scatter_rows pins
+    last-write-wins (the freshest score for that example in program
+    order)."""
+    from repro.core.collectives import scatter_rows
+
+    arr = jnp.zeros((8,), jnp.float32)
+    idx = jnp.asarray([2, 2, 5, 2], jnp.int32)
+    vals = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    out = np.asarray(scatter_rows(arr, idx, vals, axes=()))
+    assert out[2] == 4.0, out          # the LAST write to row 2 wins
+    assert out[5] == 3.0, out
+    assert np.all(out[[0, 1, 3, 4, 6, 7]] == 0.0)
+    # jitted path agrees (the semantics must not depend on op lowering)
+    out_j = np.asarray(jax.jit(
+        lambda a, i, v: scatter_rows(a, i, v, axes=()))(arr, idx, vals))
+    np.testing.assert_array_equal(out, out_j)
+
+
+def test_write_scores_global_duplicate_indices_last_write_wins():
+    from repro.core.weight_store import init_store, write_scores_global
+
+    store = write_scores_global(
+        init_store(16),
+        jnp.asarray([3, 9, 3, 3], jnp.int32),
+        jnp.asarray([1.0, 7.0, 2.0, 5.0], jnp.float32), step=4, axes=())
+    w = np.asarray(store.weights)
+    assert w[3] == 5.0 and w[9] == 7.0, w
+    assert int(store.scored_at[3]) == 4
+
+
+def test_scatter_rows_duplicates_sharded_last_write_wins():
+    """Same semantics when the array is sharded: duplicates that cross into
+    one device's shard still resolve to the last occurrence."""
+    out = _run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.collectives import scatter_rows
+        from repro.dist import shard_map
+
+        mesh = jax.make_mesh((2,), ('data',))
+        arr = jax.device_put(jnp.zeros((8,), jnp.float32),
+                             NamedSharding(mesh, P('data')))
+        idx = jnp.asarray([6, 1, 6, 1, 3], jnp.int32)   # dups on both shards
+        vals = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0], jnp.float32)
+        f = shard_map(lambda a, i, v: scatter_rows(a, i, v, ('data',)),
+                      mesh=mesh, in_specs=(P('data'), P(), P()),
+                      out_specs=P('data'))
+        out = np.asarray(jax.jit(f)(arr, idx, vals))
+        assert out[6] == 3.0 and out[1] == 4.0 and out[3] == 5.0, out
+        print('sharded last-write-wins ok')
+    """, devices=2)
+    assert "sharded last-write-wins ok" in out
 
 
 @pytest.mark.slow
