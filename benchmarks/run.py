@@ -104,6 +104,12 @@ def _async_overlap():
     return async_overlap()
 
 
+@bench("streaming_io")
+def _streaming_io():
+    from benchmarks.streaming_io import streaming_io
+    return streaming_io()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")

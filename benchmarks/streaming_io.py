@@ -1,0 +1,135 @@
+"""Streaming-I/O benchmark: resident vs streamed step time, and the
+two-level gather's host-fetch hit rate as a function of window size.
+
+Runs in-process on a single device (the streaming overheads being measured
+— per-step host fetches, device_put of misses and windows, the idx host
+sync — are per-host, not per-device).  Two sweeps:
+
+  * resident vs streamed relaxed step time at a fixed window, the price of
+    keeping the dataset host-resident (on CPU, where "host" and "device"
+    share memory, this *overstates* the gap: a real accelerator overlaps
+    the host fetch with compute and pays PCIe only for misses);
+  * window-size sweep: hit rate and streamed step time as the window grows
+    from 1 chunk to the whole shard — the knob the ROADMAP's
+    bigger-than-memory datasets trade against.
+
+Standalone:
+
+  PYTHONPATH=src python -m benchmarks.streaming_io
+
+Harness entry (`python -m benchmarks.run --only streaming_io --bench-json
+BENCH.json`) emits the same rows as BENCH JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _build(n: int, dim: int, sb: int):
+    import jax
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import ISSGDConfig
+    from repro.core.scorer import make_mlp_scorer
+    from repro.data import make_svhn_like
+    from repro.models.mlp import MLPConfig, init_mlp_classifier
+    from repro.models.mlp import per_example_loss as mlp_pel
+    from repro.optim import sgd
+
+    cfg = MLPConfig(input_dim=dim, hidden=(256, 256), num_classes=10)
+    train, _ = make_svhn_like(jax.random.key(0), n=n, dim=dim)
+    params = init_mlp_classifier(jax.random.key(1), cfg)
+    opt = sgd(0.02)
+    tcfg = ISSGDConfig(batch_size=64, score_batch_size=sb, mode="relaxed",
+                       is_cfg=ISConfig(smoothing=1.0), score_shards=8)
+    pel = lambda p, b: mlp_pel(p, b, cfg)
+    scorer = make_mlp_scorer(cfg, "ghost")
+    return pel, scorer, opt, tcfg, params, train
+
+
+def streaming_io(n: int = 8192, dim: int = 96, sb: int = 512,
+                 chunk_size: int = 256, windows=(1, 2, 4, 8, 16),
+                 steps: int = 12):
+    """Benchmark-harness entry: (rows, summary)."""
+    import jax
+    from repro.core.issgd import init_train_state, make_train_step
+    from repro.data.streaming import make_streamed_issgd
+
+    pel, scorer, opt, tcfg, params, train = _build(n, dim, sb)
+    data = train.arrays
+
+    def timed(fn, state):
+        state, m = fn(state, data)              # compile + warm
+        jax.block_until_ready((state, m))
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = fn(state, data)
+        jax.block_until_ready((state, m))
+        return (time.perf_counter() - t0) / steps * 1e3
+
+    step = jax.jit(make_train_step(pel, scorer, opt, tcfg, n))
+    resident_ms = timed(step, init_train_state(params, opt, n))
+
+    rows = []
+    for wc in windows:
+        if wc > n // chunk_size:
+            continue
+        # one driver per window and one measurement loop: a StreamedISSGD
+        # instance is per-run (its host cursor tracks state.step), and the
+        # post-warmup steps give both the step time and the steady rate
+        drv = make_streamed_issgd(pel, scorer, opt, tcfg, data,
+                                  chunk_size=chunk_size, window_chunks=wc)
+        state = init_train_state(params, opt, n)
+        state, m = drv.step(state)              # compile + first prefetch
+        jax.block_until_ready((state, m))
+        drv.plane.reset_stats()
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = drv.step(state)
+        jax.block_until_ready((state, m))
+        ms = (time.perf_counter() - t0) / steps * 1e3
+        s = drv.plane.stats
+        rows.append({
+            "window_chunks": wc,
+            "window_rows": wc * chunk_size,
+            "window_frac": wc * chunk_size / n,
+            "streamed_step_ms": ms,
+            "resident_step_ms": resident_ms,
+            "overhead": ms / resident_ms,
+            "hit_rate": s.hit_rate,
+            "host_rows_per_step": (s.misses + s.streamed_rows) / steps,
+        })
+
+    summary = {"resident_step_ms": resident_ms,
+               "chunk_size": chunk_size, "examples": n}
+    for r in rows:
+        wc = r["window_chunks"]
+        summary[f"streamed_ms/w{wc}"] = r["streamed_step_ms"]
+        summary[f"hit_rate/w{wc}"] = r["hit_rate"]
+    return rows, summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--examples", type=int, default=8192)
+    ap.add_argument("--score-batch", type=int, default=512)
+    ap.add_argument("--chunk-size", type=int, default=256)
+    ap.add_argument("--windows", default="1,2,4,8,16")
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    rows, summary = streaming_io(
+        n=args.examples, sb=args.score_batch, chunk_size=args.chunk_size,
+        windows=tuple(int(x) for x in args.windows.split(",")),
+        steps=args.steps)
+    for r in rows:
+        print(r)
+    print(json.dumps(summary, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "summary": summary}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,15 @@ permutation-invariant SVHN clone with distributed-importance-sampling SGD,
 and prints the paper's variance monitors as it goes.
 
   PYTHONPATH=src python examples/quickstart.py
+
+With ``--stream`` the dataset lives in host memory as chunks and the
+devices see only a proposal-aware hot window plus the sampled minibatch
+(data/streaming.py) — the loss trajectory is bitwise the same.
+
+  PYTHONPATH=src python examples/quickstart.py --stream
 """
+import sys
+
 import jax
 
 from repro.core.importance import ISConfig
@@ -30,18 +38,35 @@ issgd_cfg = ISSGDConfig(
     is_cfg=ISConfig(smoothing=1.0),   # B.3 additive smoothing
 )
 opt = sgd(0.02)
-step = jax.jit(make_train_step(
-    per_example_loss=lambda p, b: per_example_loss(p, b, cfg),
-    scorer=make_mlp_scorer(cfg, "ghost"),   # exact Prop.-1 grad norms
-    optimizer=opt, cfg=issgd_cfg, num_examples=train.size))
+pel = lambda p, b: per_example_loss(p, b, cfg)
+scorer = make_mlp_scorer(cfg, "ghost")      # exact Prop.-1 grad norms
+
+stream = "--stream" in sys.argv
+if stream:
+    # host-resident chunked dataset + proposal-aware device window; the
+    # driver owns the data, so step() takes no dataset argument
+    from repro.data.streaming import make_streamed_issgd
+    driver = make_streamed_issgd(pel, scorer, opt, issgd_cfg, train.arrays,
+                                 chunk_size=512, window_chunks=4)
+    step = driver.step
+else:
+    step = jax.jit(make_train_step(
+        per_example_loss=pel, scorer=scorer,
+        optimizer=opt, cfg=issgd_cfg, num_examples=train.size))
 
 # 3. train -------------------------------------------------------------------
+# (streamed: the driver owns the examples — no dataset argument, nothing
+# example-count-sized on device beyond the window)
 state = init_train_state(params, opt, train.size)
 for i in range(401):
-    state, m = step(state, train.arrays)
+    state, m = step(state) if stream else step(state, train.arrays)
     if i % 50 == 0:
         print(f"step {i:4d}  loss {float(m.loss):.4f}  "
               f"√TrΣ ideal/stale/unif = {float(m.trace_ideal):.2f}/"
               f"{float(m.trace_stale):.2f}/{float(m.trace_unif):.2f}")
 
 print("test accuracy:", float(accuracy(state.params, test.arrays, cfg)))
+if stream:
+    s = driver.plane.stats
+    print(f"streaming: window hit rate {s.hit_rate:.3f}, "
+          f"{s.streamed_rows} scoring rows streamed, {s.swaps} swaps")

@@ -3,18 +3,28 @@ ISSGD weight store) with step bookkeeping and atomic writes.
 
 On a pod each host would save its addressable shards; here the host
 gathers (CPU container).  The weight-store state is part of the
-checkpoint, so a restored ISSGD run resumes with its importance weights
-and their staleness timestamps intact — the "database" survives restarts,
-like the paper's Redis instance would.
+checkpoint — including the double-buffered ``BufferedWeightStore`` of the
+async pipeline (``read_buf``/``write_buf``/``synced_at`` are plain
+NamedTuple fields) — so a restored ISSGD run resumes with its importance
+weights and their staleness timestamps intact: the "database" survives
+restarts, like the paper's Redis instance would.
 
-PRNG key arrays are not serialized (they are reseeded on restore); bf16
-arrays are stored as uint16 views with a dtype manifest.
+PRNG keys are serialized via their raw ``key_data`` (uint32) with the key
+impl recorded in the manifest, so a restored run continues the *same*
+random stream — together with the step counter this makes a streamed /
+async resume bitwise identical to the uninterrupted run (the streaming
+cursor is pure state: the round-robin scoring slice and the swap cadence
+are functions of ``step``, and the device window rebuilds cold without
+affecting values).  Old checkpoints without key data restore keys from
+the template (the previous reseed-on-restore behavior).  bf16 arrays are
+stored as uint16 views with a dtype manifest.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import warnings
 from pathlib import Path
 from typing import Any
 
@@ -22,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-_SKIP = "__skip__"
+_PRNG_TAG = "prngkey:"
 
 
 def _is_prng_key(x) -> bool:
@@ -30,6 +40,34 @@ def _is_prng_key(x) -> bool:
         return jnp.issubdtype(x.dtype, jax.dtypes.prng_key)
     except Exception:
         return False
+
+
+class _KeyLeaf:
+    """A PRNG key flattened to (raw uint32 data, impl name)."""
+
+    def __init__(self, key):
+        self.data = np.asarray(jax.random.key_data(key))
+        try:
+            self.impl = str(jax.random.key_impl(key))
+        except Exception:
+            warnings.warn("jax.random.key_impl failed; stamping the "
+                          "checkpointed PRNG key as threefry2x32 — restore "
+                          "on a matching jax version to keep the stream")
+            self.impl = "threefry2x32"
+
+
+def _wrap_key(data: np.ndarray, impl: str, template):
+    try:
+        return jax.random.wrap_key_data(jnp.asarray(data, jnp.uint32),
+                                        impl=impl)
+    except Exception:
+        # unknown impl string on this jax version — the resume is NOT
+        # bitwise from here (the key restarts from the template's value)
+        warnings.warn(f"cannot rebuild a PRNG key with impl={impl!r} on "
+                      "this jax version; keeping the template key — the "
+                      "restored random stream will diverge from the "
+                      "checkpointed run")
+        return template
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
@@ -45,7 +83,7 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
             out.update(_flatten(v, f"{prefix}{i}/"))
     else:
         key = prefix.rstrip("/")
-        out[key] = _SKIP if _is_prng_key(tree) else np.asarray(tree)
+        out[key] = _KeyLeaf(tree) if _is_prng_key(tree) else np.asarray(tree)
     return out
 
 
@@ -62,8 +100,13 @@ def _unflatten_into(template: Any, flat: dict, prefix: str = ""):
             _unflatten_into(v, flat, f"{prefix}{i}/")
             for i, v in enumerate(template))
     key = prefix.rstrip("/")
-    if _is_prng_key(template) or key not in flat:
-        return template  # PRNG keys (and anything skipped) keep current value
+    if key not in flat:
+        return template  # anything missing keeps its current value
+    if _is_prng_key(template):
+        v = flat[key]
+        if isinstance(v, tuple) and v[0] == _PRNG_TAG:
+            return _wrap_key(v[1], v[2], template)
+        return template  # pre-key-serialization checkpoint: keep the reseed
     return jnp.asarray(flat[key]).astype(getattr(template, "dtype", None))
 
 
@@ -73,9 +116,10 @@ def save_checkpoint(path: str | Path, tree: Any, step: int) -> Path:
     path.parent.mkdir(parents=True, exist_ok=True)
     manifest, stored = {}, {}
     for k, v in _flatten(tree).items():
-        if isinstance(v, str) and v == _SKIP:
-            continue
-        if v.dtype == jnp.bfloat16:
+        if isinstance(v, _KeyLeaf):
+            stored[k] = v.data
+            manifest[k] = _PRNG_TAG + v.impl
+        elif v.dtype == jnp.bfloat16:
             stored[k] = v.view(np.uint16)
             manifest[k] = "bfloat16"
         else:
@@ -99,7 +143,10 @@ def restore_checkpoint(path: str | Path, template: Any) -> tuple[Any, int]:
             if k.startswith("__"):
                 continue
             v = z[k]
-            if manifest.get(k) == "bfloat16":
+            tag = manifest.get(k, "")
+            if tag == "bfloat16":
                 v = v.view(jnp.bfloat16)
+            elif tag.startswith(_PRNG_TAG):
+                v = (_PRNG_TAG, v, tag[len(_PRNG_TAG):])
             flat[k] = v
     return _unflatten_into(template, flat), step

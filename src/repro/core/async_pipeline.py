@@ -50,6 +50,22 @@ class ScoreMetrics(NamedTuple):
     trace_unif: jax.Array
 
 
+def score_trace_metrics(fresh_scores, stale_slice, axes, n_total,
+                        monitor: bool = True) -> ScoreMetrics:
+    """The scoring step's fig-4 monitors as ScoreMetrics (√TrΣ), shared by
+    the async pipeline and the streamed scoring step of data/streaming.py.
+    With ``monitor=False`` returns NaNs and stays collective-free."""
+    if not monitor:
+        nan = jnp.full((), jnp.nan, jnp.float32)
+        return ScoreMetrics(nan, nan, nan)
+    traces = variance.trace_sigma_all_dist(fresh_scores, stale_slice,
+                                           axes, n_total=n_total)
+    return ScoreMetrics(
+        trace_ideal=jnp.sqrt(jnp.maximum(traces.ideal, 0.0)),
+        trace_stale=jnp.sqrt(jnp.maximum(traces.stale, 0.0)),
+        trace_unif=jnp.sqrt(jnp.maximum(traces.unif, 0.0)))
+
+
 def make_async_steps(
     per_example_loss: Callable,
     scorer: Callable,
@@ -90,16 +106,8 @@ def make_async_steps(
     def scoring_step(stale_params, write_buf, step, data):
         store, fresh_scores, stale_slice = scoring_pass(
             stale_params, write_buf, step, data)
-        if monitor_traces:
-            traces = variance.trace_sigma_all_dist(fresh_scores, stale_slice,
-                                                   axes, n_total=sb)
-            smetrics = ScoreMetrics(
-                trace_ideal=jnp.sqrt(jnp.maximum(traces.ideal, 0.0)),
-                trace_stale=jnp.sqrt(jnp.maximum(traces.stale, 0.0)),
-                trace_unif=jnp.sqrt(jnp.maximum(traces.unif, 0.0)))
-        else:
-            nan = jnp.full((), jnp.nan, jnp.float32)
-            smetrics = ScoreMetrics(nan, nan, nan)
+        smetrics = score_trace_metrics(fresh_scores, stale_slice, axes,
+                                       n_total=sb, monitor=monitor_traces)
         return store, smetrics
 
     def master_step(params, opt_state, stale_params, read_buf, step, rng,

@@ -59,13 +59,16 @@ def gather_rows(arrays: Any, idx: jax.Array, axes: Axes) -> Any:
     arrays: pytree whose leaves are local shards with a common leading
     example axis.  With axes=() this is exactly ``leaf[idx]``.
     """
+    from repro.data.pipeline import take_rows
     dev_id, _ = axis_info(axes)
 
     def one(a):
         n_local = a.shape[0]
         lidx = idx - dev_id * n_local
         mine = (lidx >= 0) & (lidx < n_local)
-        rows = a[jnp.clip(lidx, 0, n_local - 1)]
+        # explicit clip: foreign rows clamp in-shard and are masked to zero
+        # below, so the clamped value never escapes the psum
+        rows = take_rows(a, lidx, mode="clip")
         mask = mine.reshape((-1,) + (1,) * (rows.ndim - 1))
         return psum(jnp.where(mask, rows, jnp.zeros_like(rows)), axes)
 

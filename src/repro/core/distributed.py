@@ -222,6 +222,80 @@ def make_sharded_async_steps(
     return scoring_step, master_step, cfg
 
 
+def make_sharded_streamed_steps(
+    per_example_loss: Callable,
+    scorer: Callable,
+    optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    mesh: Mesh,
+    data_template: dict,
+    chunk_size: int,
+    aux_loss: Optional[Callable] = None,
+    fused_score: Optional[Callable] = None,
+    async_mode: bool = False,
+    monitor_traces: bool = True,
+) -> tuple[Callable, Callable, Callable, ISSGDConfig]:
+    """The streamed data plane's three device programs under shard_map.
+
+    Returns ``(scoring_step, sample_step, master_step, cfg)`` ready for
+    data.streaming.StreamedISSGD.  The scoring fan-out consumes its
+    host-streamed round-robin rows example-axis-sharded (each device gets
+    exactly its slice — still zero collectives in the non-monitored
+    build); the sampled minibatch arrives replicated; neither program ever
+    takes the dataset, so the streamed HLO gate extends the no-full-table
+    guarantee to the examples themselves: the only example-count-sized
+    arrays in any program are the sharded f32[N] table shards.
+
+    ``data_template`` only fixes per-key ndim/dtype for the specs; shapes
+    may differ (the template is typically the resident arrays or one host
+    chunk).
+    """
+    from repro.core.async_pipeline import ScoreMetrics
+    from repro.data.streaming import make_streamed_steps
+
+    axes = data_axes(mesh)
+    nd = mesh_device_count(mesh, axes)
+    cfg = resolve_score_shards(cfg, mesh)
+    if num_examples % nd:
+        raise ValueError(f"num_examples={num_examples} not divisible by "
+                         f"{nd} devices")
+
+    scoring_body, sample_body, master_body = make_streamed_steps(
+        per_example_loss, scorer, optimizer, cfg, num_examples, chunk_size,
+        aux_loss=aux_loss, fused_score=fused_score, axes=axes,
+        async_mode=async_mode, monitor_traces=monitor_traces)
+    expect_scores = master_body.expect_scores
+
+    store_spec = _store_pspec(axes)
+    ds = _dspec(axes)
+    sharded_rows = dataset_pspecs(data_template, mesh)   # scoring stream
+    replicated_rows = {k: P() for k in data_template}    # sampled minibatch
+    smetric_specs = ScoreMetrics(*([P()] * len(ScoreMetrics._fields)))
+    metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
+
+    scoring_step = shard_map(
+        scoring_body, mesh=mesh,
+        in_specs=(P(), store_spec, P(), sharded_rows),
+        out_specs=(store_spec, ds, ds, smetric_specs),
+    )
+    sample_step = shard_map(
+        sample_body, mesh=mesh,
+        in_specs=(store_spec, P(), P()),
+        out_specs=(P(), P()),
+    )
+    master_in = (P(), P(), P(), store_spec, P(), P(), replicated_rows)
+    if expect_scores:
+        master_in += (ds, ds)
+    master_step = shard_map(
+        master_body, mesh=mesh,
+        in_specs=master_in,
+        out_specs=(P(), P(), P(), store_spec, P(), P(), metric_specs),
+    )
+    master_step.expect_scores = expect_scores
+    return scoring_step, sample_step, master_step, cfg
+
+
 def make_sharded_score_step(
     scorer: Callable,
     cfg: ISSGDConfig,

@@ -134,12 +134,27 @@ def _score_slice(step: jax.Array, w_loc: int, n_w: int, sb_w: int) -> jax.Array:
     return (jnp.arange(w_loc)[:, None] * n_w + base[None, :]).reshape(-1)
 
 
+def scoring_layout(cfg: ISSGDConfig, num_examples: int,
+                   n_dev: int = 1) -> tuple[int, int, int]:
+    """Static (w_loc, n_w, sb_w) scoring layout for an n_dev-device run —
+    the host-side streaming scheduler (data/streaming.py) uses this plus
+    `_score_slice`'s formula to pre-fetch exactly the rows each device's
+    scoring pass will touch, without tracing anything."""
+    if num_examples % n_dev:
+        raise ValueError(f"num_examples={num_examples} not divisible by "
+                         f"{n_dev} devices")
+    sb = num_examples if cfg.mode == "exact" else cfg.score_batch_size
+    return _resolve_shards(cfg, num_examples, sb, num_examples // n_dev,
+                           n_dev)
+
+
 def make_scoring_pass(
     scorer: Callable,               # (params, batch) -> (B,) ω̃ (grad norms)
     cfg: ISSGDConfig,
     num_examples: int,
     constrain_batch: Optional[Callable] = None,
     axes: tuple[str, ...] = (),
+    streaming: bool = False,
 ) -> Callable:
     """The workers' scoring fan-out as a reusable body.
 
@@ -149,6 +164,13 @@ def make_scoring_pass(
     proposal over the slice *before* the write (the eq. 9 monitor input).
     Shard-local end to end (zero collectives) — in the async pipeline this
     is the computation that overlaps the master update.
+
+    With ``streaming=True`` the ``data`` argument is the *pre-gathered*
+    scoring slice itself (this device's sb_w·w_loc rows, host-streamed by
+    data/streaming.py) rather than the device-resident dataset: the body
+    never sees an example-count-sized array, which is the no-full-dataset
+    guarantee the streamed HLO gate pins.  The store write still lands at
+    the same round-robin indices, so the two variants are bitwise equal.
     """
     is_cfg = cfg.is_cfg
     n = num_examples
@@ -162,7 +184,8 @@ def make_scoring_pass(
         n_local = store.weights.shape[0]
         w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
         score_idx = _score_slice(step, w_loc, n_w, sb_w)
-        score_batch = constrain_batch(gather_batch(data, score_idx))
+        score_batch = constrain_batch(
+            data if streaming else gather_batch(data, score_idx))
         fresh_scores = scorer(score_params, score_batch)
         # stale view of the slice BEFORE the write (for eq. 9 monitor)
         pre_proposal = read_proposal(store, step, is_cfg)
@@ -187,6 +210,11 @@ def make_master_pass(
     # the gathered minibatch is batch-sharded over the data axes
     axes: tuple[str, ...] = (),     # mesh axes the example dim is sharded
     # over when the step runs inside shard_map; () = single-device
+    streaming: bool = False,        # `data` is the pre-gathered replicated
+    # minibatch (B rows) instead of the resident dataset; the sampled
+    # indices are still drawn in-program from the store, and the host
+    # driver (data/streaming.py) resolves them against its window — the
+    # draw is deterministic given (store, step, rng), so both sides agree
 ) -> Callable:
     """The master's half of the step as a reusable body.
 
@@ -230,7 +258,8 @@ def make_master_pass(
                                    axes=axes, shards_per_device=w_loc)
             sampled_w = gather_rows(proposal, idx, axes)
             scales = is_loss_scale(sampled_w, mean_weight)
-        batch = constrain_batch(gather_rows(data, idx, axes))
+        batch = constrain_batch(data if streaming
+                                else gather_rows(data, idx, axes))
 
         # ---- 4. unbiased IS-scaled update (§4.1) ----------------------------
         # The gathered minibatch is replicated; every device computes the

@@ -92,6 +92,41 @@ def two_stage_sample(
     return gidx.astype(jnp.int32)
 
 
+def index_to_chunk(idx, chunk_size: int):
+    """Resolve global example indices to (chunk, offset) coordinates of the
+    chunked example store (data/store.py).  Works on jnp and np arrays —
+    the device programs use it to bucket proposal mass per chunk, the host
+    data plane uses it to route sampled indices to window slots or host
+    fetches."""
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    return idx // chunk_size, idx % chunk_size
+
+
+def chunk_proposal_mass(proposal: jax.Array, chunk_size: int,
+                        axes: tuple[str, ...] = ()) -> jax.Array:
+    """Per-chunk mass of the (shard-local) proposal, combined into the
+    replicated global f32[num_chunks] vector.
+
+    This is the signal the streaming data plane prefetches on: chunks
+    carrying the most proposal mass are made device-resident before they
+    are drawn.  Same one-owner layout as the two-stage draw — device d's
+    chunks occupy the contiguous block starting at d * local_chunks — so
+    one psum of a num_chunks-float vector shares it (never the f32[N]
+    table)."""
+    n_local = proposal.shape[0]
+    if n_local % chunk_size:
+        raise ValueError(f"local table size {n_local} not divisible by "
+                         f"chunk_size={chunk_size}")
+    local_chunks = n_local // chunk_size
+    dev_id, n_dev = axis_info(axes)
+    local_mass = jnp.sum(proposal.reshape(local_chunks, chunk_size), axis=1)
+    mass = jax.lax.dynamic_update_slice(
+        jnp.zeros((local_chunks * n_dev,), local_mass.dtype),
+        local_mass, (dev_id * local_chunks,))
+    return psum(mass, axes)
+
+
 def sample_indices(
     key: jax.Array,
     weights: jax.Array,

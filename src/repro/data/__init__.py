@@ -1,5 +1,21 @@
 from repro.data.pipeline import (ArrayDataset, make_svhn_like,
-                                 make_token_dataset, gather_batch)
+                                 make_token_dataset, gather_batch,
+                                 take_rows)
+from repro.data.store import ChunkedExampleStore
 
 __all__ = ["ArrayDataset", "make_svhn_like", "make_token_dataset",
-           "gather_batch"]
+           "gather_batch", "take_rows", "ChunkedExampleStore",
+           "StreamingDataPlane", "StreamedISSGD", "make_streamed_issgd",
+           "make_streamed_steps"]
+
+_STREAMING = ("StreamingDataPlane", "StreamedISSGD", "make_streamed_issgd",
+              "make_streamed_steps")
+
+
+def __getattr__(name):
+    # lazy: streaming pulls in core.issgd, which imports data.pipeline —
+    # an eager import here would deadlock `import repro.core.issgd`
+    if name in _STREAMING:
+        from repro.data import streaming
+        return getattr(streaming, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

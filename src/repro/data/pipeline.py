@@ -20,6 +20,28 @@ import jax
 import jax.numpy as jnp
 
 
+#: Gather modes for `take_rows`/`gather_batch`.  The hot paths (sampler
+#: indices, round-robin scoring slices, window positions) are constructed
+#: in-bounds, so they promise it and XLA skips the bounds handling;
+#: "clip" is for callers that mask clamped rows afterwards (the one-owner
+#: gathers of core/collectives.py); "fill" poisons out-of-range rows so a
+#: schedule bug surfaces as NaN instead of a silently repeated example.
+GATHER_MODES = ("promise_in_bounds", "clip", "fill")
+
+
+def take_rows(array: jax.Array, indices: jax.Array,
+              mode: str = "promise_in_bounds") -> jax.Array:
+    """Row gather with an *explicit* out-of-bounds mode.
+
+    The single gather primitive shared by `ArrayDataset.batch`, the
+    streaming window of data/streaming.py, and the one-owner collectives —
+    no call site relies on an implicit clamp/fill default.
+    """
+    if mode not in GATHER_MODES:
+        raise ValueError(f"mode={mode!r} not in {GATHER_MODES}")
+    return array.at[indices].get(mode=mode)
+
+
 @dataclasses.dataclass
 class ArrayDataset:
     """A tree of arrays with a common leading example axis."""
@@ -29,16 +51,18 @@ class ArrayDataset:
     def size(self) -> int:
         return jax.tree.leaves(self.arrays)[0].shape[0]
 
-    def batch(self, indices: jax.Array) -> dict[str, jax.Array]:
-        return gather_batch(self.arrays, indices)
+    def batch(self, indices: jax.Array,
+              mode: str = "promise_in_bounds") -> dict[str, jax.Array]:
+        return gather_batch(self.arrays, indices, mode=mode)
 
     def slice(self, start: int, count: int) -> dict[str, jax.Array]:
         return {k: jax.lax.dynamic_slice_in_dim(v, start, count, 0)
                 for k, v in self.arrays.items()}
 
 
-def gather_batch(arrays: dict[str, jax.Array], indices: jax.Array) -> dict:
-    return {k: jnp.take(v, indices, axis=0) for k, v in arrays.items()}
+def gather_batch(arrays: dict[str, jax.Array], indices: jax.Array,
+                 mode: str = "promise_in_bounds") -> dict:
+    return {k: take_rows(v, indices, mode=mode) for k, v in arrays.items()}
 
 
 def make_svhn_like(

@@ -1,0 +1,143 @@
+"""Host-resident chunked example store — the dataset half of the paper's
+"too big for one place" premise.
+
+The paper keeps the training set and its importance-weight database out of
+the master's memory: workers sweep the full dataset, the master touches
+only the sampled minibatch.  `ChunkedExampleStore` is the dataset-side
+equivalent of the sharded WeightStore: examples live in host memory as
+fixed-size numpy chunks with a stable global index space
+
+    global index g  ->  chunk g // chunk_size, offset g % chunk_size
+
+and each data-axis shard owns a *contiguous* chunk range (shard d of D
+owns chunks [d·K, (d+1)·K) with K = num_chunks // D), mirroring the
+contiguous-block layout of core/collectives.py so the same
+index-arithmetic resolves rows on both sides.
+
+Device residency is someone else's job: data/streaming.py keeps a bounded
+window of chunks on device and fetches the rest from here in batched,
+chunk-grouped reads.  On a multi-host pod each host would hold only its
+own chunk range (the ranges are the unit of cross-host ownership); in the
+single-host container every range is local, same code path.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Mapping
+
+import numpy as np
+
+from repro.core.sampler import index_to_chunk
+
+
+class ChunkedExampleStore:
+    """Fixed-size host-memory chunks of an example-axis array tree."""
+
+    def __init__(self, chunks: list[dict[str, np.ndarray]], chunk_size: int):
+        if not chunks:
+            raise ValueError("need at least one chunk")
+        self.chunk_size = int(chunk_size)
+        self._chunks = chunks
+        for c, chunk in enumerate(chunks):
+            for k, v in chunk.items():
+                if v.shape[0] != self.chunk_size:
+                    raise ValueError(
+                        f"chunk {c} array {k!r} has {v.shape[0]} rows, "
+                        f"expected chunk_size={self.chunk_size}")
+
+    @classmethod
+    def from_arrays(cls, arrays: Mapping[str, np.ndarray],
+                    chunk_size: int) -> "ChunkedExampleStore":
+        """Chunk an array tree (jax or numpy) into host memory.  Each chunk
+        is its own contiguous allocation — after this, nothing references
+        the monolithic arrays."""
+        host = {k: np.asarray(v) for k, v in arrays.items()}
+        n = next(iter(host.values())).shape[0]
+        for k, v in host.items():
+            if v.shape[0] != n:
+                raise ValueError(f"array {k!r} has {v.shape[0]} rows, "
+                                 f"others have {n}")
+        if chunk_size <= 0 or n % chunk_size:
+            raise ValueError(f"chunk_size={chunk_size} must divide the "
+                             f"example count {n}")
+        chunks = [
+            {k: np.ascontiguousarray(v[c * chunk_size:(c + 1) * chunk_size])
+             for k, v in host.items()}
+            for c in range(n // chunk_size)
+        ]
+        return cls(chunks, chunk_size)
+
+    # ---- shape / layout ---------------------------------------------------
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self._chunks)
+
+    @property
+    def num_examples(self) -> int:
+        return self.num_chunks * self.chunk_size
+
+    @property
+    def keys(self) -> tuple[str, ...]:
+        return tuple(self._chunks[0].keys())
+
+    def row_shape(self, key: str) -> tuple:
+        return self._chunks[0][key].shape[1:]
+
+    def dtype(self, key: str) -> np.dtype:
+        return self._chunks[0][key].dtype
+
+    def nbytes(self) -> int:
+        return sum(v.nbytes for c in self._chunks for v in c.values())
+
+    def shard_chunks(self, shard: int, n_shards: int) -> range:
+        """The contiguous chunk range shard `shard` of `n_shards` owns."""
+        if self.num_chunks % n_shards:
+            raise ValueError(f"num_chunks={self.num_chunks} not divisible "
+                             f"by {n_shards} shards")
+        per = self.num_chunks // n_shards
+        if not 0 <= shard < n_shards:
+            raise ValueError(f"shard {shard} out of range({n_shards})")
+        return range(shard * per, (shard + 1) * per)
+
+    def owner_shard(self, chunk: int | np.ndarray, n_shards: int):
+        """Which shard owns a chunk (vectorized over arrays)."""
+        per = self.num_chunks // n_shards
+        return chunk // per
+
+    # ---- reads ------------------------------------------------------------
+
+    def chunk(self, c: int) -> dict[str, np.ndarray]:
+        """One chunk's array tree (zero-copy host view)."""
+        return self._chunks[c]
+
+    def iter_chunks(self, chunks: range | None = None
+                    ) -> Iterator[tuple[int, dict[str, np.ndarray]]]:
+        for c in (chunks if chunks is not None else range(self.num_chunks)):
+            yield c, self._chunks[c]
+
+    def fetch_rows(self, global_idx: np.ndarray) -> dict[str, np.ndarray]:
+        """Batched host read at arbitrary global indices, grouped by chunk
+        so each chunk is touched once (the paper's workers sweep chunk by
+        chunk; random row reads only pay one fancy-index per *distinct*
+        chunk).  Rows come back in the order of `global_idx`."""
+        gidx = np.asarray(global_idx).reshape(-1)
+        if gidx.size and (gidx.min() < 0 or gidx.max() >= self.num_examples):
+            bad = gidx[(gidx < 0) | (gidx >= self.num_examples)]
+            raise IndexError(f"indices out of range [0, {self.num_examples})"
+                             f": {bad[:8]}")
+        cidx, off = index_to_chunk(gidx, self.chunk_size)
+        out = {k: np.empty((gidx.size,) + self.row_shape(k),
+                           dtype=self.dtype(k)) for k in self.keys}
+        for c in np.unique(cidx):
+            sel = cidx == c
+            chunk = self._chunks[int(c)]
+            for k in self.keys:
+                out[k][sel] = chunk[k][off[sel]]
+        return out
+
+    def stack_chunks(self, chunks: list[int] | np.ndarray
+                     ) -> dict[str, np.ndarray]:
+        """Concatenate whole chunks in the given order (window assembly)."""
+        ids = [int(c) for c in chunks]
+        return {k: np.concatenate([self._chunks[c][k] for c in ids], axis=0)
+                for k in self.keys}

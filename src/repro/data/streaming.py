@@ -1,0 +1,568 @@
+"""Streaming data plane: host-resident dataset, proposal-aware device window.
+
+The third sharded resource after the WeightStore and the mesh.  The paper's
+premise is that the training set is too large to sit next to the master:
+workers sweep it for informative examples, the master touches only the
+sampled minibatch.  `ArrayDataset` keeps every example device-resident,
+which caps dataset size at device memory; this module lifts that cap:
+
+  ChunkedExampleStore (data/store.py)
+      examples live in host memory as fixed-size numpy chunks with a
+      stable global index space, each data-axis shard owning a contiguous
+      chunk range;
+
+  StreamingDataPlane
+      keeps a bounded device-resident **working-set window** of chunks per
+      shard, resolves sampled indices with a *two-level gather* — an
+      on-device hit for rows in hot chunks (the one-owner masked-psum
+      gather of core/collectives.py over the window), a batched
+      chunk-grouped host fetch for misses — and prefetches the next window
+      double-buffered off the proposal distribution: the chunks carrying
+      the most proposal mass are device-resident before they are drawn;
+
+  StreamedISSGD
+      the host driver.  The fused/async ISSGD step is split into three
+      device programs, none of which ever takes the dataset as an input:
+
+        scoring_step(θ_stale, store, t, score_slice_rows)   shard-local
+        sample_step(store, t, rng) -> (idx, chunk_mass)     the draw
+        master_step(..., store, t, rng, minibatch_rows)     the update
+
+      Scoring sweeps *stream* chunk rows through each device round-robin
+      (the schedule is `issgd._score_slice`, replayed on the host in
+      numpy), so rescoring covers the full dataset without materializing
+      it on device — the dataset-side mirror of the no-full-table
+      guarantee for the f32[N] weight table.  The sampled indices are
+      drawn on device from the store, synced to the host, resolved through
+      the window, and the gathered minibatch is fed back in.
+
+Bitwise invariant (pinned in tests/test_streaming.py): a streamed run is
+same-seed *bitwise identical* to the device-resident run in every mode
+(relaxed / fused / async, any mesh that divides the chunk layout).  The
+scoring rows, the minibatch rows, and the sampled indices are the same
+bits whether they arrive from the resident dataset, the window, or a host
+fetch; which chunks happen to be hot changes only *where* rows come from,
+never their values — so window policy is pure performance, not numerics.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.async_pipeline import score_trace_metrics
+from repro.core.collectives import axis_info, gather_rows
+from repro.core.issgd import (ISSGDConfig, StepMetrics, TrainState,
+                              make_master_pass, make_scoring_pass,
+                              scoring_layout)
+from repro.core.sampler import chunk_proposal_mass, index_to_chunk
+from repro.core.weight_store import (BufferedWeightStore, WeightStore,
+                                     publish, read_proposal)
+from repro.data.store import ChunkedExampleStore
+
+
+def host_score_slice(step: int, w_loc: int, n_w: int, sb_w: int) -> np.ndarray:
+    """Numpy twin of ``issgd._score_slice``: the local indices of step
+    `step`'s round-robin scoring slice.  The host scheduler replays the
+    device formula exactly so the streamed rows land at the indices the
+    scoring pass will write."""
+    base = (step * sb_w + np.arange(sb_w)) % n_w
+    return (np.arange(w_loc)[:, None] * n_w + base[None, :]).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# device programs
+# ---------------------------------------------------------------------------
+
+def make_streamed_steps(
+    per_example_loss: Callable,
+    scorer: Callable,
+    optimizer,
+    cfg: ISSGDConfig,
+    num_examples: int,
+    chunk_size: int,
+    aux_loss: Optional[Callable] = None,
+    fused_score: Optional[Callable] = None,
+    constrain_batch: Optional[Callable] = None,
+    axes: tuple[str, ...] = (),
+    async_mode: bool = False,
+    monitor_traces: bool = True,
+) -> tuple[Callable, Callable, Callable]:
+    """The three device programs of the streamed ISSGD step.
+
+    Returns ``(scoring_step, sample_step, master_step)``:
+
+      scoring_step(score_params, store, step, score_rows)
+          -> (store', fresh_scores, stale_slice, ScoreMetrics)
+      sample_step(store, step, rng) -> (idx, chunk_mass)
+      master_step(params, opt_state, stale_params, store, step, rng,
+                  batch_rows[, fresh_scores, stale_slice])
+          -> (params', opt_state', stale_params', store', step+1, rng',
+              StepMetrics)
+
+    None of the programs takes the dataset: ``score_rows`` is this step's
+    pre-gathered round-robin slice, ``batch_rows`` the pre-gathered
+    sampled minibatch.  ``sample_step`` performs the identical proposal
+    read + two-stage draw the master will re-run, so host and device agree
+    on the indices without a device→host→device round-trip inside the
+    master program; it additionally buckets the proposal into per-chunk
+    mass (one psum of a num_chunks-float vector) — the prefetch signal.
+
+    In the sync composition (``async_mode=False``) the master receives the
+    fresh scores for the fig-4 monitors, exactly like the fused step; in
+    async mode (relaxed/uniform only) the monitors ride with the scoring
+    step (``monitor_traces``), the master's traces come back NaN, and the
+    two programs share no buffers — the AsyncPipeline discipline over the
+    double-buffered store, with the fan-out's rows host-streamed.
+    """
+    if cfg.mode == "exact":
+        raise ValueError(
+            "mode='exact' rescores the full dataset every step, which "
+            "requires it device-resident — streaming is pointless there; "
+            "use the ArrayDataset path")
+    if async_mode and cfg.mode not in ("relaxed", "uniform"):
+        raise ValueError(
+            "async streaming supports mode='relaxed'/'uniform' (fused "
+            f"already merges the passes), got {cfg.mode!r}")
+    if num_examples % chunk_size:
+        raise ValueError(f"chunk_size={chunk_size} must divide "
+                         f"num_examples={num_examples}")
+    axes = tuple(axes)
+    n = num_examples
+    sb = cfg.score_batch_size
+    is_cfg = cfg.is_cfg
+    # the master reads the fresh scores only in the sync non-fused
+    # composition; fused computes its own, async leaves them to scoring
+    expect_scores = (not async_mode) and cfg.mode != "fused"
+    traces_in_scoring = async_mode and monitor_traces
+
+    scoring_pass = make_scoring_pass(scorer, cfg, n, constrain_batch, axes,
+                                     streaming=True)
+    master_pass = make_master_pass(per_example_loss, optimizer, cfg, n,
+                                   aux_loss=aux_loss,
+                                   fused_score=fused_score,
+                                   constrain_batch=constrain_batch,
+                                   axes=axes, streaming=True)
+
+    def scoring_step(score_params, store: WeightStore, step, score_rows):
+        store, fresh_scores, stale_slice = scoring_pass(
+            score_params, store, step, score_rows)
+        smetrics = score_trace_metrics(fresh_scores, stale_slice, axes,
+                                       n_total=sb,
+                                       monitor=traces_in_scoring)
+        return store, fresh_scores, stale_slice, smetrics
+
+    def sample_step(store: WeightStore, step, rng):
+        from repro.core.sampler import two_stage_sample
+        _, k_sample = jax.random.split(rng)          # master's split, replayed
+        _, n_dev = axis_info(axes)
+        w_loc, _, _ = scoring_layout(cfg, n, n_dev)
+        proposal = read_proposal(store, step, is_cfg)
+        if cfg.mode == "uniform":
+            idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
+        else:
+            idx = two_stage_sample(k_sample, proposal, cfg.batch_size,
+                                   axes=axes, shards_per_device=w_loc)
+        mass = chunk_proposal_mass(proposal, chunk_size, axes)
+        return idx, mass
+
+    if expect_scores:
+        def master_step(params, opt_state, stale_params, store, step, rng,
+                        batch_rows, fresh_scores, stale_slice):
+            rng, k_sample = jax.random.split(rng)
+            params, opt_state, stale_params, store, metrics = master_pass(
+                params, opt_state, stale_params, store, step, k_sample,
+                batch_rows, fresh_scores, stale_slice)
+            return (params, opt_state, stale_params, store, step + 1, rng,
+                    metrics)
+    else:
+        def master_step(params, opt_state, stale_params, store, step, rng,
+                        batch_rows):
+            rng, k_sample = jax.random.split(rng)
+            params, opt_state, stale_params, store, metrics = master_pass(
+                params, opt_state, stale_params, store, step, k_sample,
+                batch_rows)
+            return (params, opt_state, stale_params, store, step + 1, rng,
+                    metrics)
+
+    master_step.expect_scores = expect_scores
+    return scoring_step, sample_step, master_step
+
+
+# ---------------------------------------------------------------------------
+# the data plane
+# ---------------------------------------------------------------------------
+
+class WindowStats(NamedTuple):
+    """Cumulative two-level-gather counters (benchmarks read these)."""
+    hits: int
+    misses: int
+    streamed_rows: int     # rows host-fetched for scoring sweeps
+    swaps: int
+    prefetches: int
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+
+class StreamingDataPlane:
+    """Bounded device window over a ChunkedExampleStore.
+
+    Owns three responsibilities, all value-transparent (the bits of every
+    row are identical whichever path serves it):
+
+      * ``gather_global(idx)`` — the two-level gather.  Rows whose chunk
+        is in the window are gathered on device (one-owner masked psum on
+        a mesh, plain in-bounds gather on one device); the rest are
+        fetched from the host store grouped by chunk and device_put once.
+      * ``fetch_sharded(idx_per_shard)`` — the scoring stream: each
+        shard's round-robin slice is read from host chunks and placed
+        directly as the sharded score batch.  Scoring never goes through
+        the window — it *is* the stream that sweeps the dataset.
+      * ``prefetch(chunk_mass)`` / ``swap_window()`` — proposal-aware
+        double-buffered window refresh.  ``prefetch`` assembles the next
+        window (top-`window_chunks` chunks per shard by proposal mass,
+        ties broken toward lower chunk ids) into a *pending* buffer while
+        the current window keeps serving gathers; ``swap_window`` flips
+        the buffers at a step boundary.  Eviction is implicit: a chunk
+        not in the new top-K simply isn't in the next buffer.
+
+    The window is one global device array tree of
+    ``n_shards · window_chunks · chunk_size`` rows, example-axis-sharded
+    on a mesh so shard d's slice holds the chunks d owns — the same
+    contiguous layout the collectives assume, with the *slot* index space
+    standing in for the example index space.
+    """
+
+    def __init__(self, store: ChunkedExampleStore, window_chunks: int,
+                 mesh: Optional[Mesh] = None):
+        from repro.dist import data_axes
+
+        self.store = store
+        self.mesh = mesh
+        self.axes = data_axes(mesh) if mesh is not None else ()
+        self.n_shards = 1
+        for a in self.axes:
+            self.n_shards *= mesh.shape[a]
+        if store.num_chunks % self.n_shards:
+            raise ValueError(f"num_chunks={store.num_chunks} not divisible "
+                             f"by {self.n_shards} shards")
+        per_shard = store.num_chunks // self.n_shards
+        if not 1 <= window_chunks <= per_shard:
+            raise ValueError(f"window_chunks={window_chunks} must be in "
+                             f"[1, {per_shard}] (chunks per shard)")
+        self.window_chunks = int(window_chunks)
+        self.chunk_size = store.chunk_size
+
+        self._hits = self._misses = self._streamed = 0
+        self._swaps = self._prefetches = 0
+        self._pending: Optional[tuple[np.ndarray, dict]] = None
+        self._combine = self._build_combine()
+
+        # cold window: the first window_chunks chunks of each shard's range
+        cold = np.stack([np.arange(self.window_chunks)
+                         + store.shard_chunks(d, self.n_shards).start
+                         for d in range(self.n_shards)])
+        self._install_window(cold, self._put_sharded(
+            store.stack_chunks(cold.reshape(-1))))
+
+    # ---- placement --------------------------------------------------------
+
+    def _put_sharded(self, host: dict) -> dict:
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in host.items()}
+        from repro.dist.sharding import dim_spec
+        spec = lambda v: P(dim_spec(self.axes), *([None] * (v.ndim - 1)))
+        return {k: jax.device_put(v, NamedSharding(self.mesh, spec(v)))
+                for k, v in host.items()}
+
+    def _put_replicated(self, host):
+        if self.mesh is None:
+            return jax.tree.map(jnp.asarray, host)
+        return jax.tree.map(
+            lambda v: jax.device_put(v, NamedSharding(self.mesh, P())), host)
+
+    # ---- the two-level gather ---------------------------------------------
+
+    def _build_combine(self) -> Callable:
+        axes = self.axes
+
+        def body(window, pos, hit, miss_rows):
+            rows = gather_rows(window, pos, axes)    # hit rows, replicated
+            def one(r, m):
+                mask = hit.reshape((-1,) + (1,) * (r.ndim - 1))
+                return jnp.where(mask, r, m)
+            return jax.tree.map(one, rows, miss_rows)
+
+        if self.mesh is None:
+            return jax.jit(body)
+        from repro.dist import shard_map
+        from repro.dist.sharding import dim_spec
+        win_specs = {k: P(dim_spec(axes),
+                          *([None] * len(self.store.row_shape(k))))
+                     for k in self.store.keys}
+        rep = {k: P() for k in self.store.keys}
+        return jax.jit(shard_map(
+            body, mesh=self.mesh,
+            in_specs=(win_specs, P(), P(), rep),
+            out_specs=rep,
+        ))
+
+    def gather_global(self, idx: np.ndarray) -> dict:
+        """Resolve global example indices into a replicated device batch:
+        window hits on device, misses via one batched host fetch."""
+        idx = np.asarray(idx).reshape(-1)
+        cidx, off = index_to_chunk(idx, self.chunk_size)
+        slot = self._chunk_slot[cidx]
+        hit = slot >= 0
+        pos = np.where(hit, slot * self.chunk_size + off, 0)
+        miss_rows = {k: np.zeros((idx.size,) + self.store.row_shape(k),
+                                 dtype=self.store.dtype(k))
+                     for k in self.store.keys}
+        n_miss = int((~hit).sum())
+        if n_miss:
+            fetched = self.store.fetch_rows(idx[~hit])
+            for k in self.store.keys:
+                miss_rows[k][~hit] = fetched[k]
+        self._hits += int(hit.sum())
+        self._misses += n_miss
+        return self._combine(self._window,
+                             self._put_replicated(jnp.asarray(pos, jnp.int32)),
+                             self._put_replicated(jnp.asarray(hit)),
+                             self._put_replicated(miss_rows))
+
+    def fetch_sharded(self, idx_per_shard: np.ndarray) -> dict:
+        """The scoring stream: (n_shards, rows) global indices → a sharded
+        device batch of n_shards·rows examples, shard d's slice holding
+        its rows.  Pure host fetch + one placement; never the window."""
+        idx_per_shard = np.asarray(idx_per_shard)
+        if idx_per_shard.shape[0] != self.n_shards:
+            raise ValueError(f"expected {self.n_shards} shard rows, got "
+                             f"{idx_per_shard.shape[0]}")
+        self._streamed += idx_per_shard.size
+        return self._put_sharded(
+            self.store.fetch_rows(idx_per_shard.reshape(-1)))
+
+    # ---- proposal-aware window refresh ------------------------------------
+
+    def _install_window(self, ids: np.ndarray, arrays: dict) -> None:
+        self._window_ids = ids
+        self._window = arrays
+        slot = np.full((self.store.num_chunks,), -1, np.int64)
+        slot[ids.reshape(-1)] = np.arange(ids.size)
+        self._chunk_slot = slot
+
+    def prefetch(self, chunk_mass: np.ndarray) -> bool:
+        """Assemble the next window off the proposal's per-chunk mass into
+        the pending buffer (double-buffered: the live window is untouched
+        until ``swap_window``).  Returns whether a new buffer was staged."""
+        self._prefetches += 1
+        mass = np.asarray(chunk_mass).reshape(-1)
+        if mass.size != self.store.num_chunks:
+            raise ValueError(f"chunk_mass has {mass.size} entries, store "
+                             f"has {self.store.num_chunks} chunks")
+        new_ids = np.empty_like(self._window_ids)
+        for d in range(self.n_shards):
+            r = self.store.shard_chunks(d, self.n_shards)
+            order = np.argsort(-mass[r.start:r.stop], kind="stable")
+            new_ids[d] = np.sort(order[:self.window_chunks]) + r.start
+        if np.array_equal(new_ids, self._window_ids):
+            self._pending = None     # nothing to change; drop stale pending
+            return False
+        self._pending = (new_ids, self._put_sharded(
+            self.store.stack_chunks(new_ids.reshape(-1))))
+        return True
+
+    def swap_window(self) -> bool:
+        """Flip in the prefetched buffer (call at a step boundary, before
+        this step's gathers).  No-op when nothing is pending."""
+        if self._pending is None:
+            return False
+        ids, arrays = self._pending
+        self._pending = None
+        self._install_window(ids, arrays)
+        self._swaps += 1
+        return True
+
+    @property
+    def window_ids(self) -> np.ndarray:
+        return self._window_ids.copy()
+
+    @property
+    def stats(self) -> WindowStats:
+        return WindowStats(self._hits, self._misses, self._streamed,
+                           self._swaps, self._prefetches)
+
+    def reset_stats(self) -> None:
+        self._hits = self._misses = self._streamed = 0
+        self._swaps = self._prefetches = 0
+
+
+# ---------------------------------------------------------------------------
+# host driver
+# ---------------------------------------------------------------------------
+
+class StreamedISSGD:
+    """Drive the streamed step: host schedule, window lifecycle, swap
+    cadence.  ``step(state)`` — no dataset argument; the plane owns it.
+
+    Per step: stream this step's round-robin scoring rows from the host
+    store → flip in the window prefetched last step → run the scoring
+    program (sync: into the store the master will read; async: into
+    ``write_buf``) → draw the sampled indices on device and sync them to
+    the host → two-level gather of the minibatch → master program →
+    stage the next window off this step's per-chunk proposal mass.
+
+    Async mode keeps the AsyncPipeline contract bit-for-bit: the master
+    samples from ``read_buf`` while scoring writes ``write_buf``
+    (donated), and ``publish`` swaps every ``swap_every`` steps — an async
+    streamed run equals a non-streamed async run with the same cadence.
+    Like AsyncPipeline, an instance is per-run (the swap/prefetch cadence
+    rides on a host counter initialized from the first state's step).
+    """
+
+    def __init__(self, plane: StreamingDataPlane,
+                 scoring_step: Callable, sample_step: Callable,
+                 master_step: Callable, cfg: ISSGDConfig,
+                 num_examples: int, *, async_mode: bool = False,
+                 swap_every: int = 1, prefetch_every: int = 1,
+                 jit: bool = True):
+        if swap_every < 1 or prefetch_every < 1:
+            raise ValueError("swap_every and prefetch_every must be >= 1")
+        self.plane = plane
+        self.cfg = cfg
+        self.async_mode = bool(async_mode)
+        self.swap_every = int(swap_every)
+        self.prefetch_every = int(prefetch_every)
+        self._expect_scores = getattr(master_step, "expect_scores",
+                                      (not async_mode) and cfg.mode != "fused")
+        if jit:
+            # async: write_buf (arg 1) is donated — in-place shard update,
+            # mirroring AsyncPipeline; sync keeps the caller's store alive
+            scoring_step = jax.jit(
+                scoring_step, donate_argnums=(1,) if async_mode else ())
+            sample_step = jax.jit(sample_step)
+            master_step = jax.jit(master_step)
+        self._scoring = scoring_step
+        self._sample = sample_step
+        self._master = master_step
+
+        n_dev = plane.n_shards
+        w_loc, n_w, sb_w = scoring_layout(cfg, num_examples, n_dev)
+        self._layout = (w_loc, n_w, sb_w)
+        self._n_local = num_examples // n_dev
+        self._t: Optional[int] = None
+
+    def _score_indices(self, t: int) -> np.ndarray:
+        """(n_shards, rows) global indices of step t's scoring slices —
+        the same rows ``issgd._score_slice`` addresses on each device."""
+        w_loc, n_w, sb_w = self._layout
+        local = host_score_slice(t, w_loc, n_w, sb_w)
+        return (np.arange(self.plane.n_shards)[:, None] * self._n_local
+                + local[None, :])
+
+    def _tick(self, state: TrainState) -> int:
+        if self._t is None:
+            self._t = int(state.step)    # one host sync, at startup only
+        return self._t
+
+    def step(self, state: TrainState, data: Optional[dict] = None
+             ) -> tuple[TrainState, StepMetrics]:
+        """One streamed train step.  ``data`` is accepted (and ignored)
+        only for drop-in signature parity with the resident step."""
+        t = self._tick(state)
+        score_rows = (None if self.cfg.mode == "fused"
+                      else self.plane.fetch_sharded(self._score_indices(t)))
+        self.plane.swap_window()
+        return (self._step_async(state, score_rows)
+                if self.async_mode else
+                self._step_sync(state, score_rows))
+
+    def _step_sync(self, state, score_rows):
+        if self.cfg.mode == "fused":
+            store, fresh, stale = state.store, None, None
+        else:
+            store, fresh, stale, _ = self._scoring(
+                state.stale_params, state.store, state.step, score_rows)
+        idx, mass = self._sample(store, state.step, state.rng)
+        batch = self.plane.gather_global(np.asarray(idx))
+        margs = (state.params, state.opt_state, state.stale_params, store,
+                 state.step, state.rng, batch)
+        if self._expect_scores:
+            margs += (fresh, stale)
+        params, opt_state, stale_params, store, step, rng, metrics = \
+            self._master(*margs)
+        self._advance(mass)
+        return (TrainState(params, opt_state, stale_params, store, step,
+                           rng), metrics)
+
+    def _step_async(self, state, score_rows):
+        bs: BufferedWeightStore = state.store
+        write_buf, _, _, smetrics = self._scoring(
+            state.stale_params, bs.write_buf, state.step, score_rows)
+        idx, mass = self._sample(bs.read_buf, state.step, state.rng)
+        batch = self.plane.gather_global(np.asarray(idx))
+        params, opt_state, stale_params, _, step, rng, metrics = \
+            self._master(state.params, state.opt_state, state.stale_params,
+                         bs.read_buf, state.step, state.rng, batch)
+        bs = BufferedWeightStore(bs.read_buf, write_buf, bs.synced_at)
+        self._advance(mass)
+        if self._t % self.swap_every == 0:
+            bs = publish(bs, state.step)
+        metrics = metrics._replace(trace_ideal=smetrics.trace_ideal,
+                                   trace_stale=smetrics.trace_stale,
+                                   trace_unif=smetrics.trace_unif)
+        return (TrainState(params, opt_state, stale_params, bs, step, rng),
+                metrics)
+
+    def _advance(self, mass) -> None:
+        if self._t % self.prefetch_every == 0:
+            self.plane.prefetch(np.asarray(mass))
+        self._t += 1
+
+    def probe(self, state: TrainState, data: Optional[dict] = None
+              ) -> TrainState:
+        """Fused-mode coverage probe (the streamed make_score_step):
+        rescore the current round-robin slice with θ_stale."""
+        t = int(state.step)
+        score_rows = self.plane.fetch_sharded(self._score_indices(t))
+        store, _, _, _ = self._scoring(state.stale_params, state.store,
+                                       state.step, score_rows)
+        return state._replace(store=store)
+
+
+def make_streamed_issgd(
+    per_example_loss: Callable,
+    scorer: Callable,
+    optimizer,
+    cfg: ISSGDConfig,
+    dataset_arrays: dict,
+    chunk_size: int,
+    window_chunks: int,
+    aux_loss: Optional[Callable] = None,
+    fused_score: Optional[Callable] = None,
+    async_mode: bool = False,
+    swap_every: int = 1,
+    prefetch_every: int = 1,
+    monitor_traces: bool = True,
+    jit: bool = True,
+) -> StreamedISSGD:
+    """Single-call constructor for the single-device streamed loop: chunk
+    the arrays into a host store, stand up the plane, build the three
+    programs with axes=().  (Mesh runs go through
+    core.distributed.make_sharded_streamed_steps.)"""
+    store = ChunkedExampleStore.from_arrays(dataset_arrays, chunk_size)
+    plane = StreamingDataPlane(store, window_chunks)
+    n = store.num_examples
+    steps = make_streamed_steps(
+        per_example_loss, scorer, optimizer, cfg, n, chunk_size,
+        aux_loss=aux_loss, fused_score=fused_score,
+        async_mode=async_mode, monitor_traces=monitor_traces)
+    return StreamedISSGD(plane, *steps, cfg, n, async_mode=async_mode,
+                         swap_every=swap_every,
+                         prefetch_every=prefetch_every, jit=jit)

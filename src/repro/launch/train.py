@@ -15,6 +15,15 @@ full-table gathers.  On CPU, N host devices are forced via XLA_FLAGS
 automatically, so the whole path works without a pod:
 
   PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --smoke --mesh 4
+
+Streaming data plane (`data/streaming.py`): `--stream` keeps the dataset
+host-resident in chunked form and feeds the devices a bounded,
+proposal-aware window plus per-step host fetches — same-seed bitwise
+identical to the resident run, so it composes with `--mesh` and
+`--async-scoring` freely:
+
+  PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --smoke \
+      --mesh 4 --stream --window-chunks 4 --chunk-size 64
 """
 from __future__ import annotations
 
@@ -112,6 +121,19 @@ def main():
                     help="async: skip the fig-4 trace monitors in the "
                     "scoring step (keeps it strictly collective-free; "
                     "traces log as nan)")
+    ap.add_argument("--stream", action="store_true",
+                    help="host-resident chunked dataset + proposal-aware "
+                    "device window (data/streaming.py); bitwise-identical "
+                    "to the resident run, composes with --mesh and "
+                    "--async-scoring")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="examples per host chunk (0 = auto: an eighth of "
+                    "each shard's example range)")
+    ap.add_argument("--window-chunks", type=int, default=4,
+                    help="device-resident hot chunks per shard")
+    ap.add_argument("--prefetch-every", type=int, default=1,
+                    help="stage a fresh proposal-ranked window every K "
+                    "steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
@@ -148,7 +170,69 @@ def main():
     data = train.arrays
     probe = None
     pipe = None
-    if args.async_scoring:
+    plane = None
+    if args.stream:
+        if args.mode == "exact":
+            ap.error("--stream does not support --mode exact (the oracle "
+                     "rescores the full dataset each step; keep it resident)")
+        if args.async_scoring and args.mode not in ("relaxed", "uniform"):
+            ap.error("--async-scoring requires --mode relaxed|uniform")
+        import numpy as np
+        from repro.data.store import ChunkedExampleStore
+        from repro.data.streaming import (StreamedISSGD, StreamingDataPlane,
+                                          make_streamed_steps)
+        n_examples = train.size
+        n_shards = max(args.mesh, 1)
+        if n_examples % n_shards:
+            ap.error(f"--examples {n_examples} not divisible by --mesh "
+                     f"{n_shards}")
+        n_local = n_examples // n_shards
+        csize = args.chunk_size
+        if not csize:
+            # auto: the largest divisor of the per-shard example count
+            # that is at most an eighth of it (always exists; 1 divides)
+            csize = next(c for c in range(max(n_local // 8, 1), 0, -1)
+                         if n_local % c == 0)
+        store = ChunkedExampleStore.from_arrays(data, csize)
+        wc = max(1, min(args.window_chunks, store.num_chunks // n_shards))
+        # the step programs never take the dataset; drop the monolithic
+        # device arrays now that the host store holds the examples —
+        # the sharding specs only need per-key ndim/dtype
+        template = {k: np.empty((0,) + store.row_shape(k), store.dtype(k))
+                    for k in store.keys}
+        train = data = None
+        if args.async_scoring:
+            from repro.core.weight_store import to_buffered
+            state = state._replace(store=to_buffered(state.store))
+        mesh = None
+        if args.mesh > 0:
+            from repro.core import distributed as dist
+            from repro.launch.mesh import make_debug_mesh
+            mesh = make_debug_mesh(args.mesh)
+            s_step, smp_step, m_step, tcfg = dist.make_sharded_streamed_steps(
+                pel, scorer, opt, tcfg, n_examples, mesh, template,
+                chunk_size=csize, fused_score=fused_score,
+                async_mode=args.async_scoring,
+                monitor_traces=not args.no_trace_monitors)
+            state = dist.shard_train_state(state, mesh)
+        else:
+            s_step, smp_step, m_step = make_streamed_steps(
+                pel, scorer, opt, tcfg, n_examples, csize,
+                fused_score=fused_score, async_mode=args.async_scoring,
+                monitor_traces=not args.no_trace_monitors)
+        plane = StreamingDataPlane(store, wc, mesh=mesh)
+        pipe = StreamedISSGD(plane, s_step, smp_step, m_step, tcfg,
+                             n_examples, async_mode=args.async_scoring,
+                             swap_every=args.swap_every,
+                             prefetch_every=args.prefetch_every)
+        if args.mode == "fused":
+            probe = pipe.probe
+        print(f"streaming: {store.num_chunks} chunks x {csize} rows "
+              f"host-resident, window {wc} chunks/shard x {n_shards} "
+              f"shard(s)"
+              + (f", async swap every {args.swap_every}"
+                 if args.async_scoring else ""), flush=True)
+    elif args.async_scoring:
         if args.mode not in ("relaxed", "uniform"):
             ap.error("--async-scoring requires --mode relaxed|uniform")
         from repro.core.async_pipeline import AsyncPipeline, make_async_steps
@@ -216,6 +300,14 @@ def main():
                   f"√TrΣ ideal/stale/unif = {rec['trace_ideal']:.3f}/"
                   f"{rec['trace_stale']:.3f}/{rec['trace_unif']:.3f} "
                   f"ess {rec['ess_frac']:.3f}", flush=True)
+    if plane is not None:
+        s = plane.stats
+        print(f"streaming stats: window hit rate {s.hit_rate:.3f} "
+              f"({s.hits} hits / {s.misses} misses), "
+              f"{s.streamed_rows} scoring rows streamed, "
+              f"{s.swaps} window swaps", flush=True)
+        if history:
+            history[-1]["stream_hit_rate"] = round(s.hit_rate, 4)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=2)

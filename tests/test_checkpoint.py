@@ -35,6 +35,37 @@ def test_roundtrip_train_state(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_roundtrip_prng_key_and_buffered_store(tmp_path):
+    """PRNG keys serialize via key_data (the stream continues, not
+    restarts) and the async double-buffered store round-trips — the two
+    halves of the bitwise-resume contract of tests/test_streaming.py."""
+    from repro.core.weight_store import to_buffered
+
+    cfg = MLPConfig(input_dim=8, hidden=(16,), num_classes=3)
+    params = init_mlp_classifier(jax.random.key(0), cfg)
+    opt = adam(1e-3)
+    st = init_train_state(params, opt, num_examples=32, seed=4)
+    rng, _ = jax.random.split(st.rng)      # evolve past the seed value
+    st = st._replace(rng=rng, store=to_buffered(st.store._replace(
+        weights=st.store.weights.at[5].set(2.5))))
+
+    p = save_checkpoint(tmp_path / "ckpt.npz", st, step=9)
+    template = init_train_state(params, opt, num_examples=32, seed=0)
+    template = template._replace(store=to_buffered(template.store))
+    restored, step = restore_checkpoint(p, template)
+
+    assert step == 9
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(restored.rng)),
+        np.asarray(jax.random.key_data(st.rng)))
+    # the restored key continues the same stream
+    assert float(jax.random.uniform(restored.rng)) == \
+        float(jax.random.uniform(st.rng))
+    assert float(restored.store.read_buf.weights[5]) == 2.5
+    assert float(restored.store.write_buf.weights[5]) == 2.5
+    assert int(restored.store.synced_at) == int(st.store.synced_at)
+
+
 def test_roundtrip_bf16(tmp_path):
     tree = {"w": jnp.arange(8, dtype=jnp.bfloat16) * 0.5}
     p = save_checkpoint(tmp_path / "c.npz", tree, step=1)
