@@ -1,9 +1,12 @@
-"""Sharded-ISSGD scaling: scoring throughput and step time vs device count.
+"""Sharded-ISSGD scaling: scoring throughput and step time vs mesh shape.
 
-Each device count runs in a fresh subprocess because the XLA host-device
-count is fixed at first backend init.  The child times (a) the standalone
-scoring fan-out (zero-collective, the paper's workers) and (b) the full
-sharded train step, on the shared benchmark MLP setup.
+Sweeps a dp×mp grid: pure data-parallel points scale the scoring fan-out
+(the paper's workers), model-parallel points tensor-shard params +
+optimizer state over a trailing `model` axis (activation gathers + score
+psums buy per-device parameter memory).  Each mesh shape runs in a fresh
+subprocess because the XLA host-device count is fixed at first backend
+init.  The child times (a) the standalone scoring fan-out and (b) the
+full sharded train step, on the shared benchmark MLP setup.
 
 On CPU the forced host devices share the same cores, so absolute speedups
 are not the claim — the recorded numbers pin down the *overhead* of the
@@ -11,6 +14,7 @@ sharded path (collective cost per step) and become real scaling curves on
 a pod.  Standalone:
 
   PYTHONPATH=src python -m benchmarks.sharded_scaling --devices 1,2,4
+  PYTHONPATH=src python -m benchmarks.sharded_scaling --devices 1,2 --mp 1,2
 """
 from __future__ import annotations
 
@@ -29,11 +33,12 @@ _CHILD = """
     from repro.core import distributed as dist
     from repro.core.scorer import make_mlp_scorer
     from repro.data import make_svhn_like
-    from repro.models.mlp import MLPConfig, init_mlp_classifier
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models.mlp import MLPConfig, init_mlp_classifier, mlp_specs
     from repro.models.mlp import per_example_loss as mlp_pel
     from repro.optim import sgd
 
-    ND = {nd}
+    DP, MP = {dp}, {mp}
     STEPS = {steps}
     cfg = MLPConfig(input_dim={dim}, hidden=(256, 256), num_classes=10)
     train, _ = make_svhn_like(jax.random.key(0), n={n}, dim=cfg.input_dim)
@@ -42,16 +47,20 @@ _CHILD = """
     tcfg = ISSGDConfig(batch_size=64, score_batch_size={sb},
                        mode="relaxed", is_cfg=ISConfig(smoothing=1.0),
                        score_shards={w})
-    mesh = jax.make_mesh((ND,), ("data",))
-    pel = lambda p, b: mlp_pel(p, b, cfg)
-    scorer = make_mlp_scorer(cfg, "ghost")
+    mesh = make_debug_mesh(DP, model=MP)
+    maxes = ("model",) if MP > 1 else ()
+    pel = lambda p, b: mlp_pel(p, b, cfg, model_axes=maxes)
+    scorer = make_mlp_scorer(cfg, "ghost", model_axes=maxes)
+    pk = (dict(param_specs=mlp_specs(cfg), params_template=params)
+          if MP > 1 else dict())
     step, tcfg = dist.make_sharded_train_step(
-        pel, scorer, opt, tcfg, train.size, mesh, train.arrays)
+        pel, scorer, opt, tcfg, train.size, mesh, train.arrays, **pk)
     step = jax.jit(step)
     score = jax.jit(dist.make_sharded_score_step(
-        scorer, tcfg, train.size, mesh, train.arrays))
+        scorer, tcfg, train.size, mesh, train.arrays, optimizer=opt, **pk))
     state = dist.shard_train_state(
-        init_train_state(params, opt, train.size), mesh)
+        init_train_state(params, opt, train.size), mesh,
+        param_specs=pk.get("param_specs"))
     data = dist.shard_dataset(train.arrays, mesh)
 
     def timed(fn, s):
@@ -65,59 +74,79 @@ _CHILD = """
 
     dt_score, state = timed(score, state)
     dt_step, state = timed(lambda s, d: step(s, d)[0], state)
+    pbytes = sum(x.addressable_shards[0].data.nbytes
+                 for x in jax.tree.leaves(state.params))
     print(json.dumps({{
-        "devices": ND,
+        "devices": DP * MP,
+        "dp": DP, "mp": MP,
         "score_ms": dt_score * 1e3,
         "score_examples_per_s": {sb} / dt_score,
         "step_ms": dt_step * 1e3,
+        "param_bytes_per_device": pbytes,
     }}))
 """
 
 
-def _run_child(nd: int, *, n: int, dim: int, sb: int, w: int,
+def _run_child(dp: int, mp: int, *, n: int, dim: int, sb: int, w: int,
                steps: int) -> dict:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    nd = dp * mp
     env = dict(os.environ,
                XLA_FLAGS=f"--xla_force_host_platform_device_count={nd}",
                PYTHONPATH=os.path.join(repo, "src"))
-    code = textwrap.dedent(_CHILD).format(nd=nd, n=n, dim=dim, sb=sb, w=w,
-                                          steps=steps)
+    code = textwrap.dedent(_CHILD).format(dp=dp, mp=mp, n=n, dim=dim, sb=sb,
+                                          w=w, steps=steps)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env, cwd=repo, timeout=560)
     if r.returncode != 0:
-        raise RuntimeError(f"devices={nd} failed:\n{r.stderr[-2000:]}")
+        raise RuntimeError(f"dp={dp} mp={mp} failed:\n{r.stderr[-2000:]}")
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def sharded_scaling(device_counts=(1, 2, 4), n: int = 4096, dim: int = 96,
-                    sb: int = 512, steps: int = 10):
-    """Benchmark-harness entry: (rows, summary)."""
+                    sb: int = 512, steps: int = 10, mp_counts=(1,)):
+    """Benchmark-harness entry: (rows, summary) over the dp×mp grid."""
     w = max(device_counts)  # same logical decomposition at every size
     rows = []
-    for nd in device_counts:
-        rows.append(_run_child(nd, n=n, dim=dim, sb=sb, w=w, steps=steps))
+    for mp in mp_counts:
+        for dp in device_counts:
+            rows.append(_run_child(dp, mp, n=n, dim=dim, sb=sb, w=w,
+                                   steps=steps))
+    def _tag(r):
+        return (f"{r['dp']}dev" if r["mp"] == 1
+                else f"{r['dp']}x{r['mp']}dev")
+
     summary = {}
-    base = min(rows, key=lambda r: r["devices"])
+    base = min(rows, key=lambda r: (r["mp"], r["dp"]))
     for r in rows:
-        d = r["devices"]
-        summary[f"step_ms/{d}dev"] = r["step_ms"]
-        summary[f"score_throughput/{d}dev"] = r["score_examples_per_s"]
-        summary[f"speedup_vs_{base['devices']}dev/{d}dev"] = (
+        tag = _tag(r)
+        summary[f"step_ms/{tag}"] = r["step_ms"]
+        summary[f"score_throughput/{tag}"] = r["score_examples_per_s"]
+        summary[f"speedup_vs_{_tag(base)}/{tag}"] = (
             base["step_ms"] / r["step_ms"])
+        if r["mp"] > 1:
+            summary[f"param_bytes_per_device/{tag}"] = (
+                r["param_bytes_per_device"])
     return rows, summary
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", default="1,2,4")
+    ap.add_argument("--devices", default="1,2,4",
+                    help="comma-separated data-parallel sizes")
+    ap.add_argument("--mp", default="1",
+                    help="comma-separated model-parallel sizes (grid with "
+                    "--devices; total devices per point = dp*mp)")
     ap.add_argument("--examples", type=int, default=4096)
     ap.add_argument("--score-batch", type=int, default=512)
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--out", default="")
     args = ap.parse_args()
     counts = tuple(int(x) for x in args.devices.split(","))
+    mps = tuple(int(x) for x in args.mp.split(","))
     rows, summary = sharded_scaling(counts, n=args.examples,
-                                    sb=args.score_batch, steps=args.steps)
+                                    sb=args.score_batch, steps=args.steps,
+                                    mp_counts=mps)
     for r in rows:
         print(r)
     print(json.dumps(summary, indent=2))

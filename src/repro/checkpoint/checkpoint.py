@@ -9,6 +9,19 @@ NamedTuple fields) — so a restored ISSGD run resumes with its importance
 weights and their staleness timestamps intact: the "database" survives
 restarts, like the paper's Redis instance would.
 
+With ``gather=False`` a sharded array (model-parallel params, the
+data-sharded weight table) is saved **gather-free**: each distinct
+addressable shard is stored as its own entry (``<key>::shard<i>``) with
+the global shape, dtype, and per-shard index slices recorded in the
+manifest — no *device* ever holds the full array: save reads shards as
+they sit, and restore reassembles through host RAM only (leaves come
+back as numpy; the caller's re-placement, e.g. ``shard_train_state``,
+moves each shard straight to its device).  Replica copies (e.g. the
+store's model-axis replicas) are deduplicated by their index slices.
+Sharded checkpoints restore into any topology — including a single
+device — and old replicated checkpoints (no shard entries) keep
+restoring exactly as before.
+
 PRNG keys are serialized via their raw ``key_data`` (uint32) with the key
 impl recorded in the manifest, so a restored run continues the *same*
 random stream — together with the step counter this makes a streamed /
@@ -83,7 +96,9 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
             out.update(_flatten(v, f"{prefix}{i}/"))
     else:
         key = prefix.rstrip("/")
-        out[key] = _KeyLeaf(tree) if _is_prng_key(tree) else np.asarray(tree)
+        # leaves stay un-materialized: save_checkpoint decides per leaf
+        # whether to gather (np.asarray) or store shard-by-shard
+        out[key] = _KeyLeaf(tree) if _is_prng_key(tree) else tree
     return out
 
 
@@ -107,11 +122,57 @@ def _unflatten_into(template: Any, flat: dict, prefix: str = ""):
         if isinstance(v, tuple) and v[0] == _PRNG_TAG:
             return _wrap_key(v[1], v[2], template)
         return template  # pre-key-serialization checkpoint: keep the reseed
-    return jnp.asarray(flat[key]).astype(getattr(template, "dtype", None))
+    # stay on the HOST (numpy): a full param tensor must never land on one
+    # device just to be re-sharded — the caller's placement (e.g.
+    # shard_train_state) moves each shard straight to its device
+    dtype = getattr(template, "dtype", None)
+    arr = np.asarray(flat[key])
+    return arr.astype(dtype) if dtype is not None else arr
 
 
-def save_checkpoint(path: str | Path, tree: Any, step: int) -> Path:
-    """Atomic save: write to a tmp file then rename."""
+_SHARD_TAG = "sharded:"
+_SHARD_SEP = "::shard"
+
+
+def _is_partially_sharded(x) -> bool:
+    """A jax.Array whose addressable shards do NOT each cover the whole
+    array (i.e. actually split, not merely replicated)."""
+    if not isinstance(x, jax.Array):
+        return False
+    try:
+        shards = x.addressable_shards
+    except Exception:
+        return False
+    return (len(shards) > 1
+            and any(s.data.shape != x.shape for s in shards))
+
+
+def _store_sharded(k: str, x: jax.Array, stored: dict, manifest: dict):
+    """Per-shard, gather-free storage of one sharded array: unique shards
+    keyed by their index slices (replicas dropped), manifest records how
+    to reassemble."""
+    seen: dict[tuple, int] = {}
+    slices = []
+    for s in x.addressable_shards:
+        idx = tuple((sl.start or 0, sl.stop if sl.stop is not None else dim)
+                    for sl, dim in zip(s.index, x.shape))
+        if idx in seen:
+            continue
+        i = seen[idx] = len(seen)
+        data = np.asarray(s.data)
+        if data.dtype == jnp.bfloat16:
+            data = data.view(np.uint16)
+        stored[f"{k}{_SHARD_SEP}{i}"] = data
+        slices.append([[int(a), int(b)] for a, b in idx])
+    manifest[k] = _SHARD_TAG + json.dumps({
+        "shape": list(x.shape), "dtype": str(x.dtype), "slices": slices})
+
+
+def save_checkpoint(path: str | Path, tree: Any, step: int,
+                    gather: bool = True) -> Path:
+    """Atomic save: write to a tmp file then rename.  ``gather=False``
+    stores sharded arrays shard-by-shard (see module docstring) instead of
+    gathering them to the host."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     manifest, stored = {}, {}
@@ -119,11 +180,15 @@ def save_checkpoint(path: str | Path, tree: Any, step: int) -> Path:
         if isinstance(v, _KeyLeaf):
             stored[k] = v.data
             manifest[k] = _PRNG_TAG + v.impl
-        elif v.dtype == jnp.bfloat16:
-            stored[k] = v.view(np.uint16)
-            manifest[k] = "bfloat16"
+        elif not gather and _is_partially_sharded(v):
+            _store_sharded(k, v, stored, manifest)
         else:
-            stored[k] = v
+            v = np.asarray(v)
+            if v.dtype == jnp.bfloat16:
+                stored[k] = v.view(np.uint16)
+                manifest[k] = "bfloat16"
+            else:
+                stored[k] = v
     tmp = tempfile.mktemp(dir=path.parent, suffix=".npz")
     np.savez(tmp, __step__=np.int64(step),
              __manifest__=np.frombuffer(
@@ -133,14 +198,33 @@ def save_checkpoint(path: str | Path, tree: Any, step: int) -> Path:
     return path
 
 
+def _reassemble_sharded(meta: dict, shards: dict) -> np.ndarray:
+    """Rebuild one array from its per-shard entries + manifest slices."""
+    dtype = meta["dtype"]
+    view_u16 = dtype == "bfloat16"
+    out = np.empty(tuple(meta["shape"]),
+                   np.uint16 if view_u16 else np.dtype(dtype))
+    for i, idx in enumerate(meta["slices"]):
+        out[tuple(slice(a, b) for a, b in idx)] = shards[i]
+    return out.view(jnp.bfloat16) if view_u16 else out
+
+
 def restore_checkpoint(path: str | Path, template: Any) -> tuple[Any, int]:
-    """Restore into the structure of `template`. Returns (tree, step)."""
+    """Restore into the structure of `template`. Returns (tree, step).
+    Gather-free (sharded) entries are reassembled to full host arrays —
+    re-place the restored tree (e.g. `shard_train_state`) to put shards
+    back on a mesh."""
     with np.load(path, allow_pickle=False) as z:
         step = int(z["__step__"])
         manifest = json.loads(bytes(z["__manifest__"].tobytes()).decode())
         flat = {}
+        shard_parts: dict[str, dict] = {}
         for k in z.files:
             if k.startswith("__"):
+                continue
+            if _SHARD_SEP in k:
+                base, _, i = k.rpartition(_SHARD_SEP)
+                shard_parts.setdefault(base, {})[int(i)] = z[k]
                 continue
             v = z[k]
             tag = manifest.get(k, "")
@@ -149,4 +233,7 @@ def restore_checkpoint(path: str | Path, template: Any) -> tuple[Any, int]:
             elif tag.startswith(_PRNG_TAG):
                 v = (_PRNG_TAG, v, tag[len(_PRNG_TAG):])
             flat[k] = v
+        for base, parts in shard_parts.items():
+            meta = json.loads(manifest[base][len(_SHARD_TAG):])
+            flat[base] = _reassemble_sharded(meta, parts)
     return _unflatten_into(template, flat), step

@@ -75,6 +75,8 @@ def make_async_steps(
     aux_loss: Optional[Callable] = None,
     constrain_batch: Optional[Callable] = None,
     axes: tuple[str, ...] = (),
+    model_axes: tuple[str, ...] = (),
+    param_pspecs=None,
     monitor_traces: bool = True,
 ) -> tuple[Callable, Callable]:
     """Build the two independently dispatched bodies of the async pipeline.
@@ -100,7 +102,9 @@ def make_async_steps(
                                      constrain_batch, axes)
     master_pass = make_master_pass(per_example_loss, optimizer, cfg,
                                    num_examples, aux_loss=aux_loss,
-                                   constrain_batch=constrain_batch, axes=axes)
+                                   constrain_batch=constrain_batch, axes=axes,
+                                   model_axes=model_axes,
+                                   param_pspecs=param_pspecs)
     sb = cfg.score_batch_size
 
     def scoring_step(stale_params, write_buf, step, data):

@@ -52,6 +52,63 @@ def axis_info(axes: Axes) -> tuple[jax.Array, int]:
     return dev, n
 
 
+def psum_backward(x, axes: Axes):
+    """Identity forward, psum-over-`axes` backward — Megatron's "f" operator.
+
+    Wrap the (replicated) input of a linear whose weight is column-sharded
+    over the model axes: the forward passes the activation through
+    untouched, but the cotangent arriving from the sharded matmul is only
+    this device's partial contribution (dy_local @ w_localᵀ), so the
+    backward psums it into the exact full input-gradient.  With axes=()
+    this is the identity in both directions."""
+    axes = tuple(axes)
+    if not axes:
+        return x
+
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    f.defvjp(lambda x: (x, None), lambda _, ct: (psum(ct, axes),))
+    return f(x)
+
+
+def all_gather_replicated(x, axes: Axes, axis: int = -1):
+    """All-gather `x` along dim `axis` over mesh `axes`, for a *replicated
+    consumer* — Megatron's "g" operator, transpose-paired with
+    `psum_backward`.
+
+    Chunks are tiled in linear-device-id order, matching the contiguous
+    layout NamedSharding gives a dim sharded over `axes`.  The custom
+    backward slices the device's own chunk of the cotangent instead of the
+    default psum-scatter: everything downstream of the gather is computed
+    redundantly on every device of `axes` (replicated loss), so the
+    per-device cotangents are identical and the default transpose would
+    overcount by the axis size.  Only valid under that replicated-consumer
+    contract.  With axes=() this is the identity."""
+    axes = tuple(axes)
+    if not axes:
+        return x
+    local = x.shape[axis]
+
+    @jax.custom_vjp
+    def gather(x):
+        y = x
+        for ax in reversed(axes):  # innermost axis first → id-order tiling
+            y = jax.lax.all_gather(y, ax, axis=axis, tiled=True)
+        return y
+
+    def fwd(x):
+        return gather(x), None
+
+    def bwd(_, ct):
+        dev, _ = axis_info(axes)
+        return (jax.lax.dynamic_slice_in_dim(ct, dev * local, local, axis),)
+
+    gather.defvjp(fwd, bwd)
+    return gather(x)
+
+
 def gather_rows(arrays: Any, idx: jax.Array, axes: Axes) -> Any:
     """Gather rows at *global* indices `idx` from example-axis-sharded
     arrays; the result is replicated (identical on every device).

@@ -30,7 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.issgd import (ISSGDConfig, StepMetrics, TrainState,
                               make_score_step, make_train_step)
 from repro.core.weight_store import BufferedWeightStore, WeightStore
-from repro.dist import data_axes, shard_map
+from repro.dist import data_axes, model_axes, param_pspecs, shard_map
 from repro.dist.sharding import dim_spec
 
 
@@ -42,6 +42,10 @@ def _store_pspec(axes: tuple[str, ...]) -> WeightStore:
     return WeightStore(weights=_dspec(axes), scored_at=_dspec(axes))
 
 
+def _is_pspec(x) -> bool:
+    return isinstance(x, P)
+
+
 def mesh_device_count(mesh: Mesh, axes: Optional[tuple[str, ...]] = None) -> int:
     axes = data_axes(mesh) if axes is None else axes
     n = 1
@@ -50,15 +54,61 @@ def mesh_device_count(mesh: Mesh, axes: Optional[tuple[str, ...]] = None) -> int
     return n
 
 
-def train_state_pspecs(mesh: Mesh) -> TrainState:
-    """PartitionSpec tree for TrainState: params/opt replicated, the
-    WeightStore sharded over the data axes.  (Async states carry a
-    BufferedWeightStore instead — `shard_train_state` places those via
-    `_place_store`; the async step functions take the individual buffers,
-    never the whole state, so no buffered spec tree is needed.)"""
+def opt_state_pspecs(opt_state, params, params_pspecs):
+    """PartitionSpec tree for an optimizer state: any subtree that mirrors
+    the param tree (sgd momentum, each of adam's m/v) inherits the param
+    specs; scalar bookkeeping leaves replicate.  `opt_state` may be a
+    ShapeDtypeStruct tree (from jax.eval_shape(optimizer.init, params))."""
+    pdef = jax.tree.structure(params)
+
+    def rec(sub):
+        try:
+            if jax.tree.structure(sub) == pdef:
+                return params_pspecs
+        except Exception:
+            pass
+        if isinstance(sub, dict):
+            return {k: rec(v) for k, v in sub.items()}
+        if isinstance(sub, (list, tuple)) and not hasattr(sub, "_fields"):
+            return type(sub)(rec(v) for v in sub)
+        return P()
+
+    return rec(opt_state)
+
+
+def _resolve_param_specs(mesh: Mesh, optimizer, param_specs, params_template):
+    """(params_pspec_tree, opt_pspec_tree, model_axes) for the builders.
+
+    Without `param_specs` — or on a mesh with no (non-trivial) model axis —
+    params stay replicated (`P()`) and model_axes is (), which keeps every
+    pre-model-parallel call site bitwise unchanged."""
+    maxes = model_axes(mesh)
+    if param_specs is None or not maxes:
+        return P(), P(), ()
+    if params_template is None:
+        raise ValueError("param_specs given but no params_template: the "
+                         "logical→mesh rules need the concrete shapes")
+    pp = param_pspecs(param_specs, params_template, mesh)
+    if optimizer is None:
+        op = P()
+    else:
+        opt_t = jax.eval_shape(optimizer.init, params_template)
+        op = opt_state_pspecs(opt_t, params_template, pp)
+    return pp, op, maxes
+
+
+def train_state_pspecs(mesh: Mesh, params_pspecs=P(),
+                       opt_pspecs=P()) -> TrainState:
+    """PartitionSpec tree for TrainState: params/opt replicated unless
+    model-parallel spec trees are passed in, the WeightStore sharded over
+    the data axes.  (Async states carry a BufferedWeightStore instead —
+    `shard_train_state` places those via `_place_store`; the async step
+    functions take the individual buffers, never the whole state, so no
+    buffered spec tree is needed.)"""
     axes = data_axes(mesh)
     return TrainState(
-        params=P(), opt_state=P(), stale_params=P(),
+        params=params_pspecs, opt_state=opt_pspecs,
+        stale_params=params_pspecs,
         store=_store_pspec(axes),
         step=P(), rng=P(),
     )
@@ -91,23 +141,33 @@ def _place_store(store, mesh: Mesh, axes: tuple[str, ...]):
                        scored_at=put(store.scored_at, _dspec(axes)))
 
 
-def shard_train_state(state: TrainState, mesh: Mesh) -> TrainState:
-    """Place a TrainState on `mesh`: replicated params, sharded store
-    (plain or double-buffered)."""
+def shard_train_state(state: TrainState, mesh: Mesh,
+                      param_specs=None) -> TrainState:
+    """Place a TrainState on `mesh`: sharded store (plain or
+    double-buffered), params replicated — or tensor-sharded over the model
+    axis when `param_specs` (the logical-axis tree, e.g. `mlp_specs`) is
+    given and the mesh carries one."""
     axes = data_axes(mesh)
-    specs = train_state_pspecs(mesh)
+    pp, _, _ = _resolve_param_specs(mesh, None, param_specs, state.params)
+    op = (P() if isinstance(pp, P)
+          else opt_state_pspecs(state.opt_state, state.params, pp))
 
     def place(subtree, spec):
+        if isinstance(spec, P):
+            return jax.tree.map(
+                lambda x: jax.device_put(x, NamedSharding(mesh, spec)),
+                subtree)
         return jax.tree.map(
-            lambda x: jax.device_put(x, NamedSharding(mesh, spec)), subtree)
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            subtree, spec, is_leaf=_is_pspec)
 
     return TrainState(
-        params=place(state.params, specs.params),
-        opt_state=place(state.opt_state, specs.opt_state),
-        stale_params=place(state.stale_params, specs.stale_params),
+        params=place(state.params, pp),
+        opt_state=place(state.opt_state, op),
+        stale_params=place(state.stale_params, pp),
         store=_place_store(state.store, mesh, axes),
-        step=place(state.step, specs.step),
-        rng=place(state.rng, specs.rng),
+        step=place(state.step, P()),
+        rng=place(state.rng, P()),
     )
 
 
@@ -135,6 +195,8 @@ def make_sharded_train_step(
     data_template: dict,
     aux_loss: Optional[Callable] = None,
     fused_score: Optional[Callable] = None,
+    param_specs=None,
+    params_template=None,
 ) -> tuple[Callable, ISSGDConfig]:
     """The ISSGD step under shard_map over `mesh`.
 
@@ -142,6 +204,12 @@ def make_sharded_train_step(
     state/data must be placed with `shard_train_state`/`shard_dataset` —
     and `cfg` has score_shards resolved against the mesh.  The returned fn
     is shard_map-wrapped but not jitted; wrap in jax.jit at the call site.
+
+    With `param_specs` (a logical-axis tree such as `mlp_specs(cfg)`) and
+    `params_template` on a mesh carrying a model axis, params + optimizer
+    state are tensor-sharded through the `param_pspecs` rules; the
+    loss/scorer callables must then be model-axis-aware (built with
+    ``model_axes=("model",)``).
     """
     axes = data_axes(mesh)
     nd = mesh_device_count(mesh, axes)
@@ -149,11 +217,15 @@ def make_sharded_train_step(
     if num_examples % nd:
         raise ValueError(f"num_examples={num_examples} not divisible by "
                          f"{nd} devices")
+    pp, op, maxes = _resolve_param_specs(mesh, optimizer, param_specs,
+                                         params_template)
 
     body = make_train_step(per_example_loss, scorer, optimizer, cfg,
                            num_examples, aux_loss=aux_loss,
-                           fused_score=fused_score, axes=axes)
-    state_specs = train_state_pspecs(mesh)
+                           fused_score=fused_score, axes=axes,
+                           model_axes=maxes,
+                           param_pspecs=pp if maxes else None)
+    state_specs = train_state_pspecs(mesh, pp, op)
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
 
@@ -175,6 +247,8 @@ def make_sharded_async_steps(
     data_template: dict,
     aux_loss: Optional[Callable] = None,
     monitor_traces: bool = True,
+    param_specs=None,
+    params_template=None,
 ) -> tuple[Callable, Callable, ISSGDConfig]:
     """The async pipeline's two computations under shard_map over `mesh`.
 
@@ -201,9 +275,12 @@ def make_sharded_async_steps(
         raise ValueError(f"num_examples={num_examples} not divisible by "
                          f"{nd} devices")
 
+    pp, op, maxes = _resolve_param_specs(mesh, optimizer, param_specs,
+                                         params_template)
     scoring_body, master_body = make_async_steps(
         per_example_loss, scorer, optimizer, cfg, num_examples,
-        aux_loss=aux_loss, axes=axes, monitor_traces=monitor_traces)
+        aux_loss=aux_loss, axes=axes, model_axes=maxes,
+        param_pspecs=pp if maxes else None, monitor_traces=monitor_traces)
     store_spec = _store_pspec(axes)
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
@@ -211,13 +288,13 @@ def make_sharded_async_steps(
 
     scoring_step = shard_map(
         scoring_body, mesh=mesh,
-        in_specs=(P(), store_spec, P(), dspecs),
+        in_specs=(pp, store_spec, P(), dspecs),
         out_specs=(store_spec, smetric_specs),
     )
     master_step = shard_map(
         master_body, mesh=mesh,
-        in_specs=(P(), P(), P(), store_spec, P(), P(), dspecs),
-        out_specs=(P(), P(), P(), P(), P(), metric_specs),
+        in_specs=(pp, op, pp, store_spec, P(), P(), dspecs),
+        out_specs=(pp, op, pp, P(), P(), metric_specs),
     )
     return scoring_step, master_step, cfg
 
@@ -235,6 +312,8 @@ def make_sharded_streamed_steps(
     fused_score: Optional[Callable] = None,
     async_mode: bool = False,
     monitor_traces: bool = True,
+    param_specs=None,
+    params_template=None,
 ) -> tuple[Callable, Callable, Callable, ISSGDConfig]:
     """The streamed data plane's three device programs under shard_map.
 
@@ -261,9 +340,12 @@ def make_sharded_streamed_steps(
         raise ValueError(f"num_examples={num_examples} not divisible by "
                          f"{nd} devices")
 
+    pp, op, maxes = _resolve_param_specs(mesh, optimizer, param_specs,
+                                         params_template)
     scoring_body, sample_body, master_body = make_streamed_steps(
         per_example_loss, scorer, optimizer, cfg, num_examples, chunk_size,
         aux_loss=aux_loss, fused_score=fused_score, axes=axes,
+        model_axes=maxes, param_pspecs=pp if maxes else None,
         async_mode=async_mode, monitor_traces=monitor_traces)
     expect_scores = master_body.expect_scores
 
@@ -276,7 +358,7 @@ def make_sharded_streamed_steps(
 
     scoring_step = shard_map(
         scoring_body, mesh=mesh,
-        in_specs=(P(), store_spec, P(), sharded_rows),
+        in_specs=(pp, store_spec, P(), sharded_rows),
         out_specs=(store_spec, ds, ds, smetric_specs),
     )
     sample_step = shard_map(
@@ -284,13 +366,13 @@ def make_sharded_streamed_steps(
         in_specs=(store_spec, P(), P()),
         out_specs=(P(), P()),
     )
-    master_in = (P(), P(), P(), store_spec, P(), P(), replicated_rows)
+    master_in = (pp, op, pp, store_spec, P(), P(), replicated_rows)
     if expect_scores:
         master_in += (ds, ds)
     master_step = shard_map(
         master_body, mesh=mesh,
         in_specs=master_in,
-        out_specs=(P(), P(), P(), store_spec, P(), P(), metric_specs),
+        out_specs=(pp, op, pp, store_spec, P(), P(), metric_specs),
     )
     master_step.expect_scores = expect_scores
     return scoring_step, sample_step, master_step, cfg
@@ -302,13 +384,21 @@ def make_sharded_score_step(
     num_examples: int,
     mesh: Mesh,
     data_template: dict,
+    param_specs=None,
+    params_template=None,
+    optimizer=None,
 ) -> Callable:
     """The standalone probe/scoring pass under shard_map (fused-mode
-    coverage).  Fully shard-local: compiles to zero collectives."""
+    coverage).  Fully shard-local on the data plane: zero collectives
+    without model parallelism (with it, only the scorer's model-axis
+    gathers/psums).  `optimizer` is needed only to spec the opt_state the
+    probe passes through untouched when params are model-sharded."""
     axes = data_axes(mesh)
     cfg = resolve_score_shards(cfg, mesh)
     body = make_score_step(scorer, cfg, num_examples, axes=axes)
-    state_specs = train_state_pspecs(mesh)
+    pp, op, _ = _resolve_param_specs(mesh, optimizer, param_specs,
+                                     params_template)
+    state_specs = train_state_pspecs(mesh, pp, op)
     dspecs = dataset_pspecs(data_template, mesh)
     return shard_map(
         body, mesh=mesh,

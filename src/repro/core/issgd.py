@@ -127,6 +127,43 @@ def _resolve_shards(cfg: ISSGDConfig, num_examples: int, sb: int,
     return w_loc, n_local // w_loc, sb // w
 
 
+def _spec_touches(spec, axes: tuple[str, ...]) -> bool:
+    """Whether a PartitionSpec shards any dim over one of `axes`."""
+    names: set = set()
+    for entry in tuple(spec):
+        if isinstance(entry, (tuple, list)):
+            names.update(entry)
+        elif entry is not None:
+            names.add(entry)
+    return bool(names & set(axes))
+
+
+def _grad_global_norm(grads, model_axes: tuple[str, ...],
+                      param_pspecs) -> jax.Array:
+    """The true global grad norm when params (hence grads) may be
+    model-axis-sharded: leaves sharded over `model_axes` contribute their
+    local partial square-sum, replicated leaves (computed redundantly on
+    every model device) are pre-divided by the axis size, and the total is
+    psum-reduced before the sqrt.  With model_axes=() this is arithmetic-
+    identical to `optim.global_norm`."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.collectives import axis_info
+    if not model_axes:
+        return global_norm(grads)
+    if param_pspecs is None:
+        raise ValueError("model_axes set but no param_pspecs: the grad "
+                         "norm cannot tell sharded from replicated leaves")
+    _, n_model = axis_info(model_axes)
+
+    def leaf(g, spec):
+        s = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        return s if _spec_touches(spec, model_axes) else s / n_model
+
+    sq = sum(jax.tree.leaves(jax.tree.map(
+        leaf, grads, param_pspecs, is_leaf=lambda x: isinstance(x, P))))
+    return jnp.sqrt(psum(sq, model_axes))
+
+
 def _score_slice(step: jax.Array, w_loc: int, n_w: int, sb_w: int) -> jax.Array:
     """Local indices of this step's round-robin scoring slice: each of the
     device's `w_loc` logical shards contributes `sb_w` examples."""
@@ -210,6 +247,12 @@ def make_master_pass(
     # the gathered minibatch is batch-sharded over the data axes
     axes: tuple[str, ...] = (),     # mesh axes the example dim is sharded
     # over when the step runs inside shard_map; () = single-device
+    model_axes: tuple[str, ...] = (),   # mesh axes the params are tensor-
+    # sharded over; per_example_loss/fused_score must then be model-axis-
+    # aware (they see local column shards and gather activations), and
+    # `param_pspecs` (the tree from dist.sharding.param_pspecs) is
+    # required so the grad norm can tell sharded from replicated leaves
+    param_pspecs=None,
     streaming: bool = False,        # `data` is the pre-gathered replicated
     # minibatch (B rows) instead of the resident dataset; the sampled
     # indices are still drawn in-program from the store, and the host
@@ -236,6 +279,7 @@ def make_master_pass(
     if constrain_batch is None:
         constrain_batch = lambda b: b
     axes = tuple(axes)
+    model_axes = tuple(model_axes)
 
     def master_pass(params, opt_state, stale_params, store: WeightStore,
                     step, k_sample, data,
@@ -289,10 +333,11 @@ def make_master_pass(
             fresh_scores = batch_scores
             stale_slice = sampled_w  # proposal at idx, already gathered
             store = write_scores_global(store, idx, batch_scores, step, axes)
-        gnorm = global_norm(grads)
+        gnorm = _grad_global_norm(grads, model_axes, param_pspecs)
         if cfg.grad_clip > 0:
             from repro.optim import clip_by_global_norm
-            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+            # clip against the model-axis-aware norm computed above
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip, norm=gnorm)
         new_params, opt_state = optimizer.update(grads, opt_state,
                                                  params, step)
 
@@ -343,6 +388,8 @@ def make_train_step(
     fused_score: Optional[Callable] = None,
     constrain_batch: Optional[Callable] = None,
     axes: tuple[str, ...] = (),
+    model_axes: tuple[str, ...] = (),
+    param_pspecs=None,
 ) -> Callable:
     """Build the fused ISSGD step: (state, dataset_arrays) -> (state, metrics).
 
@@ -358,7 +405,9 @@ def make_train_step(
                                  constrain_batch, axes))
     master = make_master_pass(per_example_loss, optimizer, cfg, num_examples,
                               aux_loss=aux_loss, fused_score=fused_score,
-                              constrain_batch=constrain_batch, axes=axes)
+                              constrain_batch=constrain_batch, axes=axes,
+                              model_axes=model_axes,
+                              param_pspecs=param_pspecs)
 
     def train_step(state: TrainState, data: dict) -> tuple[TrainState, StepMetrics]:
         rng, k_sample = jax.random.split(state.rng)

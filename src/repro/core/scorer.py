@@ -67,6 +67,8 @@ def ghost_sq_norms(
     batch: int,
     scanned_names: Optional[set] = None,
     with_bias: bool = False,
+    model_axes: tuple[str, ...] = (),
+    sharded_names: Optional[set] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Exact per-example squared grad-norms via the tap trick.
 
@@ -75,8 +77,18 @@ def ghost_sq_norms(
     `scanned_names`: which records carry a leading period axis (default:
     every name except "unembed" — the transformer convention).
 
+    With ``model_axes`` set (model-parallel params inside shard_map), the
+    taps of column-sharded layers carry this device's dY column slice, so
+    their contributions are partial sums over the model axis; the names in
+    ``sharded_names`` are summed as-is, contributions of replicated layers
+    (computed redundantly on every model device) are pre-divided by the
+    model-axis size, and the total is psum-reduced over ``model_axes``
+    into the exact per-example grad-norm — replicated, so every model
+    replica writes identical proposal weights into the store.
+
     Returns (sq_norms (B,), per_example_losses (B,)).
     """
+    from repro.core.collectives import axis_info, psum
     taps0 = {k: jnp.zeros(v.shape, v.dtype) for k, v in tap_shapes.items()}
 
     def f(taps):
@@ -86,14 +98,18 @@ def ghost_sq_norms(
     _, pull, (losses, records) = jax.vjp(f, taps0, has_aux=True)
     (dtaps,) = pull(jnp.ones((), jnp.float32))
 
+    _, n_model = axis_info(tuple(model_axes))
     sq = jnp.zeros((batch,), jnp.float32)
     for name, x in records.items():
         if name not in dtaps:
             continue
         scanned = (name in scanned_names) if scanned_names is not None \
             else (name != "unembed")
-        sq = sq + _contribution(x, dtaps[name], batch, with_bias, scanned)
-    return sq, losses
+        contrib = _contribution(x, dtaps[name], batch, with_bias, scanned)
+        if model_axes and name not in (sharded_names or ()):
+            contrib = contrib / n_model  # replicated layer: counted once
+        sq = sq + contrib
+    return psum(sq, tuple(model_axes)), losses
 
 
 # ----------------------------------------------------------- LM strategies
@@ -250,19 +266,34 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str):
 
 
 # ---------------------------------------------------------- MLP strategies
-def make_mlp_scorer(cfg, strategy: str) -> Callable:
-    """Scorer for the paper's MLP classifier (faithful Prop.-1 path)."""
-    from repro.models.mlp import mlp_forward, per_example_loss
+def make_mlp_scorer(cfg, strategy: str,
+                    model_axes: tuple[str, ...] = ()) -> Callable:
+    """Scorer for the paper's MLP classifier (faithful Prop.-1 path).
+
+    With ``model_axes`` the returned scorer expects model-axis-sharded
+    params (column shards, inside shard_map).  Gradient-norm strategies
+    compute per-example partial squared norms from the local shards and
+    psum them over the model axes, so the proposal ω̃ is exact and
+    replicated across model devices; forward-only strategies (loss /
+    logit_grad) read the gathered replicated logits and need no reduction.
+    """
+    from repro.models.mlp import layer_is_sharded, mlp_forward, per_example_loss
     from repro.models.layers import Tape
+    from repro.core.collectives import axis_info, psum
+    model_axes = tuple(model_axes)
+    n_layers = len(cfg.hidden) + 1
 
     if strategy == "loss":
         def score(params, batch):
-            return jnp.maximum(per_example_loss(params, batch, cfg), 0.0)
+            return jnp.maximum(
+                per_example_loss(params, batch, cfg, model_axes=model_axes),
+                0.0)
         return score
 
     if strategy == "logit_grad":
         def score(params, batch):
-            logits = mlp_forward(params, batch["x"], cfg)
+            logits = mlp_forward(params, batch["x"], cfg,
+                                 model_axes=model_axes)
             p = jax.nn.softmax(logits.astype(jnp.float32), -1)
             py = jnp.take_along_axis(p, batch["y"][:, None], -1)[:, 0]
             sq = jnp.sum(jnp.square(p), -1) - 2.0 * py + 1.0
@@ -272,33 +303,48 @@ def make_mlp_scorer(cfg, strategy: str) -> Callable:
     if strategy == "ghost":
         def score(params, batch):
             b = batch["x"].shape[0]
+            sharded = {f"fc{i}" for i in range(n_layers)
+                       if model_axes and layer_is_sharded(params, cfg, i)}
             # discover tap shapes with one abstract trace
             shapes: dict = {}
             def probe(x):
                 t = Tape(tap_shapes=shapes)
                 return per_example_loss(params, {"x": x, "y": batch["y"]},
-                                        cfg, tape=t)
+                                        cfg, tape=t, model_axes=model_axes)
             jax.eval_shape(probe, batch["x"])
 
             def loss_with_taps(taps):
                 t = Tape(taps=taps, records={})
-                losses = per_example_loss(params, batch, cfg, tape=t)
+                losses = per_example_loss(params, batch, cfg, tape=t,
+                                          model_axes=model_axes)
                 return losses, t.records
             sq, _ = ghost_sq_norms(loss_with_taps, shapes, b,
-                                   scanned_names=set(), with_bias=True)
+                                   scanned_names=set(), with_bias=True,
+                                   model_axes=model_axes,
+                                   sharded_names=sharded)
             return jnp.sqrt(sq)
         return score
 
     if strategy == "full":
         def score(params, batch):
             def loss_one(p, x, y):
-                return per_example_loss(p, {"x": x[None], "y": y[None]}, cfg)[0]
+                return per_example_loss(p, {"x": x[None], "y": y[None]}, cfg,
+                                        model_axes=model_axes)[0]
             grads = jax.vmap(jax.grad(loss_one), in_axes=(None, 0, 0))(
                 params, batch["x"], batch["y"])
-            leaves = jax.tree.leaves(grads)
-            sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
-                             axis=tuple(range(1, g.ndim))) for g in leaves)
-            return jnp.sqrt(sq)
+            _, n_model = axis_info(model_axes)
+
+            def leaf_sq(i, g):
+                s = jnp.sum(jnp.square(g.astype(jnp.float32)),
+                            axis=tuple(range(1, g.ndim)))
+                if model_axes and not layer_is_sharded(params, cfg, i):
+                    s = s / n_model  # replicated layer: counted once
+                return s
+
+            sq = sum(leaf_sq(i, g)
+                     for i in range(n_layers)
+                     for g in jax.tree.leaves(grads[f"fc{i}"]))
+            return jnp.sqrt(psum(sq, model_axes))
         return score
 
     raise ValueError(f"unknown strategy {strategy!r}")

@@ -88,6 +88,8 @@ def make_streamed_steps(
     fused_score: Optional[Callable] = None,
     constrain_batch: Optional[Callable] = None,
     axes: tuple[str, ...] = (),
+    model_axes: tuple[str, ...] = (),
+    param_pspecs=None,
     async_mode: bool = False,
     monitor_traces: bool = True,
 ) -> tuple[Callable, Callable, Callable]:
@@ -145,7 +147,8 @@ def make_streamed_steps(
                                    aux_loss=aux_loss,
                                    fused_score=fused_score,
                                    constrain_batch=constrain_batch,
-                                   axes=axes, streaming=True)
+                                   axes=axes, model_axes=model_axes,
+                                   param_pspecs=param_pspecs, streaming=True)
 
     def scoring_step(score_params, store: WeightStore, step, score_rows):
         store, fresh_scores, stale_slice = scoring_pass(

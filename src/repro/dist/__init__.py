@@ -1,8 +1,8 @@
 """Distribution layer: sharding rules, activation-sharding context, and a
 version-robust `shard_map` entry point shared by every SPMD module."""
 from repro.dist.compat import shard_map
-from repro.dist.sharding import (data_axes, logical_to_pspec, param_pspecs,
-                                 rules_for)
+from repro.dist.sharding import (data_axes, logical_to_pspec, model_axes,
+                                 param_pspecs, rules_for)
 
-__all__ = ["shard_map", "data_axes", "logical_to_pspec", "param_pspecs",
-           "rules_for"]
+__all__ = ["shard_map", "data_axes", "logical_to_pspec", "model_axes",
+           "param_pspecs", "rules_for"]

@@ -13,6 +13,8 @@ per-layer and the period-stacked trees.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -34,6 +36,16 @@ def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def model_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The tensor-parallel axes of `mesh`: ("model",) when the mesh carries
+    a non-trivial model axis, () otherwise (a size-1 model axis is the
+    data-only special case — params replicate and every model-axis
+    collective degenerates to the identity)."""
+    if "model" in mesh.axis_names and mesh.shape["model"] > 1:
+        return ("model",)
+    return ()
+
+
 def dim_spec(axes: tuple[str, ...]):
     """The PartitionSpec entry sharding ONE dim over `axes`: the bare axis
     name for a single axis, the tuple for several (P-element convention)."""
@@ -46,12 +58,22 @@ def rules_for(mesh: Mesh) -> dict:
     return {k: (v if v in names else None) for k, v in _RULES.items()}
 
 
-def logical_to_pspec(logical: tuple, shape: tuple, mesh: Mesh) -> P:
+# (param name, logical axis, mesh axis, dim) combinations already warned
+# about — the divisibility fallback fires once per distinct cause, not per
+# trace (jit re-lowers would otherwise repeat it every compile).
+_warned_fallbacks: set = set()
+
+
+def logical_to_pspec(logical: tuple, shape: tuple, mesh: Mesh,
+                     name: str = "") -> P:
     """PartitionSpec for one parameter.
 
     `logical` annotates the TRAILING dims of `shape`; leading unannotated
     dims (the stacked period axis) are replicated.  A mesh axis is used at
-    most once per spec and only when it divides the dimension.
+    most once per spec and only when it divides the dimension — when it
+    does not, the dim falls back to replication with a one-time warning
+    (an uneven vocab or odd head count silently replicating would
+    otherwise be indistinguishable from a working model-parallel config).
     """
     rules = rules_for(mesh)
     offset = len(shape) - len(logical)
@@ -59,9 +81,21 @@ def logical_to_pspec(logical: tuple, shape: tuple, mesh: Mesh) -> P:
         raise ValueError(f"spec {logical} longer than shape {shape}")
     parts: list = [None] * offset
     used: set = set()
-    for name, dim in zip(logical, shape[offset:]):
-        ax = rules.get(name) if name is not None else None
-        if (ax is None or ax in used or dim % mesh.shape[ax] != 0):
+    for lname, dim in zip(logical, shape[offset:]):
+        ax = rules.get(lname) if lname is not None else None
+        if ax is None or ax in used:
+            parts.append(None)
+        elif dim % mesh.shape[ax] != 0:
+            # key includes the axis SIZE: retrying with a different (still
+            # non-dividing) mesh must warn again, not stay deduped
+            key = (name, lname, ax, mesh.shape[ax], dim)
+            if key not in _warned_fallbacks:
+                _warned_fallbacks.add(key)
+                warnings.warn(
+                    f"parameter {name or '<unnamed>'}: logical axis "
+                    f"{lname!r} (dim {dim}) is not divisible by mesh axis "
+                    f"{ax!r} (size {mesh.shape[ax]}); replicating this "
+                    f"dim instead of sharding it", stacklevel=2)
             parts.append(None)
         else:
             parts.append(ax)
@@ -71,8 +105,12 @@ def logical_to_pspec(logical: tuple, shape: tuple, mesh: Mesh) -> P:
 
 def param_pspecs(specs, params, mesh: Mesh):
     """Map a logical-spec tree (tuple leaves) + matching param tree (array
-    or ShapeDtypeStruct leaves) to a tree of PartitionSpecs."""
-    return jax.tree.map(
-        lambda lg, p: logical_to_pspec(lg, p.shape, mesh),
+    or ShapeDtypeStruct leaves) to a tree of PartitionSpecs.  Leaves are
+    visited with their tree path so the divisibility-fallback warning can
+    name the parameter."""
+    import jax.tree_util as jtu
+    return jtu.tree_map_with_path(
+        lambda path, lg, p: logical_to_pspec(lg, p.shape, mesh,
+                                             name=jtu.keystr(path)),
         specs, params,
         is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, P))

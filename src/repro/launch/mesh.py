@@ -16,8 +16,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_debug_mesh(n: int | None = None):
-    """A 1-D mesh over whatever devices exist (tests on CPU)."""
+def make_debug_mesh(n: int | None = None, model: int = 1):
+    """A mesh over forced host devices (tests on CPU): 1-D ``(data,)`` by
+    default, 2-D ``(data, model)`` when ``model > 1`` — the debug twin of
+    the production mesh's trailing tensor-parallel axis."""
+    if model > 1:
+        n = n or len(jax.devices()) // model
+        return jax.make_mesh((n, model), ("data", "model"))
     n = n or len(jax.devices())
     return jax.make_mesh((n,), ("data",))
 

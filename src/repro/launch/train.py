@@ -24,6 +24,16 @@ identical to the resident run, so it composes with `--mesh` and
 
   PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --smoke \
       --mesh 4 --stream --window-chunks 4 --chunk-size 64
+
+Model parallelism: `--model-parallel M` adds a trailing `model` axis to
+the mesh and tensor-shards params + optimizer state through the
+logical→mesh rules of `repro/dist/sharding.py` — composes with every mode
+(relaxed/fused/async/streamed).  Per-example grad-norm scores are
+psum-reduced over the model axis, so the proposal is exact and a dp×mp
+run is same-seed equivalent to the dp-only run:
+
+  PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --smoke \
+      --mesh 2 --model-parallel 2
 """
 from __future__ import annotations
 
@@ -60,28 +70,30 @@ from repro.data import make_svhn_like, make_token_dataset
 from repro.optim import sgd
 
 
-def build_mlp(args):
+def build_mlp(args, model_axes=()):
     from repro.configs.mlp_svhn import CONFIG, smoke
-    from repro.models.mlp import init_mlp_classifier, per_example_loss
+    from repro.models.mlp import (init_mlp_classifier, mlp_specs,
+                                  per_example_loss)
     cfg = smoke() if args.smoke else CONFIG
     train, _ = make_svhn_like(jax.random.key(args.seed), n=args.examples,
                               dim=cfg.input_dim)
     params = init_mlp_classifier(jax.random.key(args.seed + 1), cfg)
-    pel = lambda p, b: per_example_loss(p, b, cfg)
-    scorer = make_mlp_scorer(cfg, args.strategy)
-    return params, train, pel, scorer
+    pel = lambda p, b: per_example_loss(p, b, cfg, model_axes=model_axes)
+    scorer = make_mlp_scorer(cfg, args.strategy, model_axes=model_axes)
+    return params, train, pel, scorer, mlp_specs(cfg)
 
 
-def build_lm(args):
+def build_lm(args, model_axes=()):
     from repro.configs import get_config, get_smoke_config
-    from repro.models.transformer import init_transformer, per_example_loss
+    from repro.models.transformer import (init_transformer, per_example_loss,
+                                          transformer_specs)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     train = make_token_dataset(jax.random.key(args.seed), n=args.examples,
                                seq=args.seq + 1, vocab=cfg.vocab_size)
     params = init_transformer(jax.random.key(args.seed + 1), cfg)
     pel = lambda p, b: per_example_loss(p, cfg, b)[0]
     scorer = make_lm_scorer(cfg, args.strategy)
-    return params, train, pel, scorer
+    return params, train, pel, scorer, transformer_specs(cfg)
 
 
 def main():
@@ -107,6 +119,16 @@ def main():
                     help="run the sharded step on an N-device data mesh "
                     "(0 = single-device path); on CPU, N host devices are "
                     "forced automatically")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-shard params + optimizer state over a "
+                    "trailing M-device model axis (composes with --mesh/"
+                    "--async-scoring/--stream; total devices = mesh * M)")
+    ap.add_argument("--save-checkpoint", default="",
+                    help="save the final TrainState here (sharded runs "
+                    "use the gather-free per-shard npz layout)")
+    ap.add_argument("--restore-checkpoint", default="",
+                    help="restore a TrainState before training (old "
+                    "replicated and new per-shard checkpoints both work)")
     ap.add_argument("--score-shards", type=int, default=0,
                     help="logical scoring shards W (0 = auto: mesh size, "
                     "or 1 single-device)")
@@ -138,12 +160,23 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args()
-    _force_host_devices(args.mesh)
+    mp = max(args.model_parallel, 1)
+    dp = max(args.mesh, 1)
+    use_mesh = args.mesh > 0 or mp > 1
+    _force_host_devices(dp * mp if use_mesh else args.mesh)
+    model_axes = ("model",) if mp > 1 else ()
 
+    if mp > 1 and args.arch != "mlp_svhn":
+        ap.error("--model-parallel is wired into the shard_map data plane "
+                 "for the paper-faithful MLP path (--arch mlp_svhn); "
+                 "transformer tensor-parallelism runs under the "
+                 "jit-partitioned dry-run (repro.launch.dryrun)")
     if args.arch == "mlp_svhn":
-        params, train, pel, scorer = build_mlp(args)
+        params, train, pel, scorer, param_specs = build_mlp(args, model_axes)
     else:
-        params, train, pel, scorer = build_lm(args)
+        params, train, pel, scorer, param_specs = build_lm(args)
+    pspec_kw = (dict(param_specs=param_specs, params_template=params)
+                if mp > 1 else {})
 
     fused_score = None
     if args.mode == "fused":
@@ -151,7 +184,8 @@ def main():
             from repro.configs.mlp_svhn import CONFIG, smoke
             from repro.models.mlp import per_example_loss_and_score
             _cfg = smoke() if args.smoke else CONFIG
-            fused_score = lambda p, b: per_example_loss_and_score(p, b, _cfg)
+            fused_score = lambda p, b: per_example_loss_and_score(
+                p, b, _cfg, model_axes=model_axes)
         else:
             from repro.configs import get_config, get_smoke_config
             from repro.models.transformer import per_example_loss_and_score
@@ -171,6 +205,7 @@ def main():
     probe = None
     pipe = None
     plane = None
+    mesh = None
     if args.stream:
         if args.mode == "exact":
             ap.error("--stream does not support --mode exact (the oracle "
@@ -182,7 +217,7 @@ def main():
         from repro.data.streaming import (StreamedISSGD, StreamingDataPlane,
                                           make_streamed_steps)
         n_examples = train.size
-        n_shards = max(args.mesh, 1)
+        n_shards = dp    # data shards; the model axis never splits examples
         if n_examples % n_shards:
             ap.error(f"--examples {n_examples} not divisible by --mesh "
                      f"{n_shards}")
@@ -204,17 +239,15 @@ def main():
         if args.async_scoring:
             from repro.core.weight_store import to_buffered
             state = state._replace(store=to_buffered(state.store))
-        mesh = None
-        if args.mesh > 0:
+        if use_mesh:
             from repro.core import distributed as dist
             from repro.launch.mesh import make_debug_mesh
-            mesh = make_debug_mesh(args.mesh)
+            mesh = make_debug_mesh(dp, model=mp)
             s_step, smp_step, m_step, tcfg = dist.make_sharded_streamed_steps(
                 pel, scorer, opt, tcfg, n_examples, mesh, template,
                 chunk_size=csize, fused_score=fused_score,
                 async_mode=args.async_scoring,
-                monitor_traces=not args.no_trace_monitors)
-            state = dist.shard_train_state(state, mesh)
+                monitor_traces=not args.no_trace_monitors, **pspec_kw)
         else:
             s_step, smp_step, m_step = make_streamed_steps(
                 pel, scorer, opt, tcfg, n_examples, csize,
@@ -238,17 +271,16 @@ def main():
         from repro.core.async_pipeline import AsyncPipeline, make_async_steps
         from repro.core.weight_store import to_buffered
         state = state._replace(store=to_buffered(state.store))
-        if args.mesh > 0:
+        if use_mesh:
             from repro.core import distributed as dist
             from repro.launch.mesh import make_debug_mesh
-            mesh = make_debug_mesh(args.mesh)
+            mesh = make_debug_mesh(dp, model=mp)
             print(f"mesh: {tuple(mesh.shape.values())} over "
                   f"{jax.device_count()} devices (async, swap every "
                   f"{args.swap_every})", flush=True)
             s_step, m_step, tcfg = dist.make_sharded_async_steps(
                 pel, scorer, opt, tcfg, train.size, mesh, data,
-                monitor_traces=not args.no_trace_monitors)
-            state = dist.shard_train_state(state, mesh)
+                monitor_traces=not args.no_trace_monitors, **pspec_kw)
             data = dist.shard_dataset(data, mesh)
         else:
             print(f"async scoring, swap every {args.swap_every}", flush=True)
@@ -256,20 +288,20 @@ def main():
                 pel, scorer, opt, tcfg, train.size,
                 monitor_traces=not args.no_trace_monitors)
         pipe = AsyncPipeline(s_step, m_step, args.swap_every)
-    elif args.mesh > 0:
+    elif use_mesh:
         from repro.core import distributed as dist
         from repro.launch.mesh import make_debug_mesh
-        mesh = make_debug_mesh(args.mesh)
+        mesh = make_debug_mesh(dp, model=mp)
         print(f"mesh: {tuple(mesh.shape.values())} over "
               f"{jax.device_count()} devices", flush=True)
         raw_step, tcfg = dist.make_sharded_train_step(
             pel, scorer, opt, tcfg, train.size, mesh, data,
-            fused_score=fused_score)
+            fused_score=fused_score, **pspec_kw)
         step = jax.jit(raw_step)
         if args.mode == "fused":
             probe = jax.jit(dist.make_sharded_score_step(
-                scorer, tcfg, train.size, mesh, data))
-        state = dist.shard_train_state(state, mesh)
+                scorer, tcfg, train.size, mesh, data, optimizer=opt,
+                **pspec_kw))
         data = dist.shard_dataset(data, mesh)
     else:
         step = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
@@ -277,6 +309,19 @@ def main():
         if args.mode == "fused":
             from repro.core.issgd import make_score_step
             probe = jax.jit(make_score_step(scorer, tcfg, train.size))
+
+    if args.restore_checkpoint:
+        from repro.checkpoint import restore_checkpoint
+        # restore BEFORE placement: leaves come back as host numpy, so
+        # the single shard_train_state below moves each (model-)shard
+        # straight to its device — the full tensors never hit a device
+        state, ck_step = restore_checkpoint(args.restore_checkpoint, state)
+        print(f"restored {args.restore_checkpoint} (step {ck_step})",
+              flush=True)
+    if mesh is not None:
+        from repro.core import distributed as dist
+        state = dist.shard_train_state(
+            state, mesh, param_specs=pspec_kw.get("param_specs"))
 
     history = []
     t0 = time.time()
@@ -308,6 +353,12 @@ def main():
               f"{s.swaps} window swaps", flush=True)
         if history:
             history[-1]["stream_hit_rate"] = round(s.hit_rate, 4)
+    if args.save_checkpoint:
+        from repro.checkpoint import save_checkpoint
+        # sharded runs save gather-free: per-shard entries + manifest
+        save_checkpoint(args.save_checkpoint, state, step=int(state.step),
+                        gather=mesh is None)
+        print(f"saved checkpoint to {args.save_checkpoint}", flush=True)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=2)

@@ -45,32 +45,67 @@ def mlp_specs(cfg: MLPConfig) -> Params:
     return {f"fc{i}": {"w": ("embed", "ffn"), "b": ("ffn",)} for i in range(n)}
 
 
+def mlp_dims(cfg: MLPConfig) -> tuple:
+    return (cfg.input_dim, *cfg.hidden, cfg.num_classes)
+
+
+def layer_is_sharded(params: Params, cfg: MLPConfig, i: int) -> bool:
+    """Whether layer i's weight arrived as a model-axis column shard (its
+    trailing dim is narrower than the config's full dim).  Uneven dims
+    fall back to replication in `logical_to_pspec`, so shardedness is
+    per-layer, not per-run."""
+    return params[f"fc{i}"]["w"].shape[-1] != mlp_dims(cfg)[i + 1]
+
+
 def mlp_forward(params: Params, x: jax.Array, cfg: MLPConfig,
-                tape: Optional[Tape] = None) -> jax.Array:
-    """x: (B, input_dim) → logits (B, num_classes)."""
+                tape: Optional[Tape] = None,
+                model_axes: tuple[str, ...] = ()) -> jax.Array:
+    """x: (B, input_dim) → logits (B, num_classes).
+
+    With ``model_axes`` set (inside shard_map on a mesh with a model axis)
+    each column-sharded layer runs Megatron-style: the replicated input is
+    wrapped in `psum_backward` (exact input-gradients), the matmul uses
+    only the local weight columns, and the local output slice is
+    all-gathered for the replicated consumer.  Ghost taps land on the
+    *local* slice — the tap cotangent is this device's dY columns, so the
+    per-layer ghost contributions are model-axis partial sums that the
+    scorer psums into the exact per-example grad-norm.  Layers whose dims
+    fell back to replication (see `logical_to_pspec`) skip all three
+    wrappers.  With model_axes=() the path is byte-identical to before.
+    """
+    from repro.core.collectives import all_gather_replicated, psum_backward
     n = len(cfg.hidden) + 1
     h = x
     for i in range(n):
         p = params[f"fc{i}"]
+        sharded = model_axes and layer_is_sharded(params, cfg, i)
+        if sharded:
+            h = psum_backward(h, model_axes)
         y = h @ p["w"] + p["b"]
         if tape is not None:
             y = tape.linear(f"fc{i}", h, y)
+        if sharded:
+            y = all_gather_replicated(y, model_axes, axis=-1)
         h = jax.nn.relu(y) if i < n - 1 else y
     return h
 
 
 def per_example_loss(params: Params, batch: dict, cfg: MLPConfig,
-                     tape: Optional[Tape] = None) -> jax.Array:
+                     tape: Optional[Tape] = None,
+                     model_axes: tuple[str, ...] = ()) -> jax.Array:
     """Cross-entropy per example. batch: {x (B,D), y (B,)}."""
-    logits = mlp_forward(params, batch["x"], cfg, tape)
+    logits = mlp_forward(params, batch["x"], cfg, tape, model_axes=model_axes)
     lp = jax.nn.log_softmax(logits.astype(jnp.float32))
     return -jnp.take_along_axis(lp, batch["y"][:, None], axis=-1)[:, 0]
 
 
-def per_example_loss_and_score(params: Params, batch: dict,
-                               cfg: MLPConfig) -> tuple[jax.Array, jax.Array]:
-    """Fused-mode objective: (CE losses, logit-grad norms) in one forward."""
-    logits = mlp_forward(params, batch["x"], cfg)
+def per_example_loss_and_score(params: Params, batch: dict, cfg: MLPConfig,
+                               model_axes: tuple[str, ...] = ()
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Fused-mode objective: (CE losses, logit-grad norms) in one forward.
+    The score is closed-form from the (gathered, replicated) logits, so no
+    model-axis reduction is needed — it is exact and replicated as-is."""
+    logits = mlp_forward(params, batch["x"], cfg, model_axes=model_axes)
     lp = jax.nn.log_softmax(logits.astype(jnp.float32))
     nll = -jnp.take_along_axis(lp, batch["y"][:, None], axis=-1)[:, 0]
     p = jnp.exp(lp)

@@ -29,8 +29,11 @@ def global_norm(tree) -> jax.Array:
                         for x in jax.tree.leaves(tree)))
 
 
-def clip_by_global_norm(tree, max_norm: float):
-    n = global_norm(tree)
+def clip_by_global_norm(tree, max_norm: float, norm=None):
+    """Clip `tree` to `max_norm`.  Pass `norm` when the caller already has
+    the global norm (e.g. the model-axis-aware psum'd norm of a sharded
+    grad tree) so the clipping semantics live in exactly one place."""
+    n = global_norm(tree) if norm is None else norm
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
     return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), n
 

@@ -5,7 +5,24 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# The dp×mp equivalence grid of ISSUE 4: a pure-model-parallel mesh, a
+# mixed one, and the data-only degenerate case — every mesh-shaped test
+# battery parametrizes over this with the `dp_mp_grid` decorator.
+DP_MP_MESHES = [(1, 2), (2, 2), (4, 1)]
+dp_mp_grid = pytest.mark.parametrize("dp,mp", DP_MP_MESHES)
+
+
+def mesh_src(dp: int, mp: int = 1) -> str:
+    """Source snippet constructing ``mesh`` with the given dp×mp shape —
+    the one place test subprocesses build meshes, delegating to the
+    launcher's own `make_debug_mesh` so tests always exercise the mesh
+    layout the production entry point builds."""
+    return ("from repro.launch.mesh import make_debug_mesh as _mdm; "
+            f"mesh = _mdm({dp}, model={mp})")
 
 
 def run_py(code: str, devices: int = 4, timeout: int = 560) -> str:
@@ -20,3 +37,11 @@ def run_py(code: str, devices: int = 4, timeout: int = 560) -> str:
                        timeout=timeout)
     assert r.returncode == 0, r.stderr[-3000:]
     return r.stdout
+
+
+def run_mesh_py(code: str, dp: int, mp: int = 1, timeout: int = 560) -> str:
+    """`run_py` with the device count forced to dp·mp and a ``mesh``
+    variable (plus ``DP``/``MP`` ints) prepended to the snippet."""
+    header = f"import jax\nDP, MP = {dp}, {mp}\n" + mesh_src(dp, mp) + "\n"
+    return run_py(header + textwrap.dedent(code), devices=dp * mp,
+                  timeout=timeout)

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _helpers import REPO, run_py as _run_py
+from _helpers import REPO, mesh_src, run_py as _run_py
 
 
 def _setup(n=512):
@@ -157,7 +157,7 @@ def test_async_sharded_matches_single_device():
         pipe1 = AsyncPipeline(s1, m1, swap_every=K)
         st1 = init_async_state(params, opt, n)
 
-        mesh = jax.make_mesh((4,), ('data',))
+        """ + mesh_src(4) + """
         s4, m4, _ = D.make_sharded_async_steps(pel, scorer, opt, tcfg, n,
                                                mesh, data)
         pipe4 = AsyncPipeline(s4, m4, swap_every=K)
@@ -188,7 +188,7 @@ def test_async_master_step_hlo_gates():
     zero collectives."""
     out = _run_py(_SHARDED_SETUP + """
         import re
-        mesh = jax.make_mesh((4,), ('data',))
+        """ + mesh_src(4) + """
         s4, m4, _ = D.make_sharded_async_steps(pel, scorer, opt, tcfg, n,
                                                mesh, data)
         st4 = D.shard_train_state(init_async_state(params, opt, n), mesh)

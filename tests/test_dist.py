@@ -84,6 +84,58 @@ def test_uneven_vocab_falls_back_to_replication():
     assert "ok" in out
 
 
+def test_divisibility_fallback_warns_once_naming_param_and_axis():
+    """The silent-replication fallback is no longer silent: a dim that
+    fails divisibility warns exactly once, naming the parameter and the
+    mesh axis — a broken mp config can't masquerade as a working one.
+    Rule-level replication (logical axis mapped to None) stays quiet."""
+    out = _run_py("""
+        import warnings
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.sharding import logical_to_pspec, param_pspecs
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+
+        specs = {'head': {'w': ('embed', 'vocab')}}
+        params = {'head': {'w': jax.ShapeDtypeStruct((64, 73449),
+                                                     'float32')}}
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter('always')
+            ps = param_pspecs(specs, params, mesh)
+        assert jax.tree.leaves(ps, is_leaf=lambda x: isinstance(x, P)) \\
+            == [P(None, None)]
+        msgs = [str(w.message) for w in rec]
+        assert len(msgs) == 1, msgs
+        assert "['head']['w']" in msgs[0], msgs[0]      # names the param
+        assert "'model'" in msgs[0], msgs[0]            # names the axis
+        assert 'vocab' in msgs[0] and '73449' in msgs[0], msgs[0]
+
+        # one-time: the same (param, axis, size, dim) never warns again
+        with warnings.catch_warnings(record=True) as rec2:
+            warnings.simplefilter('always')
+            param_pspecs(specs, params, mesh)
+        assert not rec2, [str(w.message) for w in rec2]
+
+        # but a DIFFERENT (still non-dividing) mesh size warns afresh —
+        # retrying with model=2 must not stay deduped under model=4
+        mesh2 = jax.make_mesh((4, 2), ('data', 'model'))
+        with warnings.catch_warnings(record=True) as rec2b:
+            warnings.simplefilter('always')
+            param_pspecs(specs, params, mesh2)
+        assert len(rec2b) == 1 and 'size 2' in str(rec2b[0].message), \\
+            [str(w.message) for w in rec2b]
+
+        # rule-level replication (embed -> None) is by design, not a
+        # divisibility failure: no warning even for an odd dim
+        with warnings.catch_warnings(record=True) as rec3:
+            warnings.simplefilter('always')
+            logical_to_pspec(('embed',), (6151,), mesh, name='x')
+        assert not rec3, [str(w.message) for w in rec3]
+        print('fallback warning ok')
+    """)
+    assert "fallback warning ok" in out
+
+
 @pytest.mark.slow
 def test_dryrun_smoke_production_mesh():
     """Two smoke combos lower+compile on the 16x16 and 2x16x16 meshes."""

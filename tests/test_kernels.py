@@ -1,10 +1,14 @@
 """Per-kernel correctness: Pallas (interpret=True on CPU) vs pure-jnp oracle,
-swept over shapes and dtypes."""
+swept over shapes and dtypes — including the scoring kernels with their
+cotangent operand arriving model-axis-sharded under shard_map (the
+model-parallel scorer path: partial per-example sq-norms psum to the
+exact value)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _helpers import run_mesh_py
 from repro.kernels import ops, ref
 from repro.kernels.ghost_norm import ghost_norm as ghost_kernel
 from repro.kernels.per_example_sqnorm import per_example_sqnorm as pesn_kernel
@@ -83,6 +87,76 @@ def test_ghost_norm_equals_true_per_example_grad():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
     got2 = ops.ghost_norm(x, dy, force="direct")
     np.testing.assert_allclose(np.asarray(got2), np.asarray(want), rtol=1e-4)
+
+
+# ----------------------------------- model-axis-sharded operand parity
+@pytest.mark.parametrize("with_bias", [True, False])
+def test_per_example_sqnorm_model_sharded_operands(with_bias):
+    """per_example_sqnorm under shard_map with the cotangent column-
+    sharded over `model`: the per-device partial sums psum to the ref.py
+    oracle on the full arrays (the model-parallel ghost-scorer contract:
+    ||h||²·||dy||² is additive over dy's column shards)."""
+    out = run_mesh_py(f"""
+        import jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import shard_map
+        from repro.kernels import ref
+        from repro.kernels.per_example_sqnorm import per_example_sqnorm
+
+        B, DIN, DOUT = 8, 32, 24
+        k1, k2 = jax.random.split(jax.random.key(3))
+        x = jax.random.normal(k1, (B, DIN))
+        d = jax.random.normal(k2, (B, DOUT))
+
+        def body(x, d_local):
+            part = per_example_sqnorm(x, d_local, with_bias={with_bias},
+                                      block_b=4, block_k=16, interpret=True)
+            return jax.lax.psum(part, 'model')
+
+        f = jax.jit(shard_map(body, mesh=mesh,
+                              in_specs=(P(), P(None, 'model')),
+                              out_specs=P()))
+        got = f(x, jax.device_put(d, NamedSharding(mesh, P(None, 'model'))))
+        want = ref.per_example_sqnorm_ref(x, d, with_bias={with_bias})
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-6)
+        print('pesn sharded parity ok')
+    """, dp=1, mp=2)
+    assert "pesn sharded parity ok" in out
+
+
+def test_ghost_norm_model_sharded_operands():
+    """ghost_norm with model-axis-sharded dY columns: the gram-trick
+    quantity Σ_{s,s'} (x_s·x_s')(d_s·d_s') is additive over the out-dim,
+    so the psum over `model` of the per-shard kernels equals ref.py."""
+    out = run_mesh_py("""
+        import jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import shard_map
+        from repro.kernels import ref
+        from repro.kernels.ghost_norm import ghost_norm
+
+        B, S, DIN, DOUT = 3, 12, 16, 20
+        k1, k2 = jax.random.split(jax.random.key(5))
+        x = jax.random.normal(k1, (B, S, DIN))
+        d = jax.random.normal(k2, (B, S, DOUT))
+
+        def body(x, d_local):
+            part = ghost_norm(x, d_local, block_s=4, block_k=8,
+                              interpret=True)
+            return jax.lax.psum(part, 'model')
+
+        f = jax.jit(shard_map(body, mesh=mesh,
+                              in_specs=(P(), P(None, None, 'model')),
+                              out_specs=P()))
+        got = f(x, jax.device_put(
+            d, NamedSharding(mesh, P(None, None, 'model'))))
+        want = ref.ghost_norm_ref(x, d)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+        print('ghost sharded parity ok')
+    """, dp=1, mp=2)
+    assert "ghost sharded parity ok" in out
 
 
 def test_prop1_equals_true_per_example_grad():

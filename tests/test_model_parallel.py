@@ -1,0 +1,342 @@
+"""Model-parallel params in the ISSGD step (ISSUE 4 battery, marker `mp`).
+
+Pins the tentpole's three claims:
+
+  (a) dp×mp ≡ dp-only same-seed equivalence — identical sampled indices,
+      losses/params equal to float tolerance — on meshes 1×2, 2×2, 4×1
+      for every execution mode (relaxed / fused / async / streamed);
+  (b) the HLO gate: with model > 1 no scoring or master program contains
+      a full-parameter-sized tensor or an all-gather whose output is
+      parameter-shaped — params stay column shards end to end, mirroring
+      the no-full-table gate for the f32[N] weight table;
+  (c) the model-axis psum'd proposal equals the single-device proposal
+      (the scorer's partial per-example sq-norms reduce to the exact
+      grad norms — chi-squared distributional leg in
+      tests/test_sampler_stats.py).
+
+Multi-device tests run in subprocesses because the XLA host-device count
+is fixed at first jax init (the main pytest process keeps 1 device).
+"""
+import pytest
+
+from _helpers import dp_mp_grid, run_mesh_py
+
+pytestmark = pytest.mark.mp
+
+# MLP dims chosen so no activation shape collides with a full parameter
+# shape (batch dims 16/64 vs param dims 24/48/10): the HLO gate can grep
+# for the full 2-D weight shapes without false positives.
+_SETUP = """
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.importance import ISConfig
+        from repro.core.issgd import ISSGDConfig, init_train_state, make_train_step
+        from repro.core import distributed as D
+        from repro.core.async_pipeline import (AsyncPipeline, init_async_state,
+                                               make_async_steps)
+        from repro.core.scorer import make_mlp_scorer
+        from repro.data import make_svhn_like
+        from repro.models.mlp import (MLPConfig, init_mlp_classifier, mlp_specs,
+                                      per_example_loss,
+                                      per_example_loss_and_score)
+        from repro.optim import sgd
+
+        cfg = MLPConfig(input_dim=24, hidden=(48,), num_classes=10)
+        train, _ = make_svhn_like(jax.random.key(0), n=512, dim=24)
+        params = init_mlp_classifier(jax.random.key(1), cfg)
+        opt = sgd(0.05)
+        specs = mlp_specs(cfg)
+        base = ISSGDConfig(batch_size=16, score_batch_size=64, mode="relaxed",
+                           is_cfg=ISConfig(smoothing=0.1), score_shards=4)
+        n = train.size
+        data_host = train.arrays
+        MAXES = ('model',) if MP > 1 else ()
+
+        # the dp-only reference: the single-device axes=() step
+        pel1 = lambda p, b: per_example_loss(p, b, cfg)
+        sc1 = make_mlp_scorer(cfg, 'ghost')
+        fs1 = lambda p, b: per_example_loss_and_score(p, b, cfg)
+        # the dp×mp run under test: model-axis-aware loss/scorer closures
+        pel = lambda p, b: per_example_loss(p, b, cfg, model_axes=MAXES)
+        sc = make_mlp_scorer(cfg, 'ghost', model_axes=MAXES)
+        fs = lambda p, b: per_example_loss_and_score(p, b, cfg, model_axes=MAXES)
+        PK = dict(param_specs=specs, params_template=params)
+
+        def check(m1, m, tag):
+            assert np.array_equal(np.asarray(m1.sample_indices),
+                                  np.asarray(m.sample_indices)), tag
+            np.testing.assert_allclose(float(m1.loss), float(m.loss),
+                                       rtol=1e-5, atol=1e-6, err_msg=tag)
+            np.testing.assert_allclose(float(m1.grad_norm), float(m.grad_norm),
+                                       rtol=1e-4, atol=1e-6, err_msg=tag)
+
+        def check_params(p1, p, tag):
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-4, atol=1e-6, err_msg=tag)
+"""
+
+
+@dp_mp_grid
+def test_dpmp_equivalent_to_dp_only_all_modes(dp, mp):
+    """(a) the tentpole equivalence: one subprocess per mesh shape runs
+    relaxed, fused, async (swap 2), and streamed against the same-seed
+    single-device reference."""
+    out = run_mesh_py(_SETUP + """
+        # ---- relaxed + fused (the sync train step) ----
+        for mode in ('relaxed', 'fused'):
+            tc = dataclasses.replace(base, mode=mode)
+            fk1 = dict(fused_score=fs1) if mode == 'fused' else {}
+            fk = dict(fused_score=fs) if mode == 'fused' else {}
+            step1 = jax.jit(make_train_step(pel1, sc1, opt, tc, n, **fk1))
+            stepm, _ = D.make_sharded_train_step(
+                pel, sc, opt, tc, n, mesh, data_host, **fk, **PK)
+            stepm = jax.jit(stepm)
+            s1 = init_train_state(params, opt, n)
+            sm = D.shard_train_state(init_train_state(params, opt, n),
+                                     mesh, param_specs=specs)
+            dm = D.shard_dataset(data_host, mesh)
+            for i in range(10):
+                s1, m1 = step1(s1, data_host)
+                sm, m = stepm(sm, dm)
+                check(m1, m, f'{mode}/{i}')
+            check_params(s1.params, sm.params, mode)
+            print(mode, 'ok')
+
+        # ---- async (swap cadence 2) ----
+        s_step1, m_step1 = make_async_steps(pel1, sc1, opt, base, n)
+        pipe1 = AsyncPipeline(s_step1, m_step1, swap_every=2)
+        s_step, m_step, _ = D.make_sharded_async_steps(
+            pel, sc, opt, base, n, mesh, data_host, **PK)
+        pipem = AsyncPipeline(s_step, m_step, swap_every=2)
+        a1 = init_async_state(params, opt, n)
+        am = D.shard_train_state(init_async_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        dm = D.shard_dataset(data_host, mesh)
+        for i in range(8):
+            a1, m1 = pipe1.step(a1, data_host)
+            am, m = pipem.step(am, dm)
+            check(m1, m, f'async/{i}')
+        check_params(a1.params, am.params, 'async')
+        print('async ok')
+
+        # ---- streamed ----
+        from repro.data.store import ChunkedExampleStore
+        from repro.data.streaming import StreamedISSGD, StreamingDataPlane
+        store = ChunkedExampleStore.from_arrays(data_host, 64)
+        plane = StreamingDataPlane(store, 2, mesh=mesh)
+        template = {k: np.empty((0,) + store.row_shape(k), store.dtype(k))
+                    for k in store.keys}
+        ss, smp, ms, _ = D.make_sharded_streamed_steps(
+            pel, sc, opt, base, n, mesh, template, chunk_size=64, **PK)
+        sp = StreamedISSGD(plane, ss, smp, ms, base, n)
+        st = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        step1 = jax.jit(make_train_step(pel1, sc1, opt, base, n))
+        s1 = init_train_state(params, opt, n)
+        for i in range(8):
+            s1, m1 = step1(s1, data_host)
+            st, m = sp.step(st)
+            check(m1, m, f'streamed/{i}')
+        check_params(s1.params, st.params, 'streamed')
+        print('streamed ok')
+    """, dp=dp, mp=mp)
+    for tag in ("relaxed ok", "fused ok", "async ok", "streamed ok"):
+        assert tag in out, out[-1000:]
+
+
+def test_params_stay_sharded_and_hlo_has_no_full_param_tensor():
+    """(b) the HLO gate on a 2×2 mesh: the fused train step, the async
+    scoring/master programs, and the streamed scoring/sample/master
+    programs never materialize a full-parameter-sized tensor, and no
+    all-gather output is parameter-shaped; the step's output params keep
+    their model-axis shards."""
+    out = run_mesh_py(_SETUP + """
+        import re
+        from jax.sharding import PartitionSpec as P
+
+        # full 2-D weight shapes (fwd + transposed-grad orientation);
+        # none may appear in any program once model > 1
+        FULL = ['f32[24,48]', 'f32[48,24]', 'f32[48,10]', 'f32[10,48]']
+
+        def gate(hlo, tag):
+            for s in FULL:
+                assert s not in hlo, f'{tag}: full param tensor {s}'
+            for line in hlo.splitlines():
+                if 'all-gather' not in line:
+                    continue
+                for s in FULL:
+                    assert s not in line, f'{tag}: all-gather of params'
+
+        sm = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        dm = D.shard_dataset(data_host, mesh)
+
+        # sync (relaxed) train step
+        stepm, _ = D.make_sharded_train_step(pel, sc, opt, base, n, mesh,
+                                             data_host, **PK)
+        jitted = jax.jit(stepm)
+        new_state, _ = jitted(sm, dm)
+        w = new_state.params['fc0']['w']
+        assert 'model' in tuple(w.sharding.spec), w.sharding.spec
+        shapes = {s.data.shape for s in w.addressable_shards}
+        assert shapes == {(24, 24)}, shapes
+        gate(jitted.lower(sm, dm).compile().as_text(), 'train')
+
+        # async scoring + master
+        s_step, m_step, _ = D.make_sharded_async_steps(
+            pel, sc, opt, base, n, mesh, data_host,
+            monitor_traces=False, **PK)
+        am = D.shard_train_state(init_async_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        bs = am.store
+        gate(jax.jit(s_step).lower(am.stale_params, bs.write_buf, am.step,
+                                   dm).compile().as_text(), 'async scoring')
+        gate(jax.jit(m_step).lower(am.params, am.opt_state, am.stale_params,
+                                   bs.read_buf, am.step, am.rng,
+                                   dm).compile().as_text(), 'async master')
+
+        # streamed scoring / sample / master
+        from repro.data.store import ChunkedExampleStore
+        from repro.data.streaming import StreamedISSGD, StreamingDataPlane
+        store = ChunkedExampleStore.from_arrays(data_host, 64)
+        plane = StreamingDataPlane(store, 2, mesh=mesh)
+        template = {k: np.empty((0,) + store.row_shape(k), store.dtype(k))
+                    for k in store.keys}
+        ss, smp, ms, _ = D.make_sharded_streamed_steps(
+            pel, sc, opt, base, n, mesh, template, chunk_size=64, **PK)
+        sp = StreamedISSGD(plane, ss, smp, ms, base, n, jit=False)
+        st = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        rows = plane.fetch_sharded(sp._score_indices(0))
+        store_s, fresh, stale, _ = jax.jit(ss)(st.stale_params, st.store,
+                                               st.step, rows)
+        gate(jax.jit(ss).lower(st.stale_params, st.store, st.step,
+                               rows).compile().as_text(), 'streamed scoring')
+        gate(jax.jit(smp).lower(store_s, st.step,
+                                st.rng).compile().as_text(), 'sample')
+        idx, _ = jax.jit(smp)(store_s, st.step, st.rng)
+        batch = plane.gather_global(np.asarray(idx))
+        gate(jax.jit(ms).lower(st.params, st.opt_state, st.stale_params,
+                               store_s, st.step, st.rng, batch, fresh,
+                               stale).compile().as_text(), 'streamed master')
+        print('hlo gates ok')
+    """, dp=2, mp=2)
+    assert "hlo gates ok" in out
+
+
+@dp_mp_grid
+def test_model_axis_proposal_matches_single_device(dp, mp):
+    """(c) the psum'd proposal invariant: after identical scoring sweeps,
+    the dp×mp store holds the same ω̃ table as the single-device run —
+    the model-axis partial sq-norms reduce to the exact grad norms."""
+    out = run_mesh_py(_SETUP + """
+        from repro.core.weight_store import read_proposal
+
+        step1 = jax.jit(make_train_step(pel1, sc1, opt, base, n))
+        stepm, _ = D.make_sharded_train_step(pel, sc, opt, base, n, mesh,
+                                             data_host, **PK)
+        stepm = jax.jit(stepm)
+        s1 = init_train_state(params, opt, n)
+        sm = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        dm = D.shard_dataset(data_host, mesh)
+        for i in range(8):    # 8 steps x 64 rows = the whole 512-row table
+            s1, _ = step1(s1, data_host)
+            sm, _ = stepm(sm, dm)
+        w1 = np.asarray(s1.store.weights)
+        wm = np.asarray(sm.store.weights)
+        assert (np.asarray(s1.store.scored_at) >= 0).all()
+        np.testing.assert_allclose(wm, w1, rtol=1e-4, atol=1e-6)
+        p1 = np.asarray(read_proposal(s1.store, 8, base.is_cfg))
+        pm = np.asarray(read_proposal(
+            jax.tree.map(np.asarray, sm.store), 8, base.is_cfg))
+        np.testing.assert_allclose(pm / pm.sum(), p1 / p1.sum(),
+                                   rtol=1e-4, atol=1e-8)
+        print('proposal exact')
+    """, dp=dp, mp=mp)
+    assert "proposal exact" in out
+
+
+def test_grad_clip_uses_model_global_norm():
+    """grad_clip under mp clips by the TRUE global norm (psum over model
+    of partial square-sums), matching the single-device trajectory."""
+    out = run_mesh_py(_SETUP + """
+        tc = dataclasses.replace(base, grad_clip=0.05)
+        step1 = jax.jit(make_train_step(pel1, sc1, opt, tc, n))
+        stepm, _ = D.make_sharded_train_step(pel, sc, opt, tc, n, mesh,
+                                             data_host, **PK)
+        stepm = jax.jit(stepm)
+        s1 = init_train_state(params, opt, n)
+        sm = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        dm = D.shard_dataset(data_host, mesh)
+        for i in range(6):
+            s1, m1 = step1(s1, data_host)
+            sm, m = stepm(sm, dm)
+            check(m1, m, f'clip/{i}')
+        check_params(s1.params, sm.params, 'clip')
+        print('clip ok')
+    """, dp=1, mp=2)
+    assert "clip ok" in out
+
+
+def test_checkpoint_roundtrip_sharded_params():
+    """Sharded save (gather-free per-shard layout) → restore → re-place →
+    the restored dp×mp run continues bitwise-equal to the uninterrupted
+    one; the npz holds shard entries, never a full param array."""
+    out = run_mesh_py(_SETUP + """
+        import numpy as np, tempfile, os
+        from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+        stepm, _ = D.make_sharded_train_step(pel, sc, opt, base, n, mesh,
+                                             data_host, **PK)
+        stepm = jax.jit(stepm)
+        sm = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        dm = D.shard_dataset(data_host, mesh)
+        for _ in range(5):
+            sm, _ = stepm(sm, dm)
+        path = os.path.join(tempfile.mkdtemp(), 'ck.npz')
+        save_checkpoint(path, sm, step=5, gather=False)
+
+        with np.load(path) as z:
+            keys = list(z.files)
+        assert any('params/fc0/w::shard' in k for k in keys), keys[:10]
+        assert not any(k == 'params/fc0/w' for k in keys)
+
+        template = init_train_state(params, opt, n)
+        restored, ck = restore_checkpoint(path, template)
+        assert ck == 5
+        rm = D.shard_train_state(restored, mesh, param_specs=specs)
+        w = rm.params['fc0']['w']
+        assert {s.data.shape for s in w.addressable_shards} == {(24, 24)}
+
+        cont, _ = stepm(sm, dm)
+        resd, _ = stepm(rm, dm)
+        for a, b in zip(jax.tree.leaves(cont.params),
+                        jax.tree.leaves(resd.params)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        print('sharded checkpoint roundtrip ok')
+    """, dp=2, mp=2)
+    assert "sharded checkpoint roundtrip ok" in out
+
+
+@pytest.mark.slow
+def test_train_cli_smoke_mp():
+    """End-to-end CLI gate: --model-parallel 2 --mesh 2 runs green with
+    the devices forced by train.py itself."""
+    import os
+    import subprocess
+    import sys
+
+    from _helpers import REPO
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "mlp_svhn",
+         "--smoke", "--mesh", "2", "--model-parallel", "2", "--steps", "8",
+         "--examples", "1024"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "mesh: (2, 2)" in r.stdout, r.stdout[-1000:]

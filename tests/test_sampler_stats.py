@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _helpers import run_py as _run_py
+from _helpers import mesh_src, run_py as _run_py
 
 
 def chi2_critical(df: int, z: float = 3.719) -> float:
@@ -60,6 +60,85 @@ def test_two_stage_sample_chi2_gof(shards):
 
 
 @pytest.mark.stats
+@pytest.mark.mp
+@pytest.mark.parametrize("dp,mp", [(1, 2), (2, 2)])
+def test_model_parallel_proposal_chi2_matches_single_device(dp, mp):
+    """ISSUE 4 (c): build the proposal with the model-axis-sharded scorer
+    (partial per-example sq-norms psum'd over `model`) on a dp×mp mesh,
+    then chi-squared-test draws from it against the SINGLE-DEVICE
+    proposal distribution: the psum'd proposal must *be* the same
+    multinomial, not just close."""
+    from _helpers import run_mesh_py
+
+    out = run_mesh_py("""
+        import json
+        import jax.numpy as jnp, numpy as np
+        from repro.core.importance import ISConfig
+        from repro.core.issgd import (ISSGDConfig, init_train_state,
+                                      make_train_step)
+        from repro.core import distributed as D
+        from repro.core.sampler import sample_indices
+        from repro.core.scorer import make_mlp_scorer
+        from repro.core.weight_store import read_proposal
+        from repro.data import make_svhn_like
+        from repro.models.mlp import (MLPConfig, init_mlp_classifier,
+                                      mlp_specs, per_example_loss)
+        from repro.optim import sgd
+
+        cfg = MLPConfig(input_dim=16, hidden=(32,), num_classes=4)
+        train, _ = make_svhn_like(jax.random.key(2), n=256, dim=16,
+                                  classes=4)
+        params = init_mlp_classifier(jax.random.key(3), cfg)
+        opt = sgd(0.0)   # freeze params: both runs score identical θ
+        tcfg = ISSGDConfig(batch_size=16, score_batch_size=64,
+                           mode="relaxed", is_cfg=ISConfig(smoothing=0.05),
+                           score_shards=4)
+        n = train.size
+        MAXES = ('model',)
+        pel1 = lambda p, b: per_example_loss(p, b, cfg)
+        sc1 = make_mlp_scorer(cfg, 'ghost')
+        pel = lambda p, b: per_example_loss(p, b, cfg, model_axes=MAXES)
+        sc = make_mlp_scorer(cfg, 'ghost', model_axes=MAXES)
+
+        step1 = jax.jit(make_train_step(pel1, sc1, opt, tcfg, n))
+        stepm, _ = D.make_sharded_train_step(
+            pel, sc, opt, tcfg, n, mesh, train.arrays,
+            param_specs=mlp_specs(cfg), params_template=params)
+        stepm = jax.jit(stepm)
+        s1 = init_train_state(params, opt, n)
+        sm = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=mlp_specs(cfg))
+        dm = D.shard_dataset(train.arrays, mesh)
+        for _ in range(4):   # 4 x 64 rows = the whole table scored
+            s1, _ = step1(s1, train.arrays)
+            sm, _ = stepm(sm, dm)
+
+        p_ref = np.asarray(read_proposal(s1.store, 4, tcfg.is_cfg),
+                           np.float64)
+        p_ref /= p_ref.sum()
+        w_mp = jnp.asarray(np.asarray(sm.store.weights))
+        from repro.core.weight_store import WeightStore
+        store_mp = WeightStore(
+            weights=w_mp,
+            scored_at=jnp.asarray(np.asarray(sm.store.scored_at)))
+        prop_mp = read_proposal(store_mp, 4, tcfg.is_cfg)
+
+        m_draws = 200_000
+        idx = np.asarray(sample_indices(jax.random.key(11), prop_mp,
+                                        m_draws, num_shards=4))
+        counts = np.bincount(idx, minlength=n)
+        expected = m_draws * p_ref
+        assert expected.min() > 20
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        print(json.dumps(dict(chi2=chi2, df=n - 1)))
+    """, dp=dp, mp=mp)
+    import json
+    rec = json.loads(out.strip().splitlines()[-1])
+    crit = chi2_critical(rec["df"])
+    assert rec["chi2"] < crit, f"chi2={rec['chi2']:.1f} >= crit={crit:.1f}"
+
+
+@pytest.mark.stats
 @pytest.mark.parametrize("devices,score_shards", [(2, 4), (4, 8)])
 def test_two_stage_sample_chi2_gof_sharded(devices, score_shards):
     """The same GOF battery with the table sharded over a real 2/4-device
@@ -75,7 +154,7 @@ def test_two_stage_sample_chi2_gof_sharded(devices, score_shards):
         n, m_batch, n_batches = 256, 50_000, 4
         w = (jnp.arange(n, dtype=jnp.float32) % 17) + 0.25
         w = w.at[:: n // 8].mul(4.0)
-        mesh = jax.make_mesh((ND,), ('data',))
+        {mesh_src(devices)}
         w_sharded = jax.device_put(w, NamedSharding(mesh, P('data')))
 
         def body(key, local_w):

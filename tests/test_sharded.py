@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _helpers import REPO, run_py as _run_py
+from _helpers import REPO, mesh_src, run_py as _run_py
 
 
 _SETUP = """
@@ -47,7 +47,7 @@ def test_sharded_matches_single_device():
         step1 = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size))
         st1 = init_train_state(params, opt, train.size)
 
-        mesh = jax.make_mesh((4,), ('data',))
+        """ + mesh_src(4) + """
         step4, _ = D.make_sharded_train_step(
             pel, scorer, opt, tcfg, train.size, mesh, train.arrays)
         step4 = jax.jit(step4)
@@ -80,7 +80,7 @@ def test_mesh_size_one_is_bitwise_special_case():
     out = _run_py(_SETUP + """
         step_plain = jax.jit(make_train_step(pel, scorer, opt, tcfg,
                                              train.size))
-        mesh = jax.make_mesh((1,), ('data',))
+        """ + mesh_src(1) + """
         step_m1, _ = D.make_sharded_train_step(
             pel, scorer, opt, tcfg, train.size, mesh, train.arrays)
         step_m1 = jax.jit(step_m1)
@@ -107,7 +107,7 @@ def test_store_never_materialized_unsharded():
         import re
         from jax.sharding import NamedSharding, PartitionSpec as P
         N = train.size
-        mesh = jax.make_mesh((4,), ('data',))
+        """ + mesh_src(4) + """
         step4, _ = D.make_sharded_train_step(
             pel, scorer, opt, tcfg, train.size, mesh, train.arrays)
         st4 = D.shard_train_state(init_train_state(params, opt, train.size),
@@ -228,7 +228,7 @@ def test_scatter_rows_duplicates_sharded_last_write_wins():
         from repro.core.collectives import scatter_rows
         from repro.dist import shard_map
 
-        mesh = jax.make_mesh((2,), ('data',))
+        """ + mesh_src(2) + """
         arr = jax.device_put(jnp.zeros((8,), jnp.float32),
                              NamedSharding(mesh, P('data')))
         idx = jnp.asarray([6, 1, 6, 1, 3], jnp.int32)   # dups on both shards

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _helpers import REPO, run_py as _run_py
+from _helpers import REPO, mesh_src, run_py as _run_py
 
 pytestmark = pytest.mark.stream
 
@@ -335,7 +335,7 @@ _MESH_SETUP = """
         data = train.arrays
         n = train.size
         CS = 32                       # 16 chunks, 4 per shard
-        mesh = jax.make_mesh((4,), ('data',))
+        """ + mesh_src(4) + """
         data4 = D.shard_dataset(data, mesh)
 
         def make_streamed(tcfg, async_mode=False, fused_score=None):
