@@ -98,6 +98,12 @@ def _sharded_scaling():
     return sharded_scaling()
 
 
+@bench("transformer_scaling")
+def _transformer_scaling():
+    from benchmarks.sharded_scaling import transformer_scaling
+    return transformer_scaling()
+
+
 @bench("async_overlap")
 def _async_overlap():
     from benchmarks.async_overlap import async_overlap

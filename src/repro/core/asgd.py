@@ -36,6 +36,7 @@ from repro.optim import Optimizer, global_norm
 
 @dataclasses.dataclass(frozen=True)
 class ASGDConfig:
+    """Knobs of the delayed-gradient ASGD baseline (paper §6 comparison)."""
     batch_size: int = 64
     delay: int = 4                  # gradient staleness in steps
     mode: str = "uniform"           # uniform | issgd
@@ -43,6 +44,7 @@ class ASGDConfig:
 
 
 class ASGDState(NamedTuple):
+    """Train state with the FIFO of delayed parameter snapshots."""
     params: Any
     opt_state: Any
     fifo: Any                       # stacked (delay+1, ...) param snapshots
@@ -52,6 +54,7 @@ class ASGDState(NamedTuple):
 
 
 class ASGDMetrics(NamedTuple):
+    """Per-step monitors: loss, grad norm, and the staleness gap."""
     loss: jax.Array
     grad_norm: jax.Array
     delay_gap: jax.Array            # ||θ_t − θ_{t−delay}|| (staleness size)
@@ -59,6 +62,7 @@ class ASGDMetrics(NamedTuple):
 
 def init_asgd_state(params, optimizer: Optimizer, cfg: ASGDConfig,
                     num_examples: int, seed: int = 0) -> ASGDState:
+    """Fresh ASGDState: the snapshot FIFO starts as delay+1 copies of θ₀."""
     fifo = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (cfg.delay + 1,) + x.shape),
         params)
@@ -74,6 +78,9 @@ def make_asgd_step(
     num_examples: int,
     fused_score: Optional[Callable] = None,      # for mode="issgd"
 ) -> Callable:
+    """Build the delayed-gradient step: the update applied at step t was
+    computed on the parameters of step t − delay (the FIFO head); replicated
+    single-device semantics, used by benchmarks/asgd_comparison.py."""
     n = num_examples
     if cfg.mode == "issgd" and fused_score is None:
         raise ValueError("mode='issgd' requires fused_score")

@@ -159,6 +159,9 @@ class AsyncPipeline:
 
     def step(self, state: TrainState, data: dict
              ) -> tuple[TrainState, StepMetrics]:
+        """One async step: dispatch the scoring fan-out (into write_buf)
+        and the master update (sampling from read_buf) as independent
+        computations, then swap the buffers every `swap_every` steps."""
         if self._t is None:
             self._t = int(state.step)   # one host sync, at startup only
         bs: BufferedWeightStore = state.store

@@ -73,6 +73,70 @@ def psum_backward(x, axes: Axes):
     return f(x)
 
 
+def psum_forward(x, axes: Axes):
+    """Psum forward, identity backward — Megatron's row-parallel reduce.
+
+    Wrap the *partial* output of a linear whose weight is row-sharded over
+    the model axes (its input was a local column slice): the forward psums
+    the per-device partials into the exact full output, and the backward
+    hands each device the (replicated) cotangent untouched — which is the
+    exact gradient for its local partial, because every consumer of the
+    psum'd output is replicated over `axes`.  Only valid under that
+    replicated-consumer contract (the transpose pair of `psum_backward`,
+    the way `all_gather_replicated` pairs with a slice).  With axes=()
+    this is the identity in both directions."""
+    axes = tuple(axes)
+    if not axes:
+        return x
+
+    @jax.custom_vjp
+    def f(x):
+        return psum(x, axes)
+
+    f.defvjp(lambda x: (psum(x, axes), None), lambda _, ct: (ct,))
+    return f(x)
+
+
+def scatter_seq(x, axes: Axes, axis: int = 1):
+    """Slice this device's chunk of dim `axis` from a replicated array —
+    the entry into a sequence-parallel segment (Megatron-SP style).
+
+    Forward: each device of `axes` keeps its own contiguous chunk (linear
+    device-id order, matching `all_gather_replicated`'s tiling, so
+    ``all_gather_replicated(scatter_seq(x))`` is the identity).  Backward:
+    the per-chunk cotangents are embedded at their offsets and psum'd over
+    `axes`, reconstituting the *replicated* full cotangent — each chunk's
+    gradient lives on exactly one device, so the psum is an exact
+    disjoint-support sum, and everything upstream (residual stream, layer
+    norms, embeddings) keeps receiving replicated cotangents.  With
+    axes=() this is the identity."""
+    axes = tuple(axes)
+    if not axes:
+        return x
+    full = x.shape[axis]
+
+    @jax.custom_vjp
+    def f(x):
+        dev, n = axis_info(axes)
+        local = full // n
+        return jax.lax.dynamic_slice_in_dim(x, dev * local, local, axis)
+
+    def fwd(x):
+        return f(x), None
+
+    def bwd(_, ct):
+        dev, n = axis_info(axes)
+        local = full // n
+        shape = list(ct.shape)
+        shape[axis] = full
+        z = jnp.zeros(shape, ct.dtype)
+        z = jax.lax.dynamic_update_slice_in_dim(z, ct, dev * local, axis)
+        return (psum(z, axes),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)
+
+
 def all_gather_replicated(x, axes: Axes, axis: int = -1):
     """All-gather `x` along dim `axis` over mesh `axes`, for a *replicated
     consumer* — Megatron's "g" operator, transpose-paired with

@@ -47,6 +47,7 @@ def _is_pspec(x) -> bool:
 
 
 def mesh_device_count(mesh: Mesh, axes: Optional[tuple[str, ...]] = None) -> int:
+    """Device count over `axes` of `mesh` (default: the data axes)."""
     axes = data_axes(mesh) if axes is None else axes
     n = 1
     for a in axes:
@@ -122,6 +123,7 @@ def dataset_pspecs(data: dict, mesh: Mesh) -> dict:
 
 
 def shard_dataset(data: dict, mesh: Mesh) -> dict:
+    """Place every dataset array on `mesh`, example-axis-sharded."""
     specs = dataset_pspecs(data, mesh)
     return {k: jax.device_put(v, NamedSharding(mesh, specs[k]))
             for k, v in data.items()}

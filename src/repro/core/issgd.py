@@ -64,6 +64,8 @@ from repro.optim import Optimizer, global_norm
 
 @dataclasses.dataclass(frozen=True)
 class ISSGDConfig:
+    """Step-shape knobs: batch sizes, refresh cadence, mode, smoothing,
+    and the mesh-free logical scoring decomposition W."""
     batch_size: int = 64
     score_batch_size: int = 256        # examples rescored per step ("workers")
     refresh_every: int = 8             # θ_stale refresh period (param pushes)
@@ -74,6 +76,8 @@ class ISSGDConfig:
 
 
 class TrainState(NamedTuple):
+    """Everything a step carries: master + worker params, the store, the
+    step counter, and the PRNG key stream."""
     params: Any
     opt_state: Any
     stale_params: Any                  # the workers' parameter copy
@@ -83,6 +87,7 @@ class TrainState(NamedTuple):
 
 
 class StepMetrics(NamedTuple):
+    """Per-step monitors (paper fig. 4 traces + sampling diagnostics)."""
     loss: jax.Array
     grad_norm: jax.Array
     # √Tr(Σ(q)) monitors over the freshly scored slice (paper fig. 4)
@@ -96,6 +101,8 @@ class StepMetrics(NamedTuple):
 
 def init_train_state(params, optimizer: Optimizer, num_examples: int,
                      seed: int = 0) -> TrainState:
+    """Fresh TrainState: stale params start as a copy of θ₀, the store
+    unscored (uniform proposal until the first sweep)."""
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),

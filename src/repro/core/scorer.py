@@ -113,13 +113,34 @@ def ghost_sq_norms(
 
 
 # ----------------------------------------------------------- LM strategies
-def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref") -> Callable:
-    """Scorer for transformer LMs.  Returns fn(params, batch) -> ω̃ (B,)."""
-    from repro.models.transformer import (per_example_loss, tap_structure)
+def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref",
+                   model_axes: tuple[str, ...] = (),
+                   seq_shard: bool = False) -> Callable:
+    """Scorer for transformer LMs.  Returns fn(params, batch) -> ω̃ (B,).
+
+    With ``model_axes`` set the returned scorer expects model-axis-sharded
+    params inside shard_map (head/ffn/channel shards, see
+    models/transformer.forward).  Gradient-norm strategies compute
+    per-example partial squared norms from the local dY slices of the
+    sharded layers (`sharded_tap_names` classifies which taps are partial
+    vs replicated) and psum them over the model axes, so the proposal ω̃
+    is exact and replicated across model devices; forward-only strategies
+    (loss / logit_grad) read the gathered replicated logits and need no
+    reduction.  ``seq_shard`` threads sequence parallelism through the
+    forward.  The `full` vmap-of-grad oracle is single-device-only.
+    """
+    from repro.models.transformer import (per_example_loss,
+                                          sharded_tap_names,
+                                          tap_structure,
+                                          tap_structure_from_params)
+    model_axes = tuple(model_axes)
 
     if strategy == "loss":
         def score(params, batch):
-            losses, _ = per_example_loss(params, cfg, batch, ssm_mode=ssm_mode)
+            losses, _ = per_example_loss(params, cfg, batch,
+                                         ssm_mode=ssm_mode,
+                                         model_axes=model_axes,
+                                         seq_shard=seq_shard)
             return jnp.maximum(losses.astype(jnp.float32), 0.0)
         return score
 
@@ -131,32 +152,51 @@ def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref") -> Callable:
             embeds = batch.get("embeds")
             n_front = embeds.shape[1] if embeds is not None else 0
             h, _ = forward(params, cfg, tokens[:, :-1], embeds=embeds,
-                           ssm_mode=ssm_mode, return_hidden=True)
+                           ssm_mode=ssm_mode, return_hidden=True,
+                           model_axes=model_axes, seq_shard=seq_shard)
             # chunked head: never materializes (B,S,V) logits at once
             _, grad_norm = lm_head_metrics(params, cfg, h[:, n_front:],
-                                           tokens[:, 1:])
+                                           tokens[:, 1:],
+                                           model_axes=model_axes)
             return grad_norm
         return score
 
     if strategy == "ghost":
         def score(params, batch):
             b, s = batch["tokens"].shape
-            tap_shapes = tap_structure(cfg, b, s - 1)
+            if model_axes:
+                tap_shapes = tap_structure_from_params(
+                    params, cfg, b, s - 1, model_axes=model_axes,
+                    ssm_mode=ssm_mode)
+                sharded = sharded_tap_names(params, cfg)
+            else:
+                tap_shapes = tap_structure(cfg, b, s - 1)
+                sharded = None
             # the unembed tap lives outside the scan: add it explicitly
             def loss_with_taps(taps):
                 losses, aux = per_example_loss(
                     params, cfg, batch, taps=taps, collect=True,
-                    ssm_mode=ssm_mode)
+                    ssm_mode=ssm_mode, model_axes=model_axes,
+                    seq_shard=seq_shard)
                 return losses, aux.records
             sq, _ = ghost_sq_norms(loss_with_taps, tap_shapes, b,
-                                   with_bias=False)
+                                   with_bias=False, model_axes=model_axes,
+                                   sharded_names=sharded)
             return jnp.sqrt(sq)
         return score
 
     if strategy == "ghost_rev":
-        return _make_ghost_rev_scorer(cfg, ssm_mode)
+        return _make_ghost_rev_scorer(cfg, ssm_mode, model_axes=model_axes,
+                                      seq_shard=seq_shard)
 
     if strategy == "full":
+        if model_axes:
+            raise ValueError(
+                "strategy 'full' (the vmap-of-grad test oracle) does not "
+                "support model-axis-sharded params; use 'ghost' or "
+                "'ghost_rev', which psum partial per-example norms over "
+                "the model axes")
+
         def score(params, batch):
             def loss_one(p, tokens):
                 losses, _ = per_example_loss(
@@ -174,27 +214,40 @@ def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref") -> Callable:
 
 
 # ----------------------------------------------- memory-scalable ghost_rev
-def _make_ghost_rev_scorer(cfg, ssm_mode: str):
+def _make_ghost_rev_scorer(cfg, ssm_mode: str,
+                           model_axes: tuple[str, ...] = (),
+                           seq_shard: bool = False):
     """Exact ghost scoring via a manual reverse scan over layer periods.
 
     Memory: P boundary activations + ONE period of records/cotangents,
     instead of `ghost`'s records+cotangents for every layer at once —
     the remat structure of training, applied to per-example scoring.
+
+    With ``model_axes`` the per-period contributions follow the same
+    partial/replicated classification as `ghost` (sharded_tap_names) and
+    the accumulated squared norms psum over the model axes at the end.
     """
     import jax.numpy as jnp
+    from repro.core.collectives import axis_info, psum
     from repro.models.layers import Tape, rmsnorm, unembed, embed
-    from repro.models.transformer import _apply_layer, tap_structure
+    from repro.models.transformer import (_apply_layer, sharded_tap_names,
+                                          tap_structure,
+                                          tap_structure_from_params)
 
     specs = cfg.layer_specs()
+    model_axes = tuple(model_axes)
 
     def score(params, batch):
+        _, n_model = axis_info(model_axes)
+        sharded_names = sharded_tap_names(params, cfg) if model_axes \
+            else set()
         tokens = batch["tokens"]
         embeds = batch.get("embeds")
         n_front = embeds.shape[1] if embeds is not None else 0
         inputs, targets = tokens[:, :-1], tokens[:, 1:]
         b, s_text = inputs.shape
 
-        h0 = embed(params["embed"], inputs, cfg)
+        h0 = embed(params["embed"], inputs, cfg, model_axes=model_axes)
         if embeds is not None:
             h0 = jnp.concatenate([embeds.astype(h0.dtype), h0], axis=1)
         s = h0.shape[1]
@@ -204,7 +257,9 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str):
             tape = Tape(taps=ptaps, records={} if collect else None)
             for i, spec in enumerate(specs):
                 h, _ = _apply_layer(pp[f"l{i}"], h, cfg, spec, positions,
-                                    tape, f"l{i}", ssm_mode)
+                                    tape, f"l{i}", ssm_mode,
+                                    model_axes=model_axes,
+                                    seq_shard=seq_shard)
             return h, tape.records
 
         # ---- phase A: forward, storing only period-boundary activations
@@ -217,7 +272,8 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str):
         # ---- head: per-example loss cotangent + unembed ghost term
         def head_losses(h):
             hn = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-            logits = unembed(params["embed"], hn, cfg)[:, n_front:]
+            logits = unembed(params["embed"], hn, cfg,
+                             model_axes=model_axes)[:, n_front:]
             lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
             nll = -jnp.take_along_axis(lp, targets[..., None], -1)[..., 0]
             return jnp.sum(jnp.mean(nll, axis=-1)), (hn, lp)
@@ -225,14 +281,20 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str):
         (_, (hn, lp)), head_vjp = jax.vjp(head_losses, h_final, has_aux=False)
         dh_final, = head_vjp((jnp.ones(()), (jnp.zeros_like(hn),
                                              jnp.zeros_like(lp))))
-        # closed-form dL/dlogits for the unembed ghost contribution
+        # closed-form dL/dlogits for the unembed ghost contribution —
+        # computed from the GATHERED full-vocab logits, so under model
+        # parallelism it is replicated and counted once (÷ n_model)
         p_soft = jnp.exp(lp)
         onehot = jax.nn.one_hot(targets, cfg.vocab_size, dtype=jnp.float32)
         dlogits = (p_soft - onehot) / s_text
-        sq = ops.ghost_norm(hn[:, n_front:], dlogits)
+        sq = ops.ghost_norm(hn[:, n_front:], dlogits) / n_model
 
         # per-period tap template (strip the leading period axis + unembed)
-        full_taps = tap_structure(cfg, b, s_text + n_front)
+        full_taps = (tap_structure_from_params(
+                         params, cfg, b, s_text + n_front,
+                         model_axes=model_axes, ssm_mode=ssm_mode)
+                     if model_axes else
+                     tap_structure(cfg, b, s_text + n_front))
         period_taps = {
             k: jnp.zeros(v.shape[1:], v.dtype)
             for k, v in full_taps.items() if k != "unembed"
@@ -254,13 +316,16 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str):
                 if x.ndim == 2 and x.shape[0] != b:   # token-flattened (T,d)
                     x = x.reshape(b, -1, x.shape[-1])
                     dt = dt.reshape(b, -1, dt.shape[-1])
-                contrib = contrib + _contribution(x, dt, b, False, scanned=False)
+                c = _contribution(x, dt, b, False, scanned=False)
+                if model_axes and name not in sharded_names:
+                    c = c / n_model  # replicated layer: counted once
+                contrib = contrib + c
             return (dh_prev, acc + contrib), None
 
         (_, sq_layers), _ = jax.lax.scan(
             f_b, (dh_final, sq), (params["layers"], boundaries),
             reverse=True)
-        return jnp.sqrt(sq_layers)
+        return jnp.sqrt(psum(sq_layers, model_axes))
 
     return score
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 
 class TraceSigma(NamedTuple):
+    """Tr Σ(q) under the ideal, stale, and uniform proposals (fig. 4)."""
     ideal: jax.Array
     stale: jax.Array
     unif: jax.Array

@@ -25,6 +25,9 @@ from repro.core.importance import ISConfig, apply_staleness_filter, smooth_weigh
 
 
 class WeightStore(NamedTuple):
+    """The paper's database actor: one unnormalized proposal weight (and
+    its staleness timestamp) per training example, example-axis-sharded
+    over the data axes in distributed runs."""
     weights: jax.Array    # f32[N]  raw (unsmoothed) ω̃ — grad-norm estimates
     scored_at: jax.Array  # i32[N]  step of last scoring, -1 if never
 

@@ -1,3 +1,5 @@
+"""Data layer: resident array datasets, the chunked host-side example
+store, and the streaming data plane that bridges the two."""
 from repro.data.pipeline import (ArrayDataset, make_svhn_like,
                                  make_token_dataset, gather_batch,
                                  take_rows)

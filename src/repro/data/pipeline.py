@@ -49,19 +49,24 @@ class ArrayDataset:
 
     @property
     def size(self) -> int:
+        """Number of examples (the common leading-axis length)."""
         return jax.tree.leaves(self.arrays)[0].shape[0]
 
     def batch(self, indices: jax.Array,
               mode: str = "promise_in_bounds") -> dict[str, jax.Array]:
+        """Gather the rows at `indices` from every array (see take_rows)."""
         return gather_batch(self.arrays, indices, mode=mode)
 
     def slice(self, start: int, count: int) -> dict[str, jax.Array]:
+        """Contiguous `count`-row window starting at `start`."""
         return {k: jax.lax.dynamic_slice_in_dim(v, start, count, 0)
                 for k, v in self.arrays.items()}
 
 
 def gather_batch(arrays: dict[str, jax.Array], indices: jax.Array,
                  mode: str = "promise_in_bounds") -> dict:
+    """Row-gather every array of a dataset tree at `indices` (take_rows
+    semantics per leaf; the scoring/master passes build batches with it)."""
     return {k: take_rows(v, indices, mode=mode) for k, v in arrays.items()}
 
 

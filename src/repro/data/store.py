@@ -70,23 +70,29 @@ class ChunkedExampleStore:
 
     @property
     def num_chunks(self) -> int:
+        """Total host chunks (global index space = chunks x chunk_size)."""
         return len(self._chunks)
 
     @property
     def num_examples(self) -> int:
+        """Total examples across all chunks."""
         return self.num_chunks * self.chunk_size
 
     @property
     def keys(self) -> tuple[str, ...]:
+        """The per-example array names (dataset tree keys)."""
         return tuple(self._chunks[0].keys())
 
     def row_shape(self, key: str) -> tuple:
+        """Trailing (per-row) shape of array `key`."""
         return self._chunks[0][key].shape[1:]
 
     def dtype(self, key: str) -> np.dtype:
+        """Dtype of array `key`."""
         return self._chunks[0][key].dtype
 
     def nbytes(self) -> int:
+        """Total host bytes across chunks (capacity accounting)."""
         return sum(v.nbytes for c in self._chunks for v in c.values())
 
     def shard_chunks(self, shard: int, n_shards: int) -> range:
@@ -112,6 +118,7 @@ class ChunkedExampleStore:
 
     def iter_chunks(self, chunks: range | None = None
                     ) -> Iterator[tuple[int, dict[str, np.ndarray]]]:
+        """Yield (chunk_id, chunk tree) over `chunks` (default: all)."""
         for c in (chunks if chunks is not None else range(self.num_chunks)):
             yield c, self._chunks[c]
 

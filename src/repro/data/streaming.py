@@ -209,6 +209,7 @@ class WindowStats(NamedTuple):
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of sampled rows served from the device window."""
         tot = self.hits + self.misses
         return self.hits / tot if tot else 0.0
 
@@ -394,14 +395,17 @@ class StreamingDataPlane:
 
     @property
     def window_ids(self) -> np.ndarray:
+        """Copy of the live window's chunk ids, (n_shards, window_chunks)."""
         return self._window_ids.copy()
 
     @property
     def stats(self) -> WindowStats:
+        """Cumulative hit/miss/stream/swap counters since reset."""
         return WindowStats(self._hits, self._misses, self._streamed,
                            self._swaps, self._prefetches)
 
     def reset_stats(self) -> None:
+        """Zero the counters (benchmarks call this after warmup)."""
         self._hits = self._misses = self._streamed = 0
         self._swaps = self._prefetches = 0
 

@@ -10,6 +10,7 @@ import jax
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
+    """Version-portable shard_map (maps check_rep onto check_vma)."""
     if hasattr(jax, "shard_map"):
         try:
             return jax.shard_map(f, mesh=mesh, in_specs=in_specs,

@@ -34,6 +34,14 @@ run is same-seed equivalent to the dp-only run:
 
   PYTHONPATH=src python -m repro.launch.train --arch mlp_svhn --smoke \
       --mesh 2 --model-parallel 2
+
+Transformer archs run the same shard_map data plane with a model-axis-
+aware forward (head-sharded attention, ffn-sharded MLP/MoE, channel-
+parallel mamba, vocab-parallel embed/unembed) and sequence-parallel
+RMSNorm segments (disable with --no-sequence-parallel):
+
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --mesh 2 --model-parallel 2 --seq 32 --strategy ghost
 """
 from __future__ import annotations
 
@@ -83,7 +91,7 @@ def build_mlp(args, model_axes=()):
     return params, train, pel, scorer, mlp_specs(cfg)
 
 
-def build_lm(args, model_axes=()):
+def build_lm(args, model_axes=(), seq_shard=False):
     from repro.configs import get_config, get_smoke_config
     from repro.models.transformer import (init_transformer, per_example_loss,
                                           transformer_specs)
@@ -91,13 +99,88 @@ def build_lm(args, model_axes=()):
     train = make_token_dataset(jax.random.key(args.seed), n=args.examples,
                                seq=args.seq + 1, vocab=cfg.vocab_size)
     params = init_transformer(jax.random.key(args.seed + 1), cfg)
-    pel = lambda p, b: per_example_loss(p, cfg, b)[0]
-    scorer = make_lm_scorer(cfg, args.strategy)
+    pel = lambda p, b: per_example_loss(p, cfg, b, model_axes=model_axes,
+                                        seq_shard=seq_shard)[0]
+    scorer = make_lm_scorer(cfg, args.strategy, model_axes=model_axes,
+                            seq_shard=seq_shard)
     return params, train, pel, scorer, transformer_specs(cfg)
 
 
+def validate_flags(ap, args, mp: int) -> None:
+    """Fail fast, with the config field to fix, instead of inside shard_map.
+
+    Rules (also in --help):
+      * --model-parallel M with a transformer arch must divide num_heads
+        and num_kv_heads (attention shards whole heads), d_inner for SSM
+        stacks (the scan is channel-parallel), and MLA's num_heads; dims
+        that merely fail elementwise divisibility (d_ff, vocab) fall back
+        to replication with a warning instead.
+      * --async-scoring needs --mode relaxed|uniform (fused/exact have no
+        separate scoring pass to overlap).
+      * --stream excludes --mode exact (the oracle rescores the resident
+        dataset each step).
+      * --strategy full is a single-device test oracle: no --model-parallel.
+    """
+    if args.async_scoring and args.mode not in ("relaxed", "uniform"):
+        ap.error("--async-scoring requires --mode relaxed|uniform (fused "
+                 "scores ride the train forward and exact has no separate "
+                 "pass to overlap)")
+    if args.stream and args.mode == "exact":
+        ap.error("--stream does not support --mode exact (the oracle "
+                 "rescores the full dataset each step; keep it resident)")
+    if mp <= 1:
+        return
+    if args.strategy == "full":
+        ap.error("--strategy full is the vmap-of-grad test oracle and does "
+                 "not support --model-parallel; use ghost or ghost_rev")
+    if args.arch == "mlp_svhn":
+        return  # uneven hidden dims fall back to replication with a warning
+    from repro.configs import get_config, get_smoke_config
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    has_attn = any(s.mixer == "attn" for s in cfg.layer_specs())
+    has_ssm = any(s.mixer == "mamba" for s in cfg.layer_specs())
+    if has_attn and cfg.num_heads % mp:
+        ap.error(f"--model-parallel {mp} does not divide num_heads="
+                 f"{cfg.num_heads} of {cfg.name} (attention shards whole "
+                 f"heads); pick a degree dividing num_heads or change the "
+                 f"config's num_heads")
+    if has_attn and cfg.attention == "gqa" and cfg.num_kv_heads % mp:
+        ap.error(f"--model-parallel {mp} does not divide num_kv_heads="
+                 f"{cfg.num_kv_heads} of {cfg.name} (K/V shard whole "
+                 f"heads); pick a degree dividing num_kv_heads or change "
+                 f"the config's num_kv_heads")
+    if has_ssm and cfg.resolved_d_inner % mp:
+        ap.error(f"--model-parallel {mp} does not divide d_inner="
+                 f"{cfg.resolved_d_inner} of {cfg.name} (the selective "
+                 f"scan is channel-parallel); pick a degree dividing "
+                 f"d_inner (config field d_inner, default 2*d_model)")
+
+
+_FLAG_RULES = """\
+flag composition rules (validated up front; see also README and
+docs/ARCHITECTURE.md):
+  --mesh N            composes with everything; total devices = N * M
+  --model-parallel M  composes with every mode and arch; for transformer
+                      archs M must divide num_heads and num_kv_heads
+                      (whole-head attention shards) and d_inner for SSM
+                      stacks (channel-parallel scan); d_ff / vocab dims
+                      that M does not divide fall back to replication
+                      with a warning naming the parameter
+  --async-scoring     requires --mode relaxed|uniform (fused scores ride
+                      the train forward; exact has no pass to overlap)
+  --stream            composes with --mesh/--model-parallel/--async-scoring
+                      and --mode relaxed|uniform|fused; not --mode exact
+                      (the oracle rescores the resident dataset)
+  --sequence-parallel transformer + --model-parallel only; auto-skips
+                      when M does not divide the sequence length
+  --strategy full     single-device test oracle; not --model-parallel
+"""
+
+
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=_FLAG_RULES,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", default="mlp_svhn")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
@@ -122,7 +205,17 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="tensor-shard params + optimizer state over a "
                     "trailing M-device model axis (composes with --mesh/"
-                    "--async-scoring/--stream; total devices = mesh * M)")
+                    "--async-scoring/--stream and every arch; total "
+                    "devices = mesh * M; transformer archs need M to "
+                    "divide num_heads/num_kv_heads/d_inner — see the "
+                    "rules below)")
+    ap.add_argument("--sequence-parallel", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="transformer + --model-parallel: run the RMSNorm "
+                    "segments sequence-parallel (on by default when M > 1 "
+                    "and M divides the sequence length; "
+                    "--no-sequence-parallel keeps them replicated; both "
+                    "are exact)")
     ap.add_argument("--save-checkpoint", default="",
                     help="save the final TrainState here (sharded runs "
                     "use the gather-free per-shard npz layout)")
@@ -163,18 +256,17 @@ def main():
     mp = max(args.model_parallel, 1)
     dp = max(args.mesh, 1)
     use_mesh = args.mesh > 0 or mp > 1
+    validate_flags(ap, args, mp)
     _force_host_devices(dp * mp if use_mesh else args.mesh)
     model_axes = ("model",) if mp > 1 else ()
+    seq_shard = mp > 1 and (args.sequence_parallel is None
+                            or args.sequence_parallel)
 
-    if mp > 1 and args.arch != "mlp_svhn":
-        ap.error("--model-parallel is wired into the shard_map data plane "
-                 "for the paper-faithful MLP path (--arch mlp_svhn); "
-                 "transformer tensor-parallelism runs under the "
-                 "jit-partitioned dry-run (repro.launch.dryrun)")
     if args.arch == "mlp_svhn":
         params, train, pel, scorer, param_specs = build_mlp(args, model_axes)
     else:
-        params, train, pel, scorer, param_specs = build_lm(args)
+        params, train, pel, scorer, param_specs = build_lm(
+            args, model_axes, seq_shard=seq_shard)
     pspec_kw = (dict(param_specs=param_specs, params_template=params)
                 if mp > 1 else {})
 
@@ -191,7 +283,8 @@ def main():
             from repro.models.transformer import per_example_loss_and_score
             _cfg = (get_smoke_config(args.arch) if args.smoke
                     else get_config(args.arch))
-            fused_score = lambda p, b: per_example_loss_and_score(p, _cfg, b)
+            fused_score = lambda p, b: per_example_loss_and_score(
+                p, _cfg, b, model_axes=model_axes, seq_shard=seq_shard)
 
     opt = sgd(args.lr)
     tcfg = ISSGDConfig(
@@ -207,11 +300,6 @@ def main():
     plane = None
     mesh = None
     if args.stream:
-        if args.mode == "exact":
-            ap.error("--stream does not support --mode exact (the oracle "
-                     "rescores the full dataset each step; keep it resident)")
-        if args.async_scoring and args.mode not in ("relaxed", "uniform"):
-            ap.error("--async-scoring requires --mode relaxed|uniform")
         import numpy as np
         from repro.data.store import ChunkedExampleStore
         from repro.data.streaming import (StreamedISSGD, StreamingDataPlane,
@@ -266,8 +354,6 @@ def main():
               + (f", async swap every {args.swap_every}"
                  if args.async_scoring else ""), flush=True)
     elif args.async_scoring:
-        if args.mode not in ("relaxed", "uniform"):
-            ap.error("--async-scoring requires --mode relaxed|uniform")
         from repro.core.async_pipeline import AsyncPipeline, make_async_steps
         from repro.core.weight_store import to_buffered
         state = state._replace(store=to_buffered(state.store))

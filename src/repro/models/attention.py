@@ -42,6 +42,45 @@ def specs_attn() -> Params:
             "wv": ("embed", "kv"), "wo": ("heads", "embed")}
 
 
+def attn_shard_info(params: Params, cfg: ModelConfig) -> tuple[bool, int, int]:
+    """(sharded, local_heads, local_kv_heads) for a GQA parameter tree.
+
+    Shard-ness is detected from the shapes (the divisibility fallback in
+    `logical_to_pspec` replicates dims that don't divide the model axis,
+    so it is per-parameter, not per-run).  A *partially* sharded layer —
+    wq split but wk/wv replicated, a split that lands mid-head, or a
+    local head count that breaks the GQA grouping — cannot run under
+    shard_map and raises with the config field to fix."""
+    hd = cfg.resolved_head_dim
+    q_cols = params["wq"].shape[-1]
+    k_cols = params["wk"].shape[-1]
+    q_sharded = q_cols != cfg.num_heads * hd
+    k_sharded = k_cols != cfg.num_kv_heads * hd
+    if not q_sharded and not k_sharded:
+        return False, cfg.num_heads, cfg.num_kv_heads
+    if q_sharded != k_sharded:
+        raise ValueError(
+            f"attention is only partially model-sharded (wq cols={q_cols}, "
+            f"wk cols={k_cols}): the model-parallel degree must divide "
+            f"both num_heads ({cfg.num_heads}) and num_kv_heads "
+            f"({cfg.num_kv_heads})")
+    if q_cols % hd or k_cols % hd:
+        raise ValueError(
+            f"model-axis shard splits mid-head (local wq cols={q_cols}, "
+            f"wk cols={k_cols}, head_dim={hd}): the model-parallel degree "
+            f"must divide num_heads ({cfg.num_heads}) and num_kv_heads "
+            f"({cfg.num_kv_heads}), not just their flattened projections")
+    h_l, hkv_l = q_cols // hd, k_cols // hd
+    if h_l % hkv_l or params["wo"].shape[0] != q_cols:
+        raise ValueError(
+            f"model-axis shard breaks the GQA grouping (local heads "
+            f"{h_l}, local kv heads {hkv_l}, wo rows "
+            f"{params['wo'].shape[0]}): num_heads ({cfg.num_heads}) and "
+            f"num_kv_heads ({cfg.num_kv_heads}) must both be divisible by "
+            f"the model-parallel degree")
+    return True, h_l, hkv_l
+
+
 def _causal_window_mask(q_pos, k_pos, window: int):
     """(..., Q, K) boolean mask: causal, optionally sliding-window."""
     m = k_pos[..., None, :] <= q_pos[..., :, None]
@@ -83,21 +122,36 @@ def attn(params: Params, x: jax.Array, cfg: ModelConfig,
          positions: jax.Array, tape: Optional[Tape] = None,
          prefix: str = "attn", q_chunk: int = 512,
          collector: Optional[dict] = None,
-         impl: str = "ref") -> jax.Array:
+         impl: str = "ref",
+         model_axes: tuple[str, ...] = ()) -> jax.Array:
     """Full training/prefill GQA self-attention. x: (B,S,D).
 
     impl="pallas" uses the flash-attention kernel (forward-only — the
     serving-prefill hot path); "ref" is the chunked-jnp path (training,
     autodiff-friendly, lowers on every backend).
-    """
+
+    With ``model_axes`` set and head-sharded weights (inside shard_map),
+    the layer runs Megatron-style: `psum_backward` on the replicated
+    input, QKV on this device's whole-head column shards (attention is
+    head-independent, so the softmax/context math is purely local), and
+    the row-sharded output projection's partial result is `psum_forward`-
+    reduced.  Ghost taps see the LOCAL head slices (wq/wk/wv) and the
+    local-rows/full-dY pair (wo), so per-example contributions are
+    model-axis partial sums.  The collector (prefill KV capture) then
+    holds this device's head slice — the serving engine runs outside the
+    model-sharded shard_map path and never passes both."""
+    from repro.core.collectives import psum_backward, psum_forward
+    model_axes = tuple(model_axes)
     bsz, s, _ = x.shape
     hd = cfg.resolved_head_dim
-    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    sharded, h, hkv = (attn_shard_info(params, cfg) if model_axes
+                       else (False, cfg.num_heads, cfg.num_kv_heads))
     rep = h // hkv
 
-    q = tapped_linear(x, params["wq"], f"{prefix}.wq", tape)
-    k = tapped_linear(x, params["wk"], f"{prefix}.wk", tape)
-    v = tapped_linear(x, params["wv"], f"{prefix}.wv", tape)
+    xi = psum_backward(x, model_axes) if sharded else x
+    q = tapped_linear(xi, params["wq"], f"{prefix}.wq", tape)
+    k = tapped_linear(xi, params["wk"], f"{prefix}.wk", tape)
+    v = tapped_linear(xi, params["wv"], f"{prefix}.wv", tape)
     q = rope(q.reshape(bsz, s, h, hd), positions, cfg.rope_theta)
     k = rope(k.reshape(bsz, s, hkv, hd), positions, cfg.rope_theta)
     v = v.reshape(bsz, s, hkv, hd)
@@ -114,7 +168,8 @@ def attn(params: Params, x: jax.Array, cfg: ModelConfig,
         out = _chunked_attention(qg, k, v, positions, positions,
                                  cfg.sliding_window, q_chunk)
         out = out.reshape(bsz, s, h * hd)
-    return tapped_linear(out, params["wo"], f"{prefix}.wo", tape)
+    y = tapped_linear(out, params["wo"], f"{prefix}.wo", tape)
+    return psum_forward(y, model_axes) if sharded else y
 
 
 def attn_decode(params: Params, x: jax.Array, cfg: ModelConfig,
@@ -174,18 +229,62 @@ def specs_mla(cfg: ModelConfig) -> Params:
     return p
 
 
-def _mla_qkv(params, x, cfg: ModelConfig, positions, tape, prefix):
-    """Shared projections. Returns q_nope,q_rope,k_nope,k_rope,v, latent."""
-    bsz, s, _ = x.shape
+def mla_shard_info(params: Params, cfg: ModelConfig) -> tuple[bool, int]:
+    """(sharded, local_heads) for an MLA parameter tree.
+
+    The latent projections (wq_a / wkv_a) are always replicated (their
+    "rank" axis maps to no mesh axis); the per-head expansions (wq or
+    wq_b, wkv_b) and the output projection wo shard whole heads.  A split
+    that is inconsistent across the three, or lands mid-head, raises with
+    the config field to fix."""
     h = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    o_rows = params["wo"].shape[0]
+    kvb_cols = params["wkv_b"].shape[-1]
+    q_cols = (params["wq_b"] if cfg.q_lora_rank else params["wq"]).shape[-1]
+    if o_rows == h * vdim and kvb_cols == h * (nope + vdim) \
+            and q_cols == h * (nope + rdim):
+        return False, h
+    if o_rows % vdim or kvb_cols % (nope + vdim) or q_cols % (nope + rdim):
+        raise ValueError(
+            f"MLA model-axis shard splits mid-head (wo rows={o_rows}, "
+            f"wkv_b cols={kvb_cols}, wq cols={q_cols}): the model-parallel "
+            f"degree must divide num_heads ({cfg.num_heads})")
+    h_l = o_rows // vdim
+    if kvb_cols != h_l * (nope + vdim) or q_cols != h_l * (nope + rdim):
+        raise ValueError(
+            f"MLA is only partially model-sharded (local heads: wo "
+            f"{o_rows // vdim}, wkv_b {kvb_cols // (nope + vdim)}, wq "
+            f"{q_cols // (nope + rdim)}): the model-parallel degree must "
+            f"divide num_heads ({cfg.num_heads}) for every per-head "
+            f"projection")
+    return True, h_l
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions, tape, prefix,
+             model_axes: tuple[str, ...] = (), h: Optional[int] = None):
+    """Shared projections. Returns q_nope,q_rope,k_nope,k_rope,v, latent.
+
+    `h` is the (possibly local) head count; with ``model_axes`` set the
+    replicated latent/query inputs of the head-sharded expansions are
+    wrapped in `psum_backward` so their input gradients stay exact."""
+    from repro.core.collectives import psum_backward
+    model_axes = tuple(model_axes)
+    bsz, s, _ = x.shape
+    if h is None:
+        h = cfg.num_heads
+    sharded = bool(model_axes) and h != cfg.num_heads
     nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
 
     if cfg.q_lora_rank:
         qa = tapped_linear(x, params["wq_a"], f"{prefix}.wq_a", tape)
         qa = rmsnorm(params["q_norm"], qa, cfg.norm_eps)
+        if sharded:
+            qa = psum_backward(qa, model_axes)
         q = tapped_linear(qa, params["wq_b"], f"{prefix}.wq_b", tape)
     else:
-        q = tapped_linear(x, params["wq"], f"{prefix}.wq", tape)
+        xq = psum_backward(x, model_axes) if sharded else x
+        q = tapped_linear(xq, params["wq"], f"{prefix}.wq", tape)
     q = q.reshape(bsz, s, h, nope + rdim)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
@@ -194,8 +293,13 @@ def _mla_qkv(params, x, cfg: ModelConfig, positions, tape, prefix):
     latent, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
     latent = rmsnorm(params["kv_norm"], latent, cfg.norm_eps)
     k_rope = rope(k_rope[..., None, :], positions, cfg.rope_theta)  # (B,S,1,r)
+    if sharded:
+        # the rope key is shared by every head, so under head sharding
+        # each device's cotangent for it is only its local heads' partial
+        k_rope = psum_backward(k_rope, model_axes)
 
-    kv = tapped_linear(latent, params["wkv_b"], f"{prefix}.wkv_b", tape)
+    lat_in = psum_backward(latent, model_axes) if sharded else latent
+    kv = tapped_linear(lat_in, params["wkv_b"], f"{prefix}.wkv_b", tape)
     kv = kv.reshape(bsz, s, h, nope + vdim)
     k_nope, v = kv[..., :nope], kv[..., nope:]
     return q_nope, q_rope, k_nope, k_rope, v, latent
@@ -204,12 +308,21 @@ def _mla_qkv(params, x, cfg: ModelConfig, positions, tape, prefix):
 def mla(params: Params, x: jax.Array, cfg: ModelConfig,
         positions: jax.Array, tape: Optional[Tape] = None,
         prefix: str = "attn", q_chunk: int = 512,
-        collector: Optional[dict] = None) -> jax.Array:
-    """Materialized MLA for train/prefill. x: (B,S,D)."""
+        collector: Optional[dict] = None,
+        model_axes: tuple[str, ...] = ()) -> jax.Array:
+    """Materialized MLA for train/prefill. x: (B,S,D).
+
+    With ``model_axes`` and head-sharded expansions, the per-head math is
+    local (the shared latent is replicated) and the row-sharded wo's
+    partial output is `psum_forward`-reduced — same contract as `attn`."""
+    from repro.core.collectives import psum_forward
+    model_axes = tuple(model_axes)
     bsz, s, _ = x.shape
-    h = cfg.num_heads
+    sharded, h = (mla_shard_info(params, cfg) if model_axes
+                  else (False, cfg.num_heads))
     q_nope, q_rope, k_nope, k_rope, v, latent = _mla_qkv(
-        params, x, cfg, positions, tape, prefix)
+        params, x, cfg, positions, tape, prefix,
+        model_axes=model_axes if sharded else (), h=h)
     if collector is not None:  # prefill: the *compressed* MLA cache
         collector[f"{prefix}.latent"] = latent
         collector[f"{prefix}.rope"] = k_rope[:, :, 0, :]
@@ -242,7 +355,8 @@ def mla(params: Params, x: jax.Array, cfg: ModelConfig,
                                    qp.reshape(bsz, nc, q_chunk).transpose(1, 0, 2)))
     out = outs.transpose(1, 0, 2, 3, 4).reshape(bsz, s + pad, h, cfg.v_head_dim)[:, :s]
     out = out.reshape(bsz, s, h * cfg.v_head_dim)
-    return tapped_linear(out, params["wo"], f"{prefix}.wo", tape)
+    y = tapped_linear(out, params["wo"], f"{prefix}.wo", tape)
+    return psum_forward(y, model_axes) if sharded else y
 
 
 def mla_decode(params: Params, x: jax.Array, cfg: ModelConfig,

@@ -114,12 +114,27 @@ def specs_mlp() -> Params:
 
 
 def mlp(params: Params, x: jax.Array, cfg: ModelConfig,
-        tape: Optional[Tape] = None, prefix: str = "mlp") -> jax.Array:
+        tape: Optional[Tape] = None, prefix: str = "mlp",
+        model_axes: tuple[str, ...] = ()) -> jax.Array:
+    """SwiGLU feed-forward.  With ``model_axes`` set (inside shard_map on
+    a mesh with a model axis) and the weights arriving as model shards,
+    this runs the Megatron column/row pair: `psum_backward` on the
+    replicated input, w_in/w_gate on local ffn columns, w_out on the
+    matching local ffn rows, and `psum_forward` reduces the partial
+    output.  Ghost taps land on the LOCAL slices, so the scorer's
+    per-example contributions are model-axis partial sums (see
+    core/scorer.py).  Sharded-ness is detected from the shapes so the
+    divisibility fallback (replicated weights) keeps the plain path."""
+    from repro.core.collectives import psum_backward, psum_forward
+    model_axes = tuple(model_axes)
+    sharded = bool(model_axes) and params["w_in"].shape[-1] != cfg.d_ff
     act = activation(cfg.act)
-    h_in = tapped_linear(x, params["w_in"], f"{prefix}.w_in", tape)
-    h_gate = tapped_linear(x, params["w_gate"], f"{prefix}.w_gate", tape)
+    xi = psum_backward(x, model_axes) if sharded else x
+    h_in = tapped_linear(xi, params["w_in"], f"{prefix}.w_in", tape)
+    h_gate = tapped_linear(xi, params["w_gate"], f"{prefix}.w_gate", tape)
     h = act(h_gate) * h_in
-    return tapped_linear(h, params["w_out"], f"{prefix}.w_out", tape)
+    y = tapped_linear(h, params["w_out"], f"{prefix}.w_out", tape)
+    return psum_forward(y, model_axes) if sharded else y
 
 
 # --------------------------------------------------------------- embeddings
@@ -140,18 +155,62 @@ def specs_embed(cfg: ModelConfig) -> Params:
     return p
 
 
-def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
-    return params["tokens"][tokens]
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig,
+          model_axes: tuple[str, ...] = ()) -> jax.Array:
+    """Token embedding lookup.  When the table arrives vocab-sharded over
+    ``model_axes`` (row shard of the (V, D) table), each device looks up
+    the ids it owns (clipped + masked to exact zeros elsewhere) and the
+    one-owner partials are `psum_forward`-reduced into the replicated
+    embedding — the backward hands every device the replicated cotangent,
+    which the mask routes onto its own table rows only."""
+    table = params["tokens"]
+    model_axes = tuple(model_axes)
+    if model_axes and table.shape[0] != cfg.vocab_size:
+        from repro.core.collectives import axis_info, psum_forward
+        dev, _ = axis_info(model_axes)
+        v_local = table.shape[0]
+        lidx = tokens - dev * v_local
+        mine = (lidx >= 0) & (lidx < v_local)
+        rows = jnp.take(table, jnp.clip(lidx, 0, v_local - 1), axis=0)
+        rows = jnp.where(mine[..., None], rows, jnp.zeros_like(rows))
+        return psum_forward(rows, model_axes)
+    return table[tokens]
 
 
 def unembed(params: Params, h: jax.Array, cfg: ModelConfig,
-            tape: Optional[Tape] = None) -> jax.Array:
+            tape: Optional[Tape] = None,
+            model_axes: tuple[str, ...] = ()) -> jax.Array:
+    """Project hidden states to vocab logits (tied or untied head).
+
+    With ``model_axes`` and a vocab-sharded table/head, the projection is
+    column-parallel: `psum_backward` on the replicated input, a local
+    matmul producing this device's vocab slice, and
+    `all_gather_replicated` over the vocab dim so the softmax downstream
+    sees full logits.  The ghost tap is added to the *gathered* logits
+    (full-vocab dY), so its contribution is the full-table term computed
+    redundantly on every model device — the scorer counts it once."""
+    from repro.core.collectives import all_gather_replicated, psum_backward
+    model_axes = tuple(model_axes)
     if cfg.tie_embeddings:
-        logits = jnp.einsum("...d,vd->...v", h, params["tokens"])
+        table = params["tokens"]
+        if model_axes and table.shape[0] != cfg.vocab_size:
+            hb = psum_backward(h, model_axes)
+            logits = jnp.einsum("...d,vd->...v", hb, table)
+            logits = all_gather_replicated(logits, model_axes, axis=-1)
+        else:
+            logits = jnp.einsum("...d,vd->...v", h, table)
         if tape is not None:
             logits = tape.linear("unembed", h, logits)
     else:
-        logits = tapped_linear(h, params["unembed"], "unembed", tape)
+        w = params["unembed"]
+        if model_axes and w.shape[-1] != cfg.vocab_size:
+            hb = psum_backward(h, model_axes)
+            logits = jnp.einsum("...i,io->...o", hb, w)
+            logits = all_gather_replicated(logits, model_axes, axis=-1)
+            if tape is not None:
+                logits = tape.linear("unembed", h, logits)
+        else:
+            logits = tapped_linear(h, w, "unembed", tape)
     if cfg.logits_softcap > 0:
         c = cfg.logits_softcap
         logits = jnp.tanh(logits / c) * c

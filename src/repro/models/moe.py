@@ -51,13 +51,25 @@ def specs_moe() -> Params:
 
 def moe(params: Params, x: jax.Array, cfg: ModelConfig,
         tape: Optional[Tape] = None, prefix: str = "moe",
-        dropless: bool = False) -> MoEOut:
+        dropless: bool = False,
+        model_axes: tuple[str, ...] = ()) -> MoEOut:
     """x: (B,S,D) → MoEOut with y: (B,S,D).
 
     dropless=True sets capacity = all token replicas (exact, used at decode
     where T is tiny); training uses the capacity factor (tokens past
     capacity are dropped, standard for capacity-based MoE).
-    """
+
+    With ``model_axes`` set and ffn-sharded expert weights (inside
+    shard_map), the router — and therefore the gates, the aux loss, and
+    the sort-based dispatch — stays fully replicated, so every model
+    device routes identically; each expert's SwiGLU then runs the
+    Megatron column/row pair on its local ffn slice (`psum_backward` on
+    the dispatched buffer, `psum_forward` on the router-weighted partial
+    outputs *before* the gate multiply, which keeps the router's
+    cotangent — hence its gradient — replicated)."""
+    from repro.core.collectives import psum_backward, psum_forward
+    model_axes = tuple(model_axes)
+    sharded = bool(model_axes) and params["w_in"].shape[-1] != cfg.d_ff
     bsz, s, d = x.shape
     t = bsz * s
     e, k = cfg.num_experts, cfg.num_experts_per_tok
@@ -94,6 +106,8 @@ def moe(params: Params, x: jax.Array, cfg: ModelConfig,
     buf = jnp.zeros((e * cap, d), x.dtype)
     buf = buf.at[dst].set(xf[token_of[order]], mode="drop")
     buf = buf.reshape(e, cap, d)
+    if sharded:
+        buf = psum_backward(buf, model_axes)
 
     h_in = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
     h_gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
@@ -103,6 +117,8 @@ def moe(params: Params, x: jax.Array, cfg: ModelConfig,
                         mode="fill", fill_value=0)             # (Tk, d)
     inv = jnp.argsort(order)
     y_flat = y_sorted[inv].reshape(t, k, d)
+    if sharded:
+        y_flat = psum_forward(y_flat, model_axes)
     y = jnp.sum(y_flat * gates[..., None].astype(x.dtype), axis=1)
 
     dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))

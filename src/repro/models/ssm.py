@@ -45,8 +45,13 @@ def init_mamba(key, cfg: ModelConfig) -> Params:
 
 
 def specs_mamba() -> Params:
+    # in_proj projects to the CONCATENATED [x | z] pair (d, 2*d_inner): a
+    # contiguous column shard of it does not align with the per-channel
+    # split (device 0 of a 2-way mesh would hold all of W_x and none of
+    # W_z), so it stays replicated; the channel-parallel entry point is
+    # the slice of its output instead (see `mamba`).
     return {
-        "in_proj": ("embed", "inner"),
+        "in_proj": ("embed", None),
         "conv_w": (None, "inner"),
         "conv_b": ("inner",),
         "x_proj": ("inner", None),
@@ -67,17 +72,70 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     return y + b[None, None]
 
 
+def mamba_shard_info(params: Params, cfg: ModelConfig) -> tuple[bool, int]:
+    """(sharded, local_d_inner) for a mamba parameter tree.
+
+    All channel-indexed parameters (conv, dt, A, D, the x_proj rows and
+    out_proj rows) shard the same d_inner dimension, so the divisibility
+    fallback hits them all or none; in_proj must stay replicated (see
+    `specs_mamba`).  An inconsistent mix raises naming `d_inner`."""
+    di = cfg.resolved_d_inner
+    di_l = params["a_log"].shape[0]
+    if di_l == di and params["out_proj"].shape[0] == di:
+        return False, di
+    consistent = (params["out_proj"].shape[0] == di_l
+                  and params["x_proj"].shape[0] == di_l
+                  and params["conv_w"].shape[1] == di_l
+                  and params["dt_proj"].shape[1] == di_l
+                  and params["in_proj"].shape[-1] == 2 * di)
+    if not consistent or di % di_l:
+        raise ValueError(
+            f"mamba is inconsistently model-sharded (a_log rows={di_l}, "
+            f"out_proj rows={params['out_proj'].shape[0]}, d_inner={di}): "
+            f"the model-parallel degree must divide d_inner "
+            f"({di}; config field d_inner, default 2*d_model)")
+    return True, di_l
+
+
 def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
           tape: Optional[Tape] = None, prefix: str = "mamba",
-          mode: str = "ref", collector: Optional[dict] = None) -> jax.Array:
-    """Full-sequence mamba mixer. x: (B,S,D) → (B,S,D)."""
+          mode: str = "ref", collector: Optional[dict] = None,
+          model_axes: tuple[str, ...] = ()) -> jax.Array:
+    """Full-sequence mamba mixer. x: (B,S,D) → (B,S,D).
+
+    With ``model_axes`` set and channel-sharded weights (inside
+    shard_map), the selective scan is embarrassingly parallel over
+    channels: the replicated [x|z] projection is sliced to this device's
+    channel block (its `psum_backward` wrap restores the replicated
+    cotangent), conv/Δ/A/D and the recurrence run on local channels, the
+    row-sharded x_proj and out_proj produce partial outputs that
+    `psum_forward` reduces.  The prefill collector then holds local
+    channel slices — serving runs outside the model-sharded path."""
+    from repro.core.collectives import (axis_info, psum_backward,
+                                        psum_forward)
+    model_axes = tuple(model_axes)
     di, ds, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    sharded, di_l = (mamba_shard_info(params, cfg) if model_axes
+                     else (False, di))
 
     xz = tapped_linear(x, params["in_proj"], f"{prefix}.in_proj", tape)
+    if sharded:
+        xz = psum_backward(xz, model_axes)
     x_in, z = jnp.split(xz, 2, axis=-1)
+    if sharded:
+        dev, _ = axis_info(model_axes)
+        x_in = jax.lax.dynamic_slice_in_dim(x_in, dev * di_l, di_l, -1)
+        z = jax.lax.dynamic_slice_in_dim(z, dev * di_l, di_l, -1)
     x_c = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
 
     proj = tapped_linear(x_c, params["x_proj"], f"{prefix}.x_proj", tape)
+    if sharded:
+        # psum_forward reduces the row-parallel partials into the full
+        # (Δ-rank, B, C) projection; unlike the residual outputs its
+        # consumers are NOT replicated — each device feeds it back into
+        # its own channel block — so the partial cotangents must be
+        # psum'd too (psum_backward) before they reach x_proj/x_c.
+        proj = psum_backward(psum_forward(proj, model_axes), model_axes)
     dt_r = proj[..., :dtr]
     b_mat = proj[..., dtr:dtr + ds]
     c_mat = proj[..., dtr + ds:]
@@ -101,7 +159,8 @@ def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
                                    unroll=cfg.ssm_scan_unroll)
 
     y = y * jax.nn.silu(z)
-    return tapped_linear(y, params["out_proj"], f"{prefix}.out_proj", tape)
+    out = tapped_linear(y, params["out_proj"], f"{prefix}.out_proj", tape)
+    return psum_forward(out, model_axes) if sharded else out
 
 
 def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:

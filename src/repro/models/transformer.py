@@ -6,6 +6,13 @@ mamba/attention interleave, MoE-every-other-layer) still compile to one
 rolled lax.scan.  Ghost taps enter as scan xs (stacked over periods) and
 activation records leave as scan ys, which is what lets the scorer compute
 exact per-example gradient norms through the scanned stack.
+
+With ``model_axes`` the whole stack runs tensor-parallel inside shard_map
+(head-sharded attention, ffn-sharded MLP/MoE, channel-sharded mamba,
+vocab-parallel embed/unembed), each sub-layer detecting its own
+shardedness from the local parameter shapes; ``seq_shard=True`` makes the
+RMSNorm segments sequence-parallel (Megatron-SP style) so no gathered
+full-sequence activation exists in those segments.
 """
 from __future__ import annotations
 
@@ -91,34 +98,74 @@ def transformer_specs(cfg: ModelConfig) -> Params:
 
 
 # ---------------------------------------------------------------- forward
+def _sp_active(h: jax.Array, model_axes: tuple[str, ...],
+               seq_shard: bool) -> bool:
+    """Whether the sequence-parallel norm segment applies: requested, a
+    real model axis, and a sequence length the axis divides (static)."""
+    if not (seq_shard and model_axes):
+        return False
+    from repro.core.collectives import axis_info
+    _, n_model = axis_info(tuple(model_axes))
+    return h.shape[1] % n_model == 0
+
+
+def _norm_segment(ln: Params, h: jax.Array, cfg: ModelConfig,
+                  model_axes: tuple[str, ...], seq_shard: bool) -> jax.Array:
+    """RMSNorm, optionally as a sequence-parallel segment.
+
+    With sequence parallelism active the replicated residual is
+    `scatter_seq`-sliced so each model device normalizes 1/M of the
+    positions (the Megatron-SP LayerNorm segment: the only full-sequence
+    activation here is the residual itself, never a gathered intermediate),
+    then `all_gather_replicated` over the sequence dim rebuilds the exact
+    replicated input for the sharded mixer/FFN.  The norm scale is wrapped
+    in `psum_backward` so its per-slice partial gradients reduce to the
+    replicated exact gradient — keeping every parameter gradient
+    replicated over the model axes, which the master pass relies on."""
+    from repro.core.collectives import (all_gather_replicated, psum_backward,
+                                        scatter_seq)
+    if not _sp_active(h, model_axes, seq_shard):
+        return rmsnorm(ln, h, cfg.norm_eps)
+    axes = tuple(model_axes)
+    hs = scatter_seq(h, axes, axis=1)
+    sc = {"scale": psum_backward(ln["scale"], axes)}
+    return all_gather_replicated(rmsnorm(sc, hs, cfg.norm_eps), axes, axis=1)
+
+
 def _apply_layer(lp: Params, h: jax.Array, cfg: ModelConfig, spec,
                  positions: jax.Array, tape: Optional[Tape], prefix: str,
                  ssm_mode: str,
                  collector: Optional[dict] = None,
-                 attn_impl: str = "ref") -> tuple[jax.Array, jax.Array]:
+                 attn_impl: str = "ref",
+                 model_axes: tuple[str, ...] = (),
+                 seq_shard: bool = False) -> tuple[jax.Array, jax.Array]:
     aux = jnp.zeros((), jnp.float32)
-    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    hn = _norm_segment(lp["ln1"], h, cfg, model_axes, seq_shard)
     if spec.mixer == "attn":
         if cfg.attention == "mla":
             mix = attn_mod.mla(lp["mixer"], hn, cfg, positions, tape,
-                               prefix=f"{prefix}.attn", collector=collector)
+                               prefix=f"{prefix}.attn", collector=collector,
+                               model_axes=model_axes)
         else:
             mix = attn_mod.attn(lp["mixer"], hn, cfg, positions, tape,
                                 prefix=f"{prefix}.attn", collector=collector,
-                                impl=attn_impl, q_chunk=cfg.attn_chunk)
+                                impl=attn_impl, q_chunk=cfg.attn_chunk,
+                                model_axes=model_axes)
     else:
         mix = ssm_mod.mamba(lp["mixer"], hn, cfg, tape,
                             prefix=f"{prefix}.mamba", mode=ssm_mode,
-                            collector=collector)
+                            collector=collector, model_axes=model_axes)
     h = h + mix
     if cfg.d_ff == 0:
         return h, aux
-    hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    hn = _norm_segment(lp["ln2"], h, cfg, model_axes, seq_shard)
     if spec.ff == "moe":
-        out = moe_mod.moe(lp["ff"], hn, cfg, tape, prefix=f"{prefix}.moe")
+        out = moe_mod.moe(lp["ff"], hn, cfg, tape, prefix=f"{prefix}.moe",
+                          model_axes=model_axes)
         ff_y, aux = out.y, out.aux_loss
     else:
-        ff_y = mlp(lp["ff"], hn, cfg, tape, prefix=f"{prefix}.mlp")
+        ff_y = mlp(lp["ff"], hn, cfg, tape, prefix=f"{prefix}.mlp",
+                   model_axes=model_axes)
     return h + ff_y, aux
 
 
@@ -135,16 +182,27 @@ def forward(
     ssm_mode: str = "ref",
     attn_impl: str = "ref",                 # "pallas" = flash kernel (fwd-only)
     return_hidden: bool = False,            # skip unembed, return final h
+    model_axes: tuple[str, ...] = (),       # mesh axes the params are
+    # tensor-sharded over when running inside shard_map; () = replicated
+    seq_shard: bool = False,                # sequence-parallel norm segments
 ) -> tuple[jax.Array, Aux]:
     """Returns logits (B, S_total, vocab) and Aux.
 
     collect_cache=True additionally returns, in Aux.cache, the per-layer
     decode caches (roped K/V, MLA latents, mamba states) stacked over
     periods — the prefill path of the serving engine.
+
+    With ``model_axes`` set the stack is model-axis-aware end to end
+    (vocab-parallel embed/unembed, head-sharded attention, ffn-sharded
+    MLP/MoE experts, channel-sharded mamba — each detecting its own
+    shardedness from the local shapes); ``seq_shard=True`` additionally
+    runs the RMSNorm segments sequence-parallel.  Both are exact: outputs
+    match the replicated run up to psum reassociation.
     """
     from repro.dist.context import constrain_batch_dim as _cbd
+    model_axes = tuple(model_axes)
     specs = cfg.layer_specs()
-    h = embed(params["embed"], tokens, cfg)
+    h = embed(params["embed"], tokens, cfg, model_axes=model_axes)
     if embeds is not None:
         h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
     h = _cbd(h)
@@ -169,7 +227,8 @@ def forward(
         for i, spec in enumerate(specs):
             h, aux = _apply_layer(pp[f"l{i}"], h, cfg, spec, positions,
                                   tape, f"l{i}", ssm_mode, collector=cache,
-                                  attn_impl=attn_impl)
+                                  attn_impl=attn_impl, model_axes=model_axes,
+                                  seq_shard=seq_shard)
             aux_acc = aux_acc + aux
         ys = (tape.records if collect else 0,
               cache if collect_cache else 0)
@@ -200,7 +259,8 @@ def forward(
                       cache=cache if collect_cache else None)
     head_tape = Tape(taps={"unembed": head_tap} if head_tap is not None else None,
                      records={} if collect else None)
-    logits = unembed(params["embed"], h, cfg, tape=head_tape)
+    logits = unembed(params["embed"], h, cfg, tape=head_tape,
+                     model_axes=model_axes)
     if collect:
         records = dict(records)
         records.update(head_tape.records)
@@ -240,10 +300,90 @@ def tap_structure(cfg: ModelConfig, batch: int, seq: int) -> dict:
     return out
 
 
+def tap_structure_from_params(params: Params, cfg: ModelConfig, batch: int,
+                              seq: int, model_axes: tuple[str, ...] = (),
+                              ssm_mode: str = "ref") -> dict:
+    """Tap ShapeDtypeStructs derived from the CONCRETE parameter tree.
+
+    `tap_structure` assumes full (replicated) parameter shapes; inside a
+    model-parallel shard_map the column-sharded layers' taps carry only
+    this device's dY slice, so the shapes must come from the local params.
+    One abstract trace of the period body (with ``model_axes`` threaded,
+    the same per-layer shard detection the real forward runs) yields every
+    tap shape; the unembed tap is the gathered full-vocab logits."""
+    specs = cfg.layer_specs()
+    layers0 = jax.tree.map(lambda a: a[0], params["layers"])
+    tap_shapes: dict = {}
+    h = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    positions = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+    def run(h, positions):
+        tape = Tape(tap_shapes=tap_shapes)
+        hh = h
+        for i, spec in enumerate(specs):
+            hh, _ = _apply_layer(layers0[f"l{i}"], hh, cfg, spec, positions,
+                                 tape, f"l{i}", ssm_mode,
+                                 model_axes=model_axes)
+        return hh
+
+    jax.eval_shape(run, h, positions)
+    out = {
+        name: jax.ShapeDtypeStruct((cfg.num_periods,) + sds.shape, sds.dtype)
+        for name, sds in tap_shapes.items()
+    }
+    out["unembed"] = jax.ShapeDtypeStruct((batch, seq, cfg.vocab_size),
+                                          jnp.float32)
+    return out
+
+
+def sharded_tap_names(params: Params, cfg: ModelConfig) -> set:
+    """Tap names whose ghost contributions are model-axis PARTIAL sums.
+
+    Column-sharded layers tap this device's dY slice, row-sharded layers
+    record this device's input slice — either way the per-example squared
+    norm computed locally is a partial term the scorer psums over the
+    model axes.  Replicated layers (the router, the latent projections,
+    in_proj, and the unembed term — computed redundantly from full
+    operands on every model device) are NOT in the set; the scorer counts
+    those once by pre-dividing by the axis size.  Detection mirrors the
+    forward's own shape-based shard checks, so divisibility fallbacks
+    classify correctly per layer."""
+    from repro.models import attention as attn_mod
+    from repro.models import ssm as ssm_mod
+    specs = cfg.layer_specs()
+    layers0 = jax.tree.map(lambda a: a[0], params["layers"])
+    names: set = set()
+    for i, spec in enumerate(specs):
+        lp = layers0[f"l{i}"]
+        if spec.mixer == "attn":
+            if cfg.attention == "mla":
+                sharded, _ = attn_mod.mla_shard_info(lp["mixer"], cfg)
+                if sharded:
+                    names |= {f"l{i}.attn.wkv_b", f"l{i}.attn.wo",
+                              (f"l{i}.attn.wq_b" if cfg.q_lora_rank
+                               else f"l{i}.attn.wq")}
+            else:
+                sharded, _, _ = attn_mod.attn_shard_info(lp["mixer"], cfg)
+                if sharded:
+                    names |= {f"l{i}.attn.wq", f"l{i}.attn.wk",
+                              f"l{i}.attn.wv", f"l{i}.attn.wo"}
+        else:
+            sharded, _ = ssm_mod.mamba_shard_info(lp["mixer"], cfg)
+            if sharded:
+                names |= {f"l{i}.mamba.x_proj", f"l{i}.mamba.out_proj"}
+        if cfg.d_ff > 0 and spec.ff == "mlp" \
+                and lp["ff"]["w_in"].shape[-1] != cfg.d_ff:
+            names |= {f"l{i}.mlp.w_in", f"l{i}.mlp.w_gate",
+                      f"l{i}.mlp.w_out"}
+        # MoE: only the (replicated) router is tapped — never partial
+    return names
+
+
 # ------------------------------------------------------------------- loss
 def lm_head_metrics(params, cfg: ModelConfig, h: jax.Array,
                     targets: jax.Array,
-                    mask: Optional[jax.Array] = None):
+                    mask: Optional[jax.Array] = None,
+                    model_axes: tuple[str, ...] = ()):
     """Chunked unembed + CE: per-example (mean_nll, logit_grad_norm).
 
     Never materializes the full (B,S,V) logits — each sequence chunk is
@@ -273,7 +413,8 @@ def lm_head_metrics(params, cfg: ModelConfig, h: jax.Array,
     @jax.checkpoint
     def one(args):
         h_c, t_c, m_c = args
-        logits = unembed(params["embed"], h_c, cfg).astype(jnp.float32)
+        logits = unembed(params["embed"], h_c, cfg,
+                         model_axes=model_axes).astype(jnp.float32)
         lp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(lp, t_c[..., None], -1)[..., 0]
         p = jnp.exp(lp)
@@ -296,11 +437,14 @@ def per_example_loss(
     taps: Optional[dict] = None,
     collect: bool = False,
     ssm_mode: str = "ref",
+    model_axes: tuple[str, ...] = (),
+    seq_shard: bool = False,
 ) -> tuple[jax.Array, Aux]:
     """Mean next-token CE per example. batch: {tokens (B,S), [embeds]}.
 
     Frontend embeds (if any) are prepended; loss is computed on the token
-    region only.
+    region only.  ``model_axes``/``seq_shard`` thread through `forward`
+    for model-parallel execution inside shard_map.
     """
     tokens = batch["tokens"]
     embeds = batch.get("embeds")
@@ -309,15 +453,18 @@ def per_example_loss(
     if cfg.loss_chunk > 0 and taps is None:
         h, aux = forward(params, cfg, tokens[:, :-1], embeds=embeds,
                          collect=collect, ssm_mode=ssm_mode,
-                         return_hidden=True)
+                         return_hidden=True, model_axes=model_axes,
+                         seq_shard=seq_shard)
         h = h[:, n_front:]
         mask = batch.get("mask")
         mean_nll, _ = lm_head_metrics(params, cfg, h, targets,
                                       None if mask is None else
-                                      mask[:, 1:].astype(jnp.float32))
+                                      mask[:, 1:].astype(jnp.float32),
+                                      model_axes=model_axes)
         return mean_nll, aux
     logits, aux = forward(params, cfg, tokens[:, :-1], embeds=embeds,
-                          taps=taps, collect=collect, ssm_mode=ssm_mode)
+                          taps=taps, collect=collect, ssm_mode=ssm_mode,
+                          model_axes=model_axes, seq_shard=seq_shard)
     logits = logits[:, n_front:]
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
@@ -335,18 +482,24 @@ def per_example_loss_and_score(
     cfg: ModelConfig,
     batch: dict,
     ssm_mode: str = "ref",
+    model_axes: tuple[str, ...] = (),
+    seq_shard: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused-mode objective: (losses (B,), logit-grad scores (B,)) from a
     SINGLE forward pass — the scores the paper's workers compute in a
     separate pass come for free from the head computation (see
-    core/issgd.py mode='fused')."""
+    core/issgd.py mode='fused').  The score is closed-form from the
+    gathered (replicated) logits, so under ``model_axes`` it needs no
+    extra reduction — it is exact and replicated as-is."""
     tokens = batch["tokens"]
     embeds = batch.get("embeds")
     n_front = embeds.shape[1] if embeds is not None else 0
     h, _ = forward(params, cfg, tokens[:, :-1], embeds=embeds,
-                   ssm_mode=ssm_mode, return_hidden=True)
+                   ssm_mode=ssm_mode, return_hidden=True,
+                   model_axes=model_axes, seq_shard=seq_shard)
     mask = batch.get("mask")
     mean_nll, grad_norm = lm_head_metrics(
         params, cfg, h[:, n_front:], tokens[:, 1:],
-        None if mask is None else mask[:, 1:].astype(jnp.float32))
+        None if mask is None else mask[:, 1:].astype(jnp.float32),
+        model_axes=model_axes)
     return mean_nll, grad_norm

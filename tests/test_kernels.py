@@ -159,6 +159,108 @@ def test_ghost_norm_model_sharded_operands():
     assert "ghost sharded parity ok" in out
 
 
+def test_ghost_norm_transformer_tap_operands_model_sharded():
+    """Transformer scoring-kernel parity: REAL attention-tap operands —
+    the recorded layer input and the vjp cotangent dY of a GQA wq tap —
+    with dY column-sharded over `model` the way the head-sharded forward
+    taps it.  The psum over `model` of the per-shard ghost_norm kernels
+    equals kernels/ref.py on the full operands (and, transposed, the
+    row-sharded wo pairing: local input rows, full dY)."""
+    out = run_mesh_py("""
+        import jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import shard_map
+        from repro.kernels import ref
+        from repro.kernels.ghost_norm import ghost_norm
+        from repro.models.config import ModelConfig
+        from repro.models.attention import attn, init_attn
+        from repro.models.layers import Tape
+
+        cfg = ModelConfig(name='t', arch_type='t', num_heads=4,
+                          num_kv_heads=2, d_model=32, d_ff=64,
+                          dtype='float32')
+        params = init_attn(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (3, 12, 32))
+        pos = jnp.broadcast_to(jnp.arange(12)[None], (3, 12))
+        tgt = jax.random.normal(jax.random.key(2), (3, 12, 32))
+
+        # tap cotangents dY for wq/wo via the tap trick on the real layer
+        shapes = {}
+        jax.eval_shape(lambda x: attn(params, x, cfg, pos,
+                                      Tape(tap_shapes=shapes)), x)
+        taps0 = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+
+        def f(taps):
+            tape = Tape(taps=taps, records={})
+            y = attn(params, x, cfg, pos, tape)
+            return jnp.sum((y - tgt) ** 2), tape.records
+
+        _, pull, records = jax.vjp(f, taps0, has_aux=True)
+        (dtaps,) = pull(jnp.ones(()))
+
+        for name, spec in [('attn.wq', P(None, None, 'model')),
+                           ('attn.wo', None)]:
+            rec, dy = records[name], dtaps[name]
+            want = ref.ghost_norm_ref(rec, dy)
+            if spec is not None:     # column-parallel: dY sharded
+                op, op_spec = dy, spec
+                def body(x_full, op_l, _rec=rec):
+                    part = ghost_norm(_rec, op_l, block_s=4, block_k=8,
+                                      interpret=True)
+                    return jax.lax.psum(part, 'model')
+            else:                    # row-parallel: the INPUT is sharded
+                op, op_spec = rec, P(None, None, 'model')
+                def body(x_full, op_l, _dy=dy):
+                    part = ghost_norm(op_l, _dy, block_s=4, block_k=8,
+                                      interpret=True)
+                    return jax.lax.psum(part, 'model')
+            g = jax.jit(shard_map(body, mesh=mesh,
+                                  in_specs=(P(), op_spec), out_specs=P()))
+            got = g(x, jax.device_put(op, NamedSharding(mesh, op_spec)))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-5, err_msg=name)
+        print('transformer tap parity ok')
+    """, dp=1, mp=2)
+    assert "transformer tap parity ok" in out
+
+
+def test_transformer_mp_ghost_scorer_matches_single_device():
+    """End-to-end transformer scorer parity: the model-axis ghost scorer
+    (partial per-example sq-norms from local dY slices, psum'd over
+    `model`) equals the single-device ghost scorer on the same params."""
+    out = run_mesh_py("""
+        import jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import shard_map, param_pspecs
+        from repro.core.scorer import make_lm_scorer
+        from repro.models.config import ModelConfig
+        from repro.models.transformer import (init_transformer,
+                                              transformer_specs)
+
+        cfg = ModelConfig(name='t', arch_type='t', num_layers=2,
+                          d_model=32, num_heads=4, num_kv_heads=2,
+                          d_ff=64, vocab_size=64, dtype='float32',
+                          remat=False)
+        params = init_transformer(jax.random.key(1), cfg)
+        batch = {'tokens': jax.random.randint(jax.random.key(2), (4, 13),
+                                              0, 64)}
+        want = make_lm_scorer(cfg, 'ghost')(params, batch)
+
+        pp = param_pspecs(transformer_specs(cfg), params, mesh)
+        sc = make_lm_scorer(cfg, 'ghost', model_axes=('model',))
+        f = jax.jit(shard_map(sc, mesh=mesh, in_specs=(pp, P()),
+                              out_specs=P()))
+        pm = jax.tree.map(lambda x, s: jax.device_put(
+                              x, NamedSharding(mesh, s)),
+                          params, pp, is_leaf=lambda x: isinstance(x, P))
+        got = f(pm, batch)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+        print('transformer scorer parity ok')
+    """, dp=1, mp=2)
+    assert "transformer scorer parity ok" in out
+
+
 def test_prop1_equals_true_per_example_grad():
     """Paper Prop. 1 against autodiff for an MLP layer (incl. bias)."""
     key = jax.random.key(5)

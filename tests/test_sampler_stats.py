@@ -139,6 +139,88 @@ def test_model_parallel_proposal_chi2_matches_single_device(dp, mp):
 
 
 @pytest.mark.stats
+@pytest.mark.mp
+def test_transformer_mp_proposal_chi2_matches_single_device():
+    """ISSUE 5: the transformer ghost proposal built on a 1×2 model-
+    parallel mesh (head/ffn-sharded layers, partial per-example sq-norms
+    psum'd over `model`) is the SAME multinomial as the single-device
+    proposal — chi-squared GOF of draws from the mp proposal against the
+    single-device distribution."""
+    from _helpers import run_mesh_py
+
+    out = run_mesh_py("""
+        import json
+        import jax.numpy as jnp, numpy as np
+        from repro.core.importance import ISConfig
+        from repro.core.issgd import (ISSGDConfig, init_train_state,
+                                      make_train_step)
+        from repro.core import distributed as D
+        from repro.core.sampler import sample_indices
+        from repro.core.scorer import make_lm_scorer
+        from repro.core.weight_store import WeightStore, read_proposal
+        from repro.data import make_token_dataset
+        from repro.models.config import ModelConfig
+        from repro.models.transformer import (init_transformer,
+                                              per_example_loss,
+                                              transformer_specs)
+        from repro.optim import sgd
+
+        cfg = ModelConfig(name='t', arch_type='t', num_layers=2,
+                          d_model=24, num_heads=4, num_kv_heads=2,
+                          d_ff=48, vocab_size=64, dtype='float32',
+                          remat=False)
+        train = make_token_dataset(jax.random.key(0), n=256, seq=13,
+                                   vocab=cfg.vocab_size)
+        params = init_transformer(jax.random.key(1), cfg)
+        opt = sgd(0.0)   # freeze params: both runs score identical θ
+        tcfg = ISSGDConfig(batch_size=16, score_batch_size=64,
+                           mode="relaxed", is_cfg=ISConfig(smoothing=0.05),
+                           score_shards=4)
+        n = train.size
+        specs = transformer_specs(cfg)
+        pel1 = lambda p, b: per_example_loss(p, cfg, b)[0]
+        sc1 = make_lm_scorer(cfg, 'ghost')
+        pel = lambda p, b: per_example_loss(p, cfg, b,
+                                            model_axes=('model',))[0]
+        sc = make_lm_scorer(cfg, 'ghost', model_axes=('model',))
+
+        step1 = jax.jit(make_train_step(pel1, sc1, opt, tcfg, n))
+        stepm, _ = D.make_sharded_train_step(
+            pel, sc, opt, tcfg, n, mesh, train.arrays,
+            param_specs=specs, params_template=params)
+        stepm = jax.jit(stepm)
+        s1 = init_train_state(params, opt, n)
+        sm = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                 param_specs=specs)
+        dm = D.shard_dataset(train.arrays, mesh)
+        for _ in range(4):   # 4 x 64 rows = the whole table scored
+            s1, _ = step1(s1, train.arrays)
+            sm, _ = stepm(sm, dm)
+
+        p_ref = np.asarray(read_proposal(s1.store, 4, tcfg.is_cfg),
+                           np.float64)
+        p_ref /= p_ref.sum()
+        store_mp = WeightStore(
+            weights=jnp.asarray(np.asarray(sm.store.weights)),
+            scored_at=jnp.asarray(np.asarray(sm.store.scored_at)))
+        prop_mp = read_proposal(store_mp, 4, tcfg.is_cfg)
+
+        m_draws = 200_000
+        idx = np.asarray(sample_indices(jax.random.key(11), prop_mp,
+                                        m_draws, num_shards=4))
+        counts = np.bincount(idx, minlength=n)
+        expected = m_draws * p_ref
+        assert expected.min() > 20
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        print(json.dumps(dict(chi2=chi2, df=n - 1)))
+    """, dp=1, mp=2)
+    import json
+    rec = json.loads(out.strip().splitlines()[-1])
+    crit = chi2_critical(rec["df"])
+    assert rec["chi2"] < crit, f"chi2={rec['chi2']:.1f} >= crit={crit:.1f}"
+
+
+@pytest.mark.stats
 @pytest.mark.parametrize("devices,score_shards", [(2, 4), (4, 8)])
 def test_two_stage_sample_chi2_gof_sharded(devices, score_shards):
     """The same GOF battery with the table sharded over a real 2/4-device
