@@ -22,6 +22,20 @@ CFG = MLPConfig(name="mlp_svhn_bench", input_dim=96, hidden=(256, 256),
 N_TRAIN = 8192
 
 
+def time_fn(fn, *args, reps: int = 3) -> float:
+    """Mean seconds per call of ``fn(*args)`` over ``reps`` timed calls.
+
+    One warmup call (jit compile + execute) is fully awaited via
+    ``jax.block_until_ready``, which handles tuple/pytree returns — the
+    shared replacement for per-benchmark timers that warmed up by calling
+    the function twice and only awaited the first tuple element."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
 def setup(seed: int = 0):
     train, test = make_svhn_like(jax.random.key(seed), n=N_TRAIN,
                                  dim=CFG.input_dim)

@@ -8,6 +8,14 @@ three terms per (arch × shape) on the single-pod mesh.
 Dominant term = the bottleneck; MODEL_FLOPS = 6·N_active·D (train) or
 2·N_active per generated token (decode), and the useful-compute ratio
 MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+
+A second, fully analytic section (`scoring_traffic_rows`, no dry-run
+JSONs needed) prices the fused-vs-separate per-example scoring variants:
+the separate attention-score pass re-reads the materialized dQ/dK/dV from
+HBM, while the `with_scores` epilogue reuses the accumulators already in
+VMEM; likewise the multi-tap sq-norm sweep reads each ghost tap once
+instead of once per launch-pair.  Scoring is pure traffic (one multiply
+per element read), so bytes/HBM_BW is the whole story.
 """
 from __future__ import annotations
 
@@ -61,11 +69,53 @@ def roofline_rows(mesh: str = "pod1") -> list[dict]:
     return rows
 
 
+def scoring_traffic_rows() -> list[dict]:
+    """Analytic HBM-traffic rows for the fused vs. separate scoring
+    kernels (f32 operands; no dry-run JSONs required).
+
+    attn_scores: separate = 3·B·S·H·hd·4 bytes of gradient re-reads plus
+    the (B,) write; fused = the (B,) write only (the epilogue squares the
+    dQ/dK/dV accumulators before they leave VMEM).  sqnorm_multi:
+    separate = T single-tap launches each re-reading its (x, d) pair —
+    same total tap bytes, but T kernel dispatches and T partial-result
+    round-trips; fused = one sweep reading every tap once."""
+    rows = []
+    f32 = 4
+    for bsz, s, h, hd in [(64, 2048, 16, 128), (256, 8192, 32, 128)]:
+        grad_bytes = 3.0 * bsz * s * h * hd * f32
+        sep = grad_bytes + bsz * f32
+        fus = float(bsz * f32)
+        rows.append({
+            "arch": "attn_scores", "shape": f"b{bsz}_s{s}_h{h}_hd{hd}",
+            "separate_bytes": sep, "fused_bytes": fus,
+            "separate_s": sep / HBM_BW, "fused_s": fus / HBM_BW,
+            "traffic_saving": 1.0 - fus / sep,
+        })
+    for bsz, taps, din, dout in [(4096, 4, 4096, 4096),
+                                 (8192, 12, 8192, 2048)]:
+        tap_bytes = float(taps) * bsz * (din + dout) * f32
+        sep = tap_bytes + taps * bsz * f32       # T partial (B,) writes
+        fus = tap_bytes + taps * bsz * f32 + bsz * f32
+        rows.append({
+            "arch": "sqnorm_multi", "shape": f"b{bsz}_t{taps}_{din}x{dout}",
+            "separate_bytes": sep, "fused_bytes": fus,
+            "separate_s": sep / HBM_BW, "fused_s": fus / HBM_BW,
+            "launches_separate": taps, "launches_fused": 1,
+            "traffic_saving": 1.0 - fus / sep,
+        })
+    return rows
+
+
 def run():
     rows = roofline_rows()
     summary = {}
     for r in rows:
         summary[f"{r['arch']}/{r['shape']}/dominant"] = r["dominant"]
+    traffic = scoring_traffic_rows()
+    rows = rows + traffic
+    for r in traffic:
+        summary[f"{r['arch']}/{r['shape']}/traffic_saving"] = (
+            r["traffic_saving"])
     return rows, summary
 
 
@@ -81,6 +131,20 @@ def markdown_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def scoring_markdown_table(rows: list[dict]) -> str:
+    """Render the fused-vs-separate scoring-traffic rows (README table)."""
+    hdr = ("| kernel | shape | separate bytes | fused bytes | "
+           "traffic saved |\n|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['separate_bytes']:.3g} | "
+            f"{r['fused_bytes']:.3g} | {100 * r['traffic_saving']:.1f}% |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
-    rows, _ = run()
-    print(markdown_table(rows))
+    dr = roofline_rows()
+    if dr:
+        print(markdown_table(dr))
+    print(scoring_markdown_table(scoring_traffic_rows()))

@@ -1,32 +1,34 @@
 """Scoring-cost benchmark: the paper's enabling trick (Prop. 1) vs naive
-per-example gradients, plus the ghost extension's two algorithms.
+per-example gradients, plus the ghost extension's two algorithms and the
+fused-vs-separate kernel variants this repo adds on top:
 
-Reported as µs/example on this host (CPU) — the *relative* cost is the
-claim being validated: Prop.-1 style scoring is orders cheaper than
-vmap-of-grad and scales to batch sizes where naive scoring OOMs."""
+* mlp: multi-tap `per_example_sqnorm_multi` (one grid sweep over every
+  rank-1 tap of the ghost walk) vs T separate single-tap launches.
+* transformer: the `with_scores` flash-backward epilogue (scores emitted
+  from the dQ/dK/dV accumulators already in VMEM) vs the separate-pass
+  probe that re-reads the materialized gradients from HBM.
+
+Reported as µs/example on this host (CPU; Pallas interpret mode) — the
+*relative* cost is the claim being validated: Prop.-1 style scoring is
+orders cheaper than vmap-of-grad, and the fused variants avoid a second
+pass over the same operands.  CI records the summary keys
+``mlp/{fused,separate}_us_per_example`` and
+``transformer/{fused,separate}_us_per_example`` in the --bench-json
+artifact (see benchmarks/run.py)."""
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.scorer import make_mlp_scorer
-from repro.kernels import ops, ref
+from benchmarks.common import time_fn
+from repro.core.scorer import make_lm_scorer, make_mlp_scorer
+from repro.kernels import ops
+from repro.models.config import ModelConfig
 from repro.models.mlp import MLPConfig, init_mlp_classifier
+from repro.models.transformer import init_transformer
 
 
-def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps
-
-
-def scoring_throughput():
-    rows, summary = [], {}
+def _mlp_strategies(rows, summary):
     cfg = MLPConfig(input_dim=512, hidden=(1024, 1024), num_classes=10)
     params = init_mlp_classifier(jax.random.key(0), cfg)
     b = 256
@@ -34,18 +36,81 @@ def scoring_throughput():
              "y": jax.random.randint(jax.random.key(2), (b,), 0, 10)}
     for strat in ["loss", "logit_grad", "ghost", "full"]:
         fn = jax.jit(make_mlp_scorer(cfg, strat))
-        dt = _time(fn, params, batch)
+        dt = time_fn(fn, params, batch)
         rows.append({"strategy": strat, "us_per_example": dt / b * 1e6})
         summary[f"{strat}/us_per_example"] = dt / b * 1e6
 
+
+def _mlp_fused_vs_separate(rows, summary):
+    """Multi-tap sweep vs per-tap launches on an MLP-shaped ghost walk."""
+    b = 256
+    dims = [(512, 1024), (1024, 1024), (1024, 10)]  # the mlp tap shapes
+    keys = jax.random.split(jax.random.key(5), 2 * len(dims))
+    xs = tuple(jax.random.normal(keys[2 * i], (b, din))
+               for i, (din, _) in enumerate(dims))
+    ds = tuple(jax.random.normal(keys[2 * i + 1], (b, dout))
+               for i, (_, dout) in enumerate(dims))
+
+    fused = jax.jit(lambda xs_, ds_: ops.per_example_sqnorm_multi(xs_, ds_))
+
+    def _separate(xs_, ds_):
+        res = ops.per_example_sqnorm(xs_[0], ds_[0])
+        for x, d in zip(xs_[1:], ds_[1:]):
+            res = res + ops.per_example_sqnorm(x, d)
+        return res
+    separate = jax.jit(_separate)
+
+    t_f = time_fn(fused, xs, ds)
+    t_s = time_fn(separate, xs, ds)
+    rows.append({"strategy": "mlp_multi_tap",
+                 "fused_us_per_example": t_f / b * 1e6,
+                 "separate_us_per_example": t_s / b * 1e6})
+    summary["mlp/fused_us_per_example"] = t_f / b * 1e6
+    summary["mlp/separate_us_per_example"] = t_s / b * 1e6
+    summary["mlp/fused_over_separate"] = t_f / max(t_s, 1e-9)
+
+
+def _transformer_fused_vs_separate(rows, summary):
+    """Ghost scorer with the flash `with_scores` epilogue vs the
+    separate-pass score probe, end to end on a tiny transformer."""
+    cfg = ModelConfig(name="bench_t", arch_type="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                      vocab_size=256, dtype="float32", remat=False)
+    params = init_transformer(jax.random.key(6), cfg)
+    b, s = 8, 128
+    batch = {"tokens": jax.random.randint(jax.random.key(7), (b, s),
+                                          0, cfg.vocab_size)}
+    t_f = time_fn(make_lm_scorer(cfg, "ghost", attn_impl="flash",
+                                 attn_scores="fused"), params, batch)
+    t_s = time_fn(make_lm_scorer(cfg, "ghost", attn_impl="flash",
+                                 attn_scores="separate"), params, batch)
+    rows.append({"strategy": "transformer_attn_scores",
+                 "fused_us_per_example": t_f / b * 1e6,
+                 "separate_us_per_example": t_s / b * 1e6})
+    summary["transformer/fused_us_per_example"] = t_f / b * 1e6
+    summary["transformer/separate_us_per_example"] = t_s / b * 1e6
+    summary["transformer/fused_over_separate"] = t_f / max(t_s, 1e-9)
+
+
+def _ghost_algorithms(rows, summary):
     # ghost-extension algorithm selection (gram kernel vs direct einsum)
     for s, din, dout, tag in [(128, 512, 512, "gram_favorable"),
                               (512, 128, 128, "direct_favorable")]:
         x = jax.random.normal(jax.random.key(3), (8, s, din))
         d = jax.random.normal(jax.random.key(4), (8, s, dout))
-        t_gram = _time(jax.jit(lambda a, b_: ops.ghost_norm(a, b_, force="gram")), x, d)
-        t_dir = _time(jax.jit(lambda a, b_: ops.ghost_norm(a, b_, force="direct")), x, d)
+        t_gram = time_fn(
+            jax.jit(lambda a, b_: ops.ghost_norm(a, b_, force="gram")), x, d)
+        t_dir = time_fn(
+            jax.jit(lambda a, b_: ops.ghost_norm(a, b_, force="direct")), x, d)
         rows.append({"strategy": f"ghost_{tag}",
                      "gram_ms": t_gram * 1e3, "direct_ms": t_dir * 1e3})
         summary[f"{tag}/gram_over_direct"] = t_gram / max(t_dir, 1e-9)
+
+
+def scoring_throughput():
+    rows, summary = [], {}
+    _mlp_strategies(rows, summary)
+    _mlp_fused_vs_separate(rows, summary)
+    _transformer_fused_vs_separate(rows, summary)
+    _ghost_algorithms(rows, summary)
     return rows, summary

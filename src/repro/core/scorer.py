@@ -86,6 +86,16 @@ def ghost_sq_norms(
     into the exact per-example grad-norm — replicated, so every model
     replica writes identical proposal weights into the store.
 
+    Two fused-kernel fast paths ride on the record walk:
+      * names ending in ``.qkv_scores`` are SCORE taps — their cotangent
+        already IS the finished (B,)/(P,B) per-example score emitted by
+        the flash-attention backward epilogue (see models/attention.attn),
+        so it is summed in directly (no Prop.-1 kernel call);
+      * consecutive runs of rank-1 (2-D, unscanned) taps with the same
+        model-axis scaling class are batched through
+        `ops.per_example_sqnorm_multi` — one grid sweep instead of one
+        kernel launch per tapped linear.
+
     Returns (sq_norms (B,), per_example_losses (B,)).
     """
     from repro.core.collectives import axis_info, psum
@@ -100,22 +110,63 @@ def ghost_sq_norms(
 
     _, n_model = axis_info(tuple(model_axes))
     sq = jnp.zeros((batch,), jnp.float32)
+    group_x: list = []
+    group_d: list = []
+    group_div = False
+
+    def _flush(sq):
+        nonlocal group_x, group_d, group_div
+        if not group_x:
+            return sq
+        if len(group_x) == 1:
+            contrib = ops.per_example_sqnorm(group_x[0], group_d[0],
+                                             with_bias=with_bias)
+        else:
+            contrib = ops.per_example_sqnorm_multi(
+                tuple(group_x), tuple(group_d), with_bias=with_bias)
+        if group_div:
+            contrib = contrib / n_model  # replicated layers: counted once
+        group_x, group_d, group_div = [], [], False
+        return sq + contrib
+
     for name, x in records.items():
         if name not in dtaps:
             continue
         scanned = (name in scanned_names) if scanned_names is not None \
             else (name != "unembed")
-        contrib = _contribution(x, dtaps[name], batch, with_bias, scanned)
-        if model_axes and name not in (sharded_names or ()):
-            contrib = contrib / n_model  # replicated layer: counted once
+        dt = dtaps[name]
+        divide = bool(model_axes) and name not in (sharded_names or ())
+        if name.endswith(".qkv_scores"):
+            sq = _flush(sq)
+            contrib = dt.astype(jnp.float32)
+            if scanned:  # (P, B) stacked over scan periods
+                contrib = jnp.sum(contrib, axis=0)
+            if divide:
+                contrib = contrib / n_model
+            sq = sq + contrib
+            continue
+        if not scanned and x.ndim == 2:  # rank-1 tap: groupable
+            if group_x and group_div != divide:
+                sq = _flush(sq)
+            group_x.append(x)
+            group_d.append(dt)
+            group_div = divide
+            continue
+        sq = _flush(sq)
+        contrib = _contribution(x, dt, batch, with_bias, scanned)
+        if divide:
+            contrib = contrib / n_model
         sq = sq + contrib
+    sq = _flush(sq)
     return psum(sq, tuple(model_axes)), losses
 
 
 # ----------------------------------------------------------- LM strategies
 def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref",
                    model_axes: tuple[str, ...] = (),
-                   seq_shard: bool = False) -> Callable:
+                   seq_shard: bool = False,
+                   attn_impl: str = "ref",
+                   attn_scores: Optional[str] = None) -> Callable:
     """Scorer for transformer LMs.  Returns fn(params, batch) -> ω̃ (B,).
 
     With ``model_axes`` set the returned scorer expects model-axis-sharded
@@ -128,12 +179,39 @@ def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref",
     (loss / logit_grad) read the gathered replicated logits and need no
     reduction.  ``seq_shard`` threads sequence parallelism through the
     forward.  The `full` vmap-of-grad oracle is single-device-only.
+
+    ``attn_impl`` selects the attention path ("ref" chunked-jnp, "flash"
+    trainable Pallas kernel).  ``attn_scores`` ("fused"/"separate",
+    ghost/ghost_rev with attn_impl="flash" only) swaps each attention
+    layer's wq/wk/wv ghost Gram terms for the flash-backward score tap
+    ||dQ||²+||dK||²+||dV||² at the attention interface — an EL2N-style
+    proxy of those three terms at near-zero extra cost ("fused" reads it
+    from the backward kernel epilogue; "separate" re-reads the gradients
+    from HBM, the bitwise-pinned reference).  The resulting ω̃ is NO
+    LONGER the exact full-parameter grad-norm; all other layers' terms
+    stay exact.
     """
     from repro.models.transformer import (per_example_loss,
                                           sharded_tap_names,
                                           tap_structure,
                                           tap_structure_from_params)
     model_axes = tuple(model_axes)
+    if attn_scores is not None:
+        if attn_scores not in ("fused", "separate"):
+            raise ValueError(f"attn_scores must be 'fused', 'separate' or "
+                             f"None, got {attn_scores!r}")
+        if strategy not in ("ghost", "ghost_rev"):
+            raise ValueError(
+                f"attn_scores={attn_scores!r} modifies the ghost-tap walk; "
+                f"it has no effect on strategy {strategy!r} — use 'ghost' "
+                f"or 'ghost_rev'")
+        if attn_impl != "flash":
+            raise ValueError(
+                f"attn_scores={attn_scores!r} needs the trainable flash "
+                f"kernel (attn_impl='flash'), got attn_impl={attn_impl!r}")
+        if cfg.attention == "mla":
+            raise ValueError("attn_scores is a GQA flash-kernel feature; "
+                             "attention='mla' has no flash backward")
 
     if strategy == "loss":
         def score(params, batch):
@@ -167,17 +245,22 @@ def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref",
             if model_axes:
                 tap_shapes = tap_structure_from_params(
                     params, cfg, b, s - 1, model_axes=model_axes,
-                    ssm_mode=ssm_mode)
-                sharded = sharded_tap_names(params, cfg)
+                    ssm_mode=ssm_mode, attn_impl=attn_impl,
+                    attn_scores=attn_scores)
+                sharded = sharded_tap_names(params, cfg,
+                                            attn_scores=attn_scores)
             else:
-                tap_shapes = tap_structure(cfg, b, s - 1)
+                tap_shapes = tap_structure(cfg, b, s - 1,
+                                           attn_impl=attn_impl,
+                                           attn_scores=attn_scores)
                 sharded = None
             # the unembed tap lives outside the scan: add it explicitly
             def loss_with_taps(taps):
                 losses, aux = per_example_loss(
                     params, cfg, batch, taps=taps, collect=True,
                     ssm_mode=ssm_mode, model_axes=model_axes,
-                    seq_shard=seq_shard)
+                    seq_shard=seq_shard, attn_impl=attn_impl,
+                    attn_scores=attn_scores)
                 return losses, aux.records
             sq, _ = ghost_sq_norms(loss_with_taps, tap_shapes, b,
                                    with_bias=False, model_axes=model_axes,
@@ -187,7 +270,9 @@ def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref",
 
     if strategy == "ghost_rev":
         return _make_ghost_rev_scorer(cfg, ssm_mode, model_axes=model_axes,
-                                      seq_shard=seq_shard)
+                                      seq_shard=seq_shard,
+                                      attn_impl=attn_impl,
+                                      attn_scores=attn_scores)
 
     if strategy == "full":
         if model_axes:
@@ -216,7 +301,9 @@ def make_lm_scorer(cfg, strategy: str, ssm_mode: str = "ref",
 # ----------------------------------------------- memory-scalable ghost_rev
 def _make_ghost_rev_scorer(cfg, ssm_mode: str,
                            model_axes: tuple[str, ...] = (),
-                           seq_shard: bool = False):
+                           seq_shard: bool = False,
+                           attn_impl: str = "ref",
+                           attn_scores: Optional[str] = None):
     """Exact ghost scoring via a manual reverse scan over layer periods.
 
     Memory: P boundary activations + ONE period of records/cotangents,
@@ -239,8 +326,9 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str,
 
     def score(params, batch):
         _, n_model = axis_info(model_axes)
-        sharded_names = sharded_tap_names(params, cfg) if model_axes \
-            else set()
+        sharded_names = sharded_tap_names(params, cfg,
+                                          attn_scores=attn_scores) \
+            if model_axes else set()
         tokens = batch["tokens"]
         embeds = batch.get("embeds")
         n_front = embeds.shape[1] if embeds is not None else 0
@@ -259,7 +347,9 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str,
                 h, _ = _apply_layer(pp[f"l{i}"], h, cfg, spec, positions,
                                     tape, f"l{i}", ssm_mode,
                                     model_axes=model_axes,
-                                    seq_shard=seq_shard)
+                                    seq_shard=seq_shard,
+                                    attn_impl=attn_impl,
+                                    attn_scores=attn_scores)
             return h, tape.records
 
         # ---- phase A: forward, storing only period-boundary activations
@@ -292,9 +382,12 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str,
         # per-period tap template (strip the leading period axis + unembed)
         full_taps = (tap_structure_from_params(
                          params, cfg, b, s_text + n_front,
-                         model_axes=model_axes, ssm_mode=ssm_mode)
+                         model_axes=model_axes, ssm_mode=ssm_mode,
+                         attn_impl=attn_impl, attn_scores=attn_scores)
                      if model_axes else
-                     tap_structure(cfg, b, s_text + n_front))
+                     tap_structure(cfg, b, s_text + n_front,
+                                   attn_impl=attn_impl,
+                                   attn_scores=attn_scores))
         period_taps = {
             k: jnp.zeros(v.shape[1:], v.dtype)
             for k, v in full_taps.items() if k != "unembed"
@@ -313,10 +406,15 @@ def _make_ghost_rev_scorer(cfg, ssm_mode: str,
                 if name not in dtaps:
                     continue
                 dt = dtaps[name]
-                if x.ndim == 2 and x.shape[0] != b:   # token-flattened (T,d)
+                if name.endswith(".qkv_scores"):
+                    # score tap: the cotangent IS the finished (B,) score
+                    c = dt.astype(jnp.float32)
+                elif x.ndim == 2 and x.shape[0] != b:  # token-flat (T,d)
                     x = x.reshape(b, -1, x.shape[-1])
                     dt = dt.reshape(b, -1, dt.shape[-1])
-                c = _contribution(x, dt, b, False, scanned=False)
+                    c = _contribution(x, dt, b, False, scanned=False)
+                else:
+                    c = _contribution(x, dt, b, False, scanned=False)
                 if model_axes and name not in sharded_names:
                     c = c / n_model  # replicated layer: counted once
                 contrib = contrib + c

@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the scoring hot-spots (see docs/KERNELS.md).
+
+Four kernel families, each with a pure-jnp twin in :mod:`repro.kernels.ref`
+that pins its numerics in tests/test_kernels.py:
+
+* ``per_example_sqnorm`` / ``per_example_sqnorm_multi`` — paper Prop. 1
+  rank-1 per-example gradient sq-norms (the multi variant sweeps all
+  taps of a ghost walk in one launch).
+* ``ghost_norm`` — the sequence-model Gram-matrix generalisation.
+* ``flash_attention`` / ``flash_attention_bwd`` — trainable flash
+  attention; the backward optionally emits a fused (B,) score tap
+  (``with_scores``) alongside dQ/dK/dV, with ``attn_score_sweep`` as its
+  bitwise separate-pass twin.
+
+User-facing entry points live in :mod:`repro.kernels.ops` (jit-wrapped,
+interpret-mode autodetection for CPU).
+"""

@@ -49,15 +49,31 @@ def _p_tile(q, k, lse, qb, kb, block_q, block_k, scale, window, seq_len):
 
 
 def _dkdv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref,
-                 dk_ref, dv_ref, dk_acc, dv_acc, *,
-                 block_q, block_k, scale, window, seq_len, rep):
+                 *refs, block_q, block_k, scale, window, seq_len, rep,
+                 with_scores=False):
     """Grid (B, Hkv, nk, nq·rep): the innermost axis walks (q block,
     group-local head), so the accumulator covers all rep GQA heads of the
-    KV head before the (b, kb, g) output block is left."""
+    KV head before the (b, kb, g) output block is left.
+
+    With ``with_scores`` an extra (B,) output rides along: at each tile
+    emit, the squared Frobenius norms of the finished dK/dV accumulator
+    tiles are added into the per-example score block (the fused ghost-score
+    epilogue — the tiles are already in VMEM, so the score costs one
+    reduction, not an extra HBM sweep)."""
+    if with_scores:
+        dk_ref, dv_ref, skv_ref, dk_acc, dv_acc = refs
+    else:
+        dk_ref, dv_ref, dk_acc, dv_acc = refs
+    g = pl.program_id(1)
     kb = pl.program_id(2)
     inner = pl.program_id(3)
     n_inner = pl.num_programs(3)
     qb = inner // rep
+
+    if with_scores:
+        @pl.when((g == 0) & (kb == 0) & (inner == 0))
+        def _init_scores():
+            skv_ref[...] = jnp.zeros_like(skv_ref)
 
     @pl.when(inner == 0)
     def _init():
@@ -93,13 +109,26 @@ def _dkdv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref,
     def _emit():
         dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+        if with_scores:
+            skv_ref[...] += (jnp.sum(dk_acc[...] * dk_acc[...])
+                             + jnp.sum(dv_acc[...] * dv_acc[...]))
 
 
-def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, dq_ref,
-               dq_acc, *, block_q, block_k, scale, window, seq_len):
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, *refs,
+               block_q, block_k, scale, window, seq_len, with_scores=False):
+    if with_scores:
+        dq_ref, sq_ref, dq_acc = refs
+    else:
+        dq_ref, dq_acc = refs
+    hh = pl.program_id(1)
     qb = pl.program_id(2)
     kb = pl.program_id(3)
     nk = pl.num_programs(3)
+
+    if with_scores:
+        @pl.when((hh == 0) & (qb == 0) & (kb == 0))
+        def _init_scores():
+            sq_ref[...] = jnp.zeros_like(sq_ref)
 
     @pl.when(kb == 0)
     def _init():
@@ -130,14 +159,25 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, dq_ref,
     @pl.when(kb == nk - 1)
     def _emit():
         dq_ref[0, :, 0, :] = dq_acc[...].astype(dq_ref.dtype)
+        if with_scores:
+            sq_ref[...] += jnp.sum(dq_acc[...] * dq_acc[...])
 
 
 def flash_attention_bwd(
     q, k, v, o, lse, do, *,
     window: int = 0, scale: float | None = None,
-    block_q: int = 256, block_k: int = 256, interpret: bool = False,
+    block_q: int = 256, block_k: int = 256,
+    with_scores: bool = False, interpret: bool = False,
 ):
-    """Returns (dq, dk, dv). Shapes as the forward; lse: (B, H, S) f32."""
+    """Returns (dq, dk, dv). Shapes as the forward; lse: (B, H, S) f32.
+
+    With ``with_scores=True`` additionally returns a (B,) float32 score
+    tap: ``scores[n] = ||dQ_n||² + ||dK_n||² + ||dV_n||²`` accumulated in
+    the kernels' epilogues from the f32 VMEM accumulator tiles (before the
+    output-dtype cast), so it costs no extra HBM sweep over the gradients.
+    Padded rows are masked to exact zeros in the tiles and contribute
+    exactly 0.0.  `attn_score_sweep` is the separate-pass twin with
+    bitwise-identical accumulation order (for f32 operands)."""
     bsz, s, h, hd = q.shape
     hkv = k.shape[2]
     rep = h // hkv
@@ -166,9 +206,24 @@ def flash_attention_bwd(
     def _lseh(b, g, kb, inner):
         return (b, g * rep + inner % rep, inner // rep)
 
-    dk, dv = pl.pallas_call(
+    kv_out_specs = [
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, g, kb, inner: (b, kb, g, 0)),
+        pl.BlockSpec((1, block_k, 1, hd),
+                     lambda b, g, kb, inner: (b, kb, g, 0)),
+    ]
+    kv_out_shape = [
+        jax.ShapeDtypeStruct((bsz, s + pad_k, hkv, hd), jnp.float32),
+        jax.ShapeDtypeStruct((bsz, s + pad_k, hkv, hd), jnp.float32),
+    ]
+    if with_scores:
+        kv_out_specs.append(
+            pl.BlockSpec((1,), lambda b, g, kb, inner: (b,)))
+        kv_out_shape.append(jax.ShapeDtypeStruct((bsz,), jnp.float32))
+    kv_res = pl.pallas_call(
         functools.partial(_dkdv_kernel, block_q=block_q, block_k=block_k,
-                          scale=scale, window=window, seq_len=s, rep=rep),
+                          scale=scale, window=window, seq_len=s, rep=rep,
+                          with_scores=with_scores),
         grid=(bsz, hkv, nk, nq * rep),
         in_specs=[
             pl.BlockSpec((1, block_q, 1, hd), _qh),
@@ -180,25 +235,27 @@ def flash_attention_bwd(
             pl.BlockSpec((1, 1, block_q), _lseh),
             pl.BlockSpec((1, 1, block_q), _lseh),
         ],
-        out_specs=[
-            pl.BlockSpec((1, block_k, 1, hd),
-                         lambda b, g, kb, inner: (b, kb, g, 0)),
-            pl.BlockSpec((1, block_k, 1, hd),
-                         lambda b, g, kb, inner: (b, kb, g, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz, s + pad_k, hkv, hd), jnp.float32),
-            jax.ShapeDtypeStruct((bsz, s + pad_k, hkv, hd), jnp.float32),
-        ],
+        out_specs=kv_out_specs,
+        out_shape=kv_out_shape,
         scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
                         pltpu.VMEM((block_k, hd), jnp.float32)],
         interpret=interpret,
     )(qp, kp, vp, dop, lsep, dvecp)
+    dk, dv = kv_res[0], kv_res[1]
 
     # ---- dQ: grid (B, H, qb, kb) — k innermost
-    dq = pl.pallas_call(
+    q_out_specs = pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, hh, qb, kb: (b, qb, hh, 0))
+    q_out_shape = jax.ShapeDtypeStruct((bsz, s + pad_q, h, hd), jnp.float32)
+    if with_scores:
+        q_out_specs = [q_out_specs,
+                       pl.BlockSpec((1,), lambda b, hh, qb, kb: (b,))]
+        q_out_shape = [q_out_shape,
+                       jax.ShapeDtypeStruct((bsz,), jnp.float32)]
+    q_res = pl.pallas_call(
         functools.partial(_dq_kernel, block_q=block_q, block_k=block_k,
-                          scale=scale, window=window, seq_len=s),
+                          scale=scale, window=window, seq_len=s,
+                          with_scores=with_scores),
         grid=(bsz, h, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, 1, hd),
@@ -214,12 +271,89 @@ def flash_attention_bwd(
             pl.BlockSpec((1, 1, block_q),
                          lambda b, hh, qb, kb: (b, hh, qb)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, 1, hd),
-                               lambda b, hh, qb, kb: (b, qb, hh, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, s + pad_q, h, hd), jnp.float32),
+        out_specs=q_out_specs,
+        out_shape=q_out_shape,
         scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
         interpret=interpret,
     )(qp, kp, vp, dop, lsep, dvecp)
+    dq = q_res[0] if with_scores else q_res
 
-    return (dq[:, :s].astype(q.dtype), dk[:, :s].astype(k.dtype),
-            dv[:, :s].astype(v.dtype))
+    grads = (dq[:, :s].astype(q.dtype), dk[:, :s].astype(k.dtype),
+             dv[:, :s].astype(v.dtype))
+    if with_scores:
+        return grads + (kv_res[2] + q_res[1],)
+    return grads
+
+
+# ------------------------------------------------- separate-pass score twin
+def _sweep_kv_kernel(dk_ref, dv_ref, out_ref):
+    g = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when((g == 0) & (kb == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dk_t = dk_ref[0, :, 0, :].astype(jnp.float32)
+    dv_t = dv_ref[0, :, 0, :].astype(jnp.float32)
+    out_ref[...] += jnp.sum(dk_t * dk_t) + jnp.sum(dv_t * dv_t)
+
+
+def _sweep_q_kernel(dq_ref, out_ref):
+    hh = pl.program_id(1)
+    qb = pl.program_id(2)
+
+    @pl.when((hh == 0) & (qb == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dq_t = dq_ref[0, :, 0, :].astype(jnp.float32)
+    out_ref[...] += jnp.sum(dq_t * dq_t)
+
+
+def attn_score_sweep(dq, dk, dv, *, block_q: int = 256, block_k: int = 256,
+                     interpret: bool = False):
+    """(B,) per-example ||dQ||²+||dK||²+||dV||² from materialized grads.
+
+    The separate-pass twin of ``flash_attention_bwd(with_scores=True)``:
+    same tile shapes, same grid iteration order ((kv head, k block) then
+    (head, q block)), same per-tile reduction expressions — so for f32
+    gradients the result is BITWISE-identical to the fused epilogue (the
+    parity contract pinned in tests/test_kernels.py).  The extra cost it
+    pays, and the fused path does not, is one full HBM re-read of
+    dQ/dK/dV."""
+    bsz, s, h, hd = dq.shape
+    hkv = dk.shape[2]
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    pad_q = (-s) % block_q
+    pad_k = (-s) % block_k
+    dqp = jnp.pad(dq, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    dkp = jnp.pad(dk, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    dvp = jnp.pad(dv, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = (s + pad_q) // block_q
+    nk = (s + pad_k) // block_k
+
+    skv = pl.pallas_call(
+        _sweep_kv_kernel,
+        grid=(bsz, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, g, kb: (b, kb, g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, g, kb: (b, kb, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, g, kb: (b,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        interpret=interpret,
+    )(dkp, dvp)
+
+    sq = pl.pallas_call(
+        _sweep_q_kernel,
+        grid=(bsz, h, nq),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, hh, qb: (b, qb, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, hh, qb: (b,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        interpret=interpret,
+    )(dqp)
+    return skv + sq

@@ -18,8 +18,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.flash_attention_bwd import attn_score_sweep as _attn_score_sweep
 from repro.kernels.ghost_norm import ghost_norm as _ghost_norm
 from repro.kernels.per_example_sqnorm import per_example_sqnorm as _per_example_sqnorm
+from repro.kernels.per_example_sqnorm import per_example_sqnorm_multi as _per_example_sqnorm_multi
 from repro.kernels.selective_scan import selective_scan as _selective_scan
 
 
@@ -32,6 +34,19 @@ def _interpret() -> bool:
 def per_example_sqnorm(x, d, with_bias: bool = True):
     """Paper Prop. 1: (B,din),(B,dout) → f32[B] squared grad-norm."""
     return _per_example_sqnorm(x, d, with_bias=with_bias, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("with_bias",))
+def per_example_sqnorm_multi(xs, ds, with_bias: bool = True):
+    """Fused multi-tap Prop. 1: Σ_t ||xs[t]||²·||ds[t]||² in one sweep.
+
+    Bitwise-identical to summing single-tap `per_example_sqnorm` launches
+    over the taps in order (same block sizes, zero padding exact for sums
+    of squares) — the kernel-launch batching the ghost scorer uses when it
+    walks many rank-1 tapped linears."""
+    return _per_example_sqnorm_multi(tuple(xs), tuple(ds),
+                                     with_bias=with_bias,
+                                     interpret=_interpret())
 
 
 # --------------------------------------------------------------- ghost norm
@@ -111,13 +126,53 @@ def flash_attention(q, k, v, window: int = 0, block_q: int = 256,
                interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attn_grad_sqnorm(dq, dk, dv, block_q: int = 256, block_k: int = 256):
+    """(B,) per-example ||dQ||²+||dK||²+||dV||² via the separate-pass
+    Pallas sweep (`attn_score_sweep`) — bitwise twin of the fused
+    `with_scores` epilogue for f32 gradients."""
+    return _attn_score_sweep(dq, dk, dv, block_q=block_q, block_k=block_k,
+                             interpret=_interpret())
+
+
 def make_flash_attention_trainable(window: int = 0, block_q: int = 256,
-                                   block_k: int = 256):
+                                   block_k: int = 256,
+                                   with_scores: bool = False):
     """Differentiable flash attention: forward + FlashAttention-2-style
     backward kernels wired through jax.custom_vjp.  Neither direction
-    materializes the S×S attention matrix in HBM."""
+    materializes the S×S attention matrix in HBM.
+
+    With ``with_scores=True`` the returned op takes a fourth (B,) float32
+    ``score_tap`` argument (ignored by the primal) whose cotangent is the
+    fused per-example score ``||dQ_n||²+||dK_n||²+||dV_n||²`` emitted by
+    the backward kernels' epilogues — pulling the vjp of a loss w.r.t. the
+    tap yields the ghost score of the attention interface at near-zero
+    extra cost (see core/scorer.py, strategy 'ghost' with attn_scores)."""
     from repro.kernels.flash_attention import flash_attention as _fa
     from repro.kernels.flash_attention_bwd import flash_attention_bwd as _fb
+
+    if with_scores:
+        @jax.custom_vjp
+        def fa_s(q, k, v, score_tap):
+            return _fa(q, k, v, window=window, block_q=block_q,
+                       block_k=block_k, interpret=_interpret())
+
+        def fwd_s(q, k, v, score_tap):
+            o, lse = _fa(q, k, v, window=window, block_q=block_q,
+                         block_k=block_k, interpret=_interpret(),
+                         return_lse=True)
+            return o, (q, k, v, o, lse)
+
+        def bwd_s(res, do):
+            q, k, v, o, lse = res
+            dq, dk, dv, scores = _fb(q, k, v, o, lse, do, window=window,
+                                     block_q=block_q, block_k=block_k,
+                                     with_scores=True,
+                                     interpret=_interpret())
+            return dq, dk, dv, scores
+
+        fa_s.defvjp(fwd_s, bwd_s)
+        return fa_s
 
     @jax.custom_vjp
     def fa(q, k, v):
@@ -137,3 +192,28 @@ def make_flash_attention_trainable(window: int = 0, block_q: int = 256,
 
     fa.defvjp(fwd, bwd)
     return fa
+
+
+def make_qkv_score_probe(block_q: int = 256, block_k: int = 256):
+    """Identity op (q, k, v, score_tap) -> (q, k, v) whose backward runs
+    the separate-pass score sweep on the gradient cotangents and returns
+    it as the tap cotangent.  Composed before a plain trainable flash
+    attention, this is the SEPARATE-pass twin of ``with_scores=True`` —
+    same score, computed by re-reading dQ/dK/dV from HBM.  Exists so the
+    fused path has a bitwise reference (and a benchmark baseline)."""
+
+    @jax.custom_vjp
+    def probe(q, k, v, score_tap):
+        return q, k, v
+
+    def fwd(q, k, v, score_tap):
+        return (q, k, v), None
+
+    def bwd(_, cts):
+        dq, dk, dv = cts
+        scores = _attn_score_sweep(dq, dk, dv, block_q=block_q,
+                                   block_k=block_k, interpret=_interpret())
+        return dq, dk, dv, scores
+
+    probe.defvjp(fwd, bwd)
+    return probe

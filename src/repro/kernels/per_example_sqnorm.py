@@ -89,3 +89,105 @@ def per_example_sqnorm(
         interpret=interpret,
     )(xp, dp)
     return out[:b]
+
+
+# ----------------------------------------------------------- fused multi-tap
+def _multi_kernel(x_ref, d_ref, out_ref, xs_acc, ds_acc, *, nkx: int,
+                  nkd: int, with_bias: bool):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        xs_acc[...] = jnp.zeros_like(xs_acc)
+        ds_acc[...] = jnp.zeros_like(ds_acc)
+
+    @pl.when(k < nkx)
+    def _accum_x():
+        xb = x_ref[0].astype(jnp.float32)
+        xs_acc[...] += jnp.sum(xb * xb, axis=-1)
+
+    @pl.when(k < nkd)
+    def _accum_d():
+        db = d_ref[0].astype(jnp.float32)
+        ds_acc[...] += jnp.sum(db * db, axis=-1)
+
+    # per-tap rows are STORED (same expression as the single-tap kernel),
+    # not accumulated in-place: an in-kernel `out += xs·ds` lets the
+    # compiler form an FMA (one rounding), which would break bitwise
+    # parity with "sum of single-tap launches"; the wrapper chains the
+    # tap adds outside, where no multiply is available to fuse.
+    @pl.when(k == nk - 1)
+    def _emit():
+        res = xs_acc[...] * ds_acc[...]
+        if with_bias:
+            res = res + ds_acc[...]
+        out_ref[0] = res
+
+
+def per_example_sqnorm_multi(
+    xs: tuple,
+    ds: tuple,
+    *,
+    with_bias: bool = True,
+    block_b: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sum of T rank-1 tap contributions in ONE grid sweep.
+
+    ``out[n] = Σ_t ||xs[t][n]||²·||ds[t][n]||² (+||ds[t][n]||²)`` — the
+    per-kernel-launch alternative to T separate `per_example_sqnorm` calls
+    when the ghost scorer walks many tapped linears.  Taps are zero-padded
+    to the widest tap's feature-block grid and stacked on a leading tap
+    axis; the grid is (batch_blocks, taps, feature_blocks) — ONE sweep
+    over all taps' operands instead of T kernel launches.  Zero padding
+    is exact for sums of squares and the per-block reduction expressions
+    match the single-tap kernel, so each tap's row of the (T, B) kernel
+    output is bitwise-equal to its single-tap launch; the wrapper then
+    chains the tap adds in order, making the result BITWISE-identical to
+    summing T single-tap launches (same block sizes) in the same order."""
+    assert len(xs) == len(ds) and len(xs) >= 1
+    b = xs[0].shape[0]
+    assert all(x.ndim == 2 and x.shape[0] == b for x in xs)
+    assert all(d.ndim == 2 and d.shape[0] == b for d in ds)
+    n_taps = len(xs)
+
+    bb = min(block_b, b)
+    pad_b = (-b) % bb
+    nkx = max(pl.cdiv(x.shape[1], block_k) for x in xs)
+    nkd = max(pl.cdiv(d.shape[1], block_k) for d in ds)
+    nk = max(nkx, nkd)
+    kx, kd = nkx * block_k, nkd * block_k
+
+    # upcast before stacking (exact) so heterogeneous tap dtypes coexist
+    xstk = jnp.stack([
+        jnp.pad(x.astype(jnp.float32), ((0, pad_b), (0, kx - x.shape[1])))
+        for x in xs])
+    dstk = jnp.stack([
+        jnp.pad(d.astype(jnp.float32), ((0, pad_b), (0, kd - d.shape[1])))
+        for d in ds])
+
+    grid = (pl.cdiv(b + pad_b, bb), n_taps, nk)
+    out = pl.pallas_call(
+        functools.partial(_multi_kernel, nkx=nkx, nkd=nkd,
+                          with_bias=with_bias),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bb, block_k),
+                         lambda i, t, k: (t, i, jnp.minimum(k, nkx - 1))),
+            pl.BlockSpec((1, bb, block_k),
+                         lambda i, t, k: (t, i, jnp.minimum(k, nkd - 1))),
+        ],
+        out_specs=pl.BlockSpec((1, bb), lambda i, t, k: (t, i)),
+        out_shape=jax.ShapeDtypeStruct((n_taps, b + pad_b), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bb,), jnp.float32),
+            pltpu.VMEM((bb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xstk, dstk)
+    res = out[0]
+    for t in range(1, n_taps):
+        res = res + out[t]
+    return res[:b]

@@ -49,6 +49,22 @@ def ghost_norm_direct_ref(x: jax.Array, d: jax.Array) -> jax.Array:
     return jnp.sum(jnp.square(g), axis=(1, 2))
 
 
+def per_example_sqnorm_multi_ref(xs, ds, with_bias: bool = True) -> jax.Array:
+    """Multi-tap Prop.-1 oracle: Σ_t per_example_sqnorm_ref(xs[t], ds[t])."""
+    out = jnp.zeros((xs[0].shape[0],), jnp.float32)
+    for x, d in zip(xs, ds):
+        out = out + per_example_sqnorm_ref(x, d, with_bias=with_bias)
+    return out
+
+
+def attn_grad_sqnorm_ref(dq, dk, dv) -> jax.Array:
+    """Oracle for the fused flash-bwd score tap: per-example
+    ||dQ_n||² + ||dK_n||² + ||dV_n||² over the (S, H, hd) axes."""
+    def _sq(a):
+        return jnp.sum(jnp.square(a.astype(jnp.float32)), axis=(1, 2, 3))
+    return _sq(dq) + _sq(dk) + _sq(dv)
+
+
 # --------------------------------------------------------- selective scan
 def selective_scan_ref(
     u: jax.Array,      # (B, S, d_inner)

@@ -123,12 +123,23 @@ def attn(params: Params, x: jax.Array, cfg: ModelConfig,
          prefix: str = "attn", q_chunk: int = 512,
          collector: Optional[dict] = None,
          impl: str = "ref",
-         model_axes: tuple[str, ...] = ()) -> jax.Array:
+         model_axes: tuple[str, ...] = (),
+         attn_scores: Optional[str] = None) -> jax.Array:
     """Full training/prefill GQA self-attention. x: (B,S,D).
 
     impl="pallas" uses the flash-attention kernel (forward-only — the
-    serving-prefill hot path); "ref" is the chunked-jnp path (training,
-    autodiff-friendly, lowers on every backend).
+    serving-prefill hot path); "flash" is the same kernel made trainable
+    through the FlashAttention-2 backward (custom_vjp); "ref" is the
+    chunked-jnp path (training, autodiff-friendly, lowers on every
+    backend).
+
+    ``attn_scores`` (requires impl="flash") swaps the wq/wk/wv ghost taps
+    for ONE (B,) score tap at the attention interface: the tap's
+    cotangent is the per-example ||dQ||²+||dK||²+||dV||² of the post-rope
+    flash-attention operands.  "fused" reads it from the backward
+    kernels' epilogues (no extra HBM sweep); "separate" recomputes it
+    from the materialized gradients via `make_qkv_score_probe` — the
+    bitwise reference/benchmark baseline.  The wo tap is unaffected.
 
     With ``model_axes`` set and head-sharded weights (inside shard_map),
     the layer runs Megatron-style: `psum_backward` on the replicated
@@ -142,6 +153,14 @@ def attn(params: Params, x: jax.Array, cfg: ModelConfig,
     model-sharded shard_map path and never passes both."""
     from repro.core.collectives import psum_backward, psum_forward
     model_axes = tuple(model_axes)
+    if attn_scores is not None:
+        if attn_scores not in ("fused", "separate"):
+            raise ValueError(f"attn_scores must be 'fused', 'separate' or "
+                             f"None, got {attn_scores!r}")
+        if impl != "flash":
+            raise ValueError(
+                f"attn_scores={attn_scores!r} needs the trainable flash "
+                f"kernel (impl='flash'), got impl={impl!r}")
     bsz, s, _ = x.shape
     hd = cfg.resolved_head_dim
     sharded, h, hkv = (attn_shard_info(params, cfg) if model_axes
@@ -149,9 +168,12 @@ def attn(params: Params, x: jax.Array, cfg: ModelConfig,
     rep = h // hkv
 
     xi = psum_backward(x, model_axes) if sharded else x
-    q = tapped_linear(xi, params["wq"], f"{prefix}.wq", tape)
-    k = tapped_linear(xi, params["wk"], f"{prefix}.wk", tape)
-    v = tapped_linear(xi, params["wv"], f"{prefix}.wv", tape)
+    # with a score tap active, the fused attention-interface score
+    # replaces the wq/wk/wv ghost Gram terms — suppress those taps
+    qkv_tape = None if attn_scores is not None else tape
+    q = tapped_linear(xi, params["wq"], f"{prefix}.wq", qkv_tape)
+    k = tapped_linear(xi, params["wk"], f"{prefix}.wk", qkv_tape)
+    v = tapped_linear(xi, params["wv"], f"{prefix}.wv", qkv_tape)
     q = rope(q.reshape(bsz, s, h, hd), positions, cfg.rope_theta)
     k = rope(k.reshape(bsz, s, hkv, hd), positions, cfg.rope_theta)
     v = v.reshape(bsz, s, hkv, hd)
@@ -162,6 +184,26 @@ def attn(params: Params, x: jax.Array, cfg: ModelConfig,
     if impl == "pallas":
         from repro.kernels import ops
         out = ops.flash_attention(q, k, v, window=cfg.sliding_window)
+        out = out.reshape(bsz, s, h * hd)
+    elif impl == "flash":
+        from repro.kernels import ops
+        if attn_scores is not None:
+            tap = (tape.score_tap(f"{prefix}.qkv_scores", bsz)
+                   if tape is not None else jnp.zeros((bsz,), jnp.float32))
+            if attn_scores == "fused":
+                fa = ops.make_flash_attention_trainable(
+                    window=cfg.sliding_window, with_scores=True)
+                out = fa(q, k, v, tap)
+            else:
+                probe = ops.make_qkv_score_probe()
+                q, k, v = probe(q, k, v, tap)
+                fa = ops.make_flash_attention_trainable(
+                    window=cfg.sliding_window)
+                out = fa(q, k, v)
+        else:
+            fa = ops.make_flash_attention_trainable(
+                window=cfg.sliding_window)
+            out = fa(q, k, v)
         out = out.reshape(bsz, s, h * hd)
     else:
         qg = q.reshape(bsz, s, hkv, rep, hd)

@@ -41,6 +41,25 @@ class Tape:
             y = y + self.taps[name].astype(y.dtype)
         return y
 
+    def score_tap(self, name: str, batch: int) -> jax.Array:
+        """Register a (B,) float32 SCORE side-channel tap and return it.
+
+        Unlike `linear` taps (zeros added to a layer output, whose
+        cotangent is dL/dY), a score tap is an input of a custom-vjp op
+        whose backward rule RETURNS a finished per-example score as the
+        tap's cotangent (see kernels/ops.make_flash_attention_trainable
+        with_scores).  The record entry is a (B, 0) placeholder so the
+        scorer's record walk sees the name; it dispatches on the
+        ``.qkv_scores`` suffix and uses the tap cotangent directly."""
+        if self.records is not None:
+            self.records[name] = jnp.zeros((batch, 0), jnp.float32)
+        if self.tap_shapes is not None:
+            self.tap_shapes[name] = jax.ShapeDtypeStruct((batch,),
+                                                         jnp.float32)
+        if self.taps is not None and name in self.taps:
+            return self.taps[name].astype(jnp.float32)
+        return jnp.zeros((batch,), jnp.float32)
+
 
 def tapped_linear(x: jax.Array, w: jax.Array, name: str,
                   tape: Optional[Tape]) -> jax.Array:

@@ -138,11 +138,17 @@ def _apply_layer(lp: Params, h: jax.Array, cfg: ModelConfig, spec,
                  collector: Optional[dict] = None,
                  attn_impl: str = "ref",
                  model_axes: tuple[str, ...] = (),
-                 seq_shard: bool = False) -> tuple[jax.Array, jax.Array]:
+                 seq_shard: bool = False,
+                 attn_scores: Optional[str] = None) -> tuple[jax.Array, jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     hn = _norm_segment(lp["ln1"], h, cfg, model_axes, seq_shard)
     if spec.mixer == "attn":
         if cfg.attention == "mla":
+            if attn_scores is not None:
+                raise ValueError(
+                    "attn_scores (the fused flash-bwd score tap) is a GQA "
+                    "flash-kernel feature; attention='mla' has no flash "
+                    "backward — use the default ghost taps instead")
             mix = attn_mod.mla(lp["mixer"], hn, cfg, positions, tape,
                                prefix=f"{prefix}.attn", collector=collector,
                                model_axes=model_axes)
@@ -150,7 +156,8 @@ def _apply_layer(lp: Params, h: jax.Array, cfg: ModelConfig, spec,
             mix = attn_mod.attn(lp["mixer"], hn, cfg, positions, tape,
                                 prefix=f"{prefix}.attn", collector=collector,
                                 impl=attn_impl, q_chunk=cfg.attn_chunk,
-                                model_axes=model_axes)
+                                model_axes=model_axes,
+                                attn_scores=attn_scores)
     else:
         mix = ssm_mod.mamba(lp["mixer"], hn, cfg, tape,
                             prefix=f"{prefix}.mamba", mode=ssm_mode,
@@ -180,11 +187,12 @@ def forward(
     collect: bool = False,
     collect_cache: bool = False,
     ssm_mode: str = "ref",
-    attn_impl: str = "ref",                 # "pallas" = flash kernel (fwd-only)
+    attn_impl: str = "ref",                 # "pallas" fwd-only | "flash" trainable
     return_hidden: bool = False,            # skip unembed, return final h
     model_axes: tuple[str, ...] = (),       # mesh axes the params are
     # tensor-sharded over when running inside shard_map; () = replicated
     seq_shard: bool = False,                # sequence-parallel norm segments
+    attn_scores: Optional[str] = None,      # "fused"/"separate" score taps
 ) -> tuple[jax.Array, Aux]:
     """Returns logits (B, S_total, vocab) and Aux.
 
@@ -228,7 +236,8 @@ def forward(
             h, aux = _apply_layer(pp[f"l{i}"], h, cfg, spec, positions,
                                   tape, f"l{i}", ssm_mode, collector=cache,
                                   attn_impl=attn_impl, model_axes=model_axes,
-                                  seq_shard=seq_shard)
+                                  seq_shard=seq_shard,
+                                  attn_scores=attn_scores)
             aux_acc = aux_acc + aux
         ys = (tape.records if collect else 0,
               cache if collect_cache else 0)
@@ -269,8 +278,14 @@ def forward(
                        cache=cache if collect_cache else None)
 
 
-def tap_structure(cfg: ModelConfig, batch: int, seq: int) -> dict:
-    """ShapeDtypeStructs (with the leading period axis) for every tap."""
+def tap_structure(cfg: ModelConfig, batch: int, seq: int,
+                  attn_impl: str = "ref",
+                  attn_scores: Optional[str] = None) -> dict:
+    """ShapeDtypeStructs (with the leading period axis) for every tap.
+
+    ``attn_impl``/``attn_scores`` must match the forward the taps feed:
+    an active score tap replaces the wq/wk/wv taps with one (B,) score
+    tap per attention layer."""
     specs = cfg.layer_specs()
     h = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.dtype(cfg.dtype))
     positions = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
@@ -287,7 +302,8 @@ def tap_structure(cfg: ModelConfig, batch: int, seq: int) -> dict:
         hh = h
         for i, spec in enumerate(specs):
             hh, _ = _apply_layer(layers0[f"l{i}"], hh, cfg, spec, positions,
-                                 tape, f"l{i}", "ref")
+                                 tape, f"l{i}", "ref", attn_impl=attn_impl,
+                                 attn_scores=attn_scores)
         return hh
 
     jax.eval_shape(run, h, positions, layer0)
@@ -302,7 +318,9 @@ def tap_structure(cfg: ModelConfig, batch: int, seq: int) -> dict:
 
 def tap_structure_from_params(params: Params, cfg: ModelConfig, batch: int,
                               seq: int, model_axes: tuple[str, ...] = (),
-                              ssm_mode: str = "ref") -> dict:
+                              ssm_mode: str = "ref",
+                              attn_impl: str = "ref",
+                              attn_scores: Optional[str] = None) -> dict:
     """Tap ShapeDtypeStructs derived from the CONCRETE parameter tree.
 
     `tap_structure` assumes full (replicated) parameter shapes; inside a
@@ -323,7 +341,9 @@ def tap_structure_from_params(params: Params, cfg: ModelConfig, batch: int,
         for i, spec in enumerate(specs):
             hh, _ = _apply_layer(layers0[f"l{i}"], hh, cfg, spec, positions,
                                  tape, f"l{i}", ssm_mode,
-                                 model_axes=model_axes)
+                                 model_axes=model_axes,
+                                 attn_impl=attn_impl,
+                                 attn_scores=attn_scores)
         return hh
 
     jax.eval_shape(run, h, positions)
@@ -336,7 +356,8 @@ def tap_structure_from_params(params: Params, cfg: ModelConfig, batch: int,
     return out
 
 
-def sharded_tap_names(params: Params, cfg: ModelConfig) -> set:
+def sharded_tap_names(params: Params, cfg: ModelConfig,
+                      attn_scores: Optional[str] = None) -> set:
     """Tap names whose ghost contributions are model-axis PARTIAL sums.
 
     Column-sharded layers tap this device's dY slice, row-sharded layers
@@ -365,8 +386,13 @@ def sharded_tap_names(params: Params, cfg: ModelConfig) -> set:
             else:
                 sharded, _, _ = attn_mod.attn_shard_info(lp["mixer"], cfg)
                 if sharded:
-                    names |= {f"l{i}.attn.wq", f"l{i}.attn.wk",
-                              f"l{i}.attn.wv", f"l{i}.attn.wo"}
+                    # the fused score tap replaces the wq/wk/wv taps; its
+                    # (B,) score is computed from this device's LOCAL
+                    # head gradients, so it is a model-axis partial too
+                    names |= ({f"l{i}.attn.qkv_scores", f"l{i}.attn.wo"}
+                              if attn_scores is not None else
+                              {f"l{i}.attn.wq", f"l{i}.attn.wk",
+                               f"l{i}.attn.wv", f"l{i}.attn.wo"})
         else:
             sharded, _ = ssm_mod.mamba_shard_info(lp["mixer"], cfg)
             if sharded:
@@ -439,12 +465,16 @@ def per_example_loss(
     ssm_mode: str = "ref",
     model_axes: tuple[str, ...] = (),
     seq_shard: bool = False,
+    attn_impl: str = "ref",
+    attn_scores: Optional[str] = None,
 ) -> tuple[jax.Array, Aux]:
     """Mean next-token CE per example. batch: {tokens (B,S), [embeds]}.
 
     Frontend embeds (if any) are prepended; loss is computed on the token
     region only.  ``model_axes``/``seq_shard`` thread through `forward`
-    for model-parallel execution inside shard_map.
+    for model-parallel execution inside shard_map; so do
+    ``attn_impl``/``attn_scores`` (the trainable flash kernel and its
+    fused ghost-score tap, see models/attention.attn).
     """
     tokens = batch["tokens"]
     embeds = batch.get("embeds")
@@ -454,7 +484,8 @@ def per_example_loss(
         h, aux = forward(params, cfg, tokens[:, :-1], embeds=embeds,
                          collect=collect, ssm_mode=ssm_mode,
                          return_hidden=True, model_axes=model_axes,
-                         seq_shard=seq_shard)
+                         seq_shard=seq_shard, attn_impl=attn_impl,
+                         attn_scores=attn_scores)
         h = h[:, n_front:]
         mask = batch.get("mask")
         mean_nll, _ = lm_head_metrics(params, cfg, h, targets,
@@ -464,7 +495,8 @@ def per_example_loss(
         return mean_nll, aux
     logits, aux = forward(params, cfg, tokens[:, :-1], embeds=embeds,
                           taps=taps, collect=collect, ssm_mode=ssm_mode,
-                          model_axes=model_axes, seq_shard=seq_shard)
+                          model_axes=model_axes, seq_shard=seq_shard,
+                          attn_impl=attn_impl, attn_scores=attn_scores)
     logits = logits[:, n_front:]
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]

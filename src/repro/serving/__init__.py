@@ -1,3 +1,11 @@
+"""Inference layer: cache-backed decode engine + continuous batching.
+
+``engine`` owns the cache layout (period-major, ring-buffered sliding
+windows) and the prefill/decode_step/generate loop; ``batcher`` schedules
+multi-tenant requests onto cache slots; ``sharded_decode`` is the
+model-parallel decode attention. Serving reuses the training forward's
+mixers, so train/serve parity is tested rather than assumed
+(tests/test_async.py, tests/test_batcher.py)."""
 from repro.serving.engine import (ServeState, init_serve_state, prefill,
                                   decode_step, generate)
 from repro.serving.sharded_decode import sharded_decode_attention

@@ -22,6 +22,7 @@ from repro.serving.engine import (ServeState, decode_step, init_serve_state,
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt tokens plus stop conditions."""
     uid: int
     prompt: jax.Array            # (S,) int32
     max_new_tokens: int = 32

@@ -34,6 +34,7 @@ from repro.models.transformer import forward
 
 
 class ServeState(NamedTuple):
+    """Decode-loop carry: per-layer caches + per-row absolute positions."""
     caches: dict[str, jax.Array]   # name -> (P, ...) cache arrays
     lengths: jax.Array             # (B,) absolute tokens processed
 
@@ -70,6 +71,7 @@ def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int) -> ServeState:
+    """Allocate zeroed caches (see `cache_shapes`) and zero lengths."""
     caches = {k: jnp.zeros(v.shape, v.dtype)
               for k, v in cache_shapes(cfg, batch, max_len).items()}
     return ServeState(caches=caches, lengths=jnp.zeros((batch,), jnp.int32))

@@ -1,9 +1,9 @@
-"""Doc-coverage gate (ISSUE 5 satellite): the contract-bearing packages
-(`core`, `data`, `dist`) must keep module + public-API docstrings at 100%
-— docs/ARCHITECTURE.md points into these modules for the sharding and
-replication contracts, so an undocumented public definition is a missing
-contract.  The same check runs as its own CI leg via
-``python tools/check_docstrings.py``."""
+"""Doc-coverage gate: the contract-bearing packages (`core`, `data`,
+`dist`, `kernels`, `serving`) must keep module + public-API docstrings at
+100% — docs/ARCHITECTURE.md and docs/KERNELS.md point into these modules
+for the sharding, replication, and kernel-parity contracts, so an
+undocumented public definition is a missing contract.  The same check
+runs as its own CI leg via ``python tools/check_docstrings.py``."""
 import os
 import sys
 
@@ -11,8 +11,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "tools"))
 
 
-def test_doc_coverage_core_data_dist():
-    from check_docstrings import check_packages
+def test_doc_coverage_contract_packages():
+    from check_docstrings import DEFAULT_PACKAGES, check_packages
+    assert "src/repro/kernels" in DEFAULT_PACKAGES
+    assert "src/repro/serving" in DEFAULT_PACKAGES
     missing = check_packages(root=REPO)
     assert not missing, "undocumented public definitions:\n" + "\n".join(
         f"  {p}:{ln}: {name}" for p, ln, name in missing)
@@ -34,3 +36,22 @@ def test_architecture_doc_exists_and_is_linked():
                    "dist/sharding.py", "::shard", "relaxed", "fused",
                    "async", "stream"):
         assert anchor in text, f"ARCHITECTURE.md lost its {anchor!r} anchor"
+
+
+def test_kernels_doc_exists_and_is_linked():
+    """docs/KERNELS.md exists, is linked from README and the
+    ARCHITECTURE module table, and keeps its per-kernel anchors."""
+    kdoc = os.path.join(REPO, "docs", "KERNELS.md")
+    assert os.path.exists(kdoc), "docs/KERNELS.md missing"
+    for linker in ("README.md", os.path.join("docs", "ARCHITECTURE.md")):
+        with open(os.path.join(REPO, linker)) as f:
+            assert "KERNELS.md" in f.read(), \
+                f"{linker} does not link docs/KERNELS.md"
+    with open(kdoc) as f:
+        text = f.read()
+    # the doc stays anchored to the kernels (and contracts) it documents
+    for anchor in ("flash_attention_bwd", "per_example_sqnorm",
+                   "ghost_norm", "with_scores", "ref.py", "VMEM",
+                   "bitwise", "GQA", "attn_score_sweep",
+                   "per_example_sqnorm_multi"):
+        assert anchor in text, f"KERNELS.md lost its {anchor!r} anchor"

@@ -221,6 +221,64 @@ def test_transformer_mp_proposal_chi2_matches_single_device():
 
 
 @pytest.mark.stats
+def test_fused_scorer_proposal_chi2_matches_separate():
+    """ISSUE 6: the proposal built from the ghost scorer with the FUSED
+    `with_scores` attention kernels is the SAME multinomial as the
+    separate-pass proposal (the two score paths are bitwise-equal, see
+    test_kernels.py) — scored tables compared exactly, then chi-squared
+    GOF of draws from the fused proposal against the separate-path
+    distribution."""
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import (ISSGDConfig, init_train_state,
+                                  make_train_step)
+    from repro.core.sampler import sample_indices
+    from repro.core.scorer import make_lm_scorer
+    from repro.core.weight_store import read_proposal
+    from repro.data import make_token_dataset
+    from repro.models.config import ModelConfig
+    from repro.models.transformer import init_transformer, per_example_loss
+    from repro.optim import sgd
+
+    cfg = ModelConfig(name='t', arch_type='t', num_layers=2, d_model=24,
+                      num_heads=4, num_kv_heads=2, d_ff=48, vocab_size=64,
+                      dtype='float32', remat=False)
+    train = make_token_dataset(jax.random.key(0), n=256, seq=13,
+                               vocab=cfg.vocab_size)
+    params = init_transformer(jax.random.key(1), cfg)
+    opt = sgd(0.0)   # freeze params: both runs score identical θ
+    tcfg = ISSGDConfig(batch_size=16, score_batch_size=64, mode="relaxed",
+                       is_cfg=ISConfig(smoothing=0.05), score_shards=4)
+    n = train.size
+    pel = lambda p, b: per_example_loss(p, cfg, b, attn_impl="flash")[0]
+    stores = {}
+    for variant in ("fused", "separate"):
+        sc = make_lm_scorer(cfg, "ghost", attn_impl="flash",
+                            attn_scores=variant)
+        step = jax.jit(make_train_step(pel, sc, opt, tcfg, n))
+        st = init_train_state(params, opt, n)
+        for _ in range(4):   # 4 x 64 rows = the whole table scored
+            st, _ = step(st, train.arrays)
+        stores[variant] = st.store
+    np.testing.assert_array_equal(
+        np.asarray(stores["fused"].weights),
+        np.asarray(stores["separate"].weights))
+
+    p_sep = np.asarray(read_proposal(stores["separate"], 4, tcfg.is_cfg),
+                       np.float64)
+    p_sep /= p_sep.sum()
+    prop_f = read_proposal(stores["fused"], 4, tcfg.is_cfg)
+    m_draws = 200_000
+    idx = np.asarray(sample_indices(jax.random.key(11), prop_f, m_draws,
+                                    num_shards=4))
+    counts = np.bincount(idx, minlength=n)
+    expected = m_draws * p_sep
+    assert expected.min() > 20
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    crit = chi2_critical(n - 1)
+    assert chi2 < crit, f"chi2={chi2:.1f} >= crit={crit:.1f}"
+
+
+@pytest.mark.stats
 @pytest.mark.parametrize("devices,score_shards", [(2, 4), (4, 8)])
 def test_two_stage_sample_chi2_gof_sharded(devices, score_shards):
     """The same GOF battery with the table sharded over a real 2/4-device
