@@ -144,9 +144,14 @@ class AsyncPipeline:
 
     def __init__(self, scoring_step: Callable, master_step: Callable,
                  swap_every: int = 1, *, jit: bool = True,
-                 donate: bool = True):
+                 donate: bool = True,
+                 serve_tick: Optional[Callable] = None):
         if swap_every < 1:
             raise ValueError(f"swap_every must be >= 1, got {swap_every}")
+        # serve_tick(state) is interleaved between the scoring and master
+        # dispatches: the serving loop decodes against its published param
+        # snapshot in the window the two training programs overlap
+        self.serve_tick = serve_tick
         if jit:
             # donate write_buf: the table shard is updated in place
             scoring_step = jax.jit(
@@ -167,6 +172,8 @@ class AsyncPipeline:
         bs: BufferedWeightStore = state.store
         write_buf, smetrics = self._scoring(state.stale_params, bs.write_buf,
                                             state.step, data)
+        if self.serve_tick is not None:
+            self.serve_tick(state)
         params, opt_state, stale_params, step, rng, metrics = self._master(
             state.params, state.opt_state, state.stale_params, bs.read_buf,
             state.step, state.rng, data)

@@ -234,7 +234,19 @@ def make_scoring_pass(
         # stale view of the slice BEFORE the write (for eq. 9 monitor)
         pre_proposal = read_proposal(store, step, is_cfg)
         stale_slice = pre_proposal[score_idx]
-        new_store = write_scores(store, score_idx, fresh_scores, step)
+        # reserved serving-capacity rows (scored_at == EMPTY) stay inert:
+        # their scores are forced to 0 and their EMPTY stamp survives the
+        # write, so un-ingested rows never gain proposal mass.  With no
+        # reserved rows in the slice this is the identity dataflow.
+        from repro.core.weight_store import EMPTY
+        live = store.scored_at[score_idx] > EMPTY
+        fresh_scores = jnp.where(live, fresh_scores,
+                                 jnp.zeros_like(fresh_scores))
+        stamp = jnp.where(live,
+                          jnp.broadcast_to(jnp.asarray(step, jnp.int32),
+                                           live.shape),
+                          jnp.asarray(EMPTY, jnp.int32))
+        new_store = write_scores(store, score_idx, fresh_scores, stamp)
         return new_store, fresh_scores, stale_slice
 
     return scoring_pass

@@ -24,6 +24,13 @@ import jax.numpy as jnp
 from repro.core.importance import ISConfig, apply_staleness_filter, smooth_weights
 
 
+# scored_at sentinel for *reserved* rows: capacity pre-allocated for traffic
+# the serving loop has not ingested yet.  Reserved rows are excluded from
+# the proposal (weight forced to 0) and skipped by the scoring fan-out;
+# `mark_live` flips them to -1 ("never scored") once real data lands.
+EMPTY = -2
+
+
 class WeightStore(NamedTuple):
     """The paper's database actor: one unnormalized proposal weight (and
     its staleness timestamp) per training example, example-axis-sharded
@@ -38,6 +45,26 @@ def init_store(num_examples: int, init_weight: float = 0.0) -> WeightStore:
         weights=jnp.full((num_examples,), init_weight, jnp.float32),
         scored_at=jnp.full((num_examples,), -1, jnp.int32),
     )
+
+
+def reserve_tail(store: WeightStore, num_live: int) -> WeightStore:
+    """Mark every row past ``num_live`` as reserved capacity (EMPTY).
+
+    The serving loop pre-allocates store rows for traffic it will ingest
+    later; until `mark_live` stamps them, those rows are invisible to the
+    proposal and inert under scoring."""
+    idx = jnp.arange(store.scored_at.shape[0])
+    return store._replace(scored_at=jnp.where(idx < num_live,
+                                              store.scored_at,
+                                              jnp.asarray(EMPTY, jnp.int32)))
+
+
+def mark_live(store: WeightStore, indices) -> WeightStore:
+    """Flip reserved rows to 'never scored' (-1) once real data lands in
+    them, making them eligible for scoring and (once scored) sampling."""
+    indices = jnp.asarray(indices, jnp.int32)
+    return store._replace(
+        scored_at=store.scored_at.at[indices].set(-1))
 
 
 def write_scores(
@@ -129,9 +156,38 @@ def read_proposal(
 ) -> jax.Array:
     """The master reads the sampling proposal: staleness-filter (B.1) then
     additive smoothing (B.3).  Never-scored entries act as the neutral
-    (uniform) weight, so a cold store reproduces plain SGD exactly."""
+    (uniform) weight, so a cold store reproduces plain SGD exactly.
+    Reserved rows (scored_at == EMPTY, serving-loop capacity not yet
+    ingested) are excluded outright — zero proposal mass."""
     w = apply_staleness_filter(store.weights, store.scored_at, step, cfg)
-    return smooth_weights(w, cfg)
+    q = smooth_weights(w, cfg)
+    return jnp.where(store.scored_at <= EMPTY, jnp.zeros_like(q), q)
+
+
+def mark_live_buffered(bstore: BufferedWeightStore,
+                       indices) -> BufferedWeightStore:
+    """`mark_live` on the *write* buffer only: the newly ingested rows
+    flow to the master's snapshot at the next `publish`, preserving the
+    swap-cadence staleness discipline (read_buf keeps them EMPTY until
+    then, so the proposal never sees rows newer than its snapshot)."""
+    return bstore._replace(write_buf=mark_live(bstore.write_buf, indices))
+
+
+class PublishedParams(NamedTuple):
+    """A consistent parameter snapshot for serving — the model-weights
+    analogue of the proposal's ``read_buf``: serving reads only published
+    snapshots, so under publish cadence K it is at most K steps stale and
+    the PR 2 swap invariant extends verbatim to decode."""
+    params: object          # pytree snapshot (fresh buffers)
+    synced_at: jax.Array    # i32: train step the snapshot was taken at
+
+
+def publish_params(params, step: jax.Array | int) -> PublishedParams:
+    """Snapshot the training params into fresh (sharding-preserving)
+    buffers for serving — same no-alias rationale as `_copy_store`: the
+    training step may donate its param buffers."""
+    return PublishedParams(params=jax.tree.map(jnp.copy, params),
+                           synced_at=jnp.asarray(step, jnp.int32))
 
 
 def staleness_stats(store: WeightStore, step: jax.Array | int) -> dict:

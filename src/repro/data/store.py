@@ -110,6 +110,52 @@ class ChunkedExampleStore:
         per = self.num_chunks // n_shards
         return chunk // per
 
+    # ---- growth (serving-loop traffic ingest) -----------------------------
+
+    def zeros_chunk(self) -> dict[str, np.ndarray]:
+        """A fresh all-zero chunk matching this store's schema."""
+        return {k: np.zeros((self.chunk_size,) + self.row_shape(k),
+                            dtype=self.dtype(k)) for k in self.keys}
+
+    def append_chunk(self, chunk: dict[str, np.ndarray] | None = None) -> int:
+        """Append one chunk (default: zeros) and return its chunk id.
+
+        The global index space extends stably — existing rows keep their
+        indices.  Sharded runs must append *before* chunk ownership is
+        laid out (shard ranges are contiguous slices of num_chunks, so
+        growing the tail would remap every shard's range): the serving
+        loop pre-reserves its traffic capacity up front and fills rows in
+        place with `write_rows`."""
+        chunk = chunk if chunk is not None else self.zeros_chunk()
+        if set(chunk.keys()) != set(self.keys):
+            raise ValueError(f"chunk keys {sorted(chunk)} != store keys "
+                             f"{sorted(self.keys)}")
+        for k, v in chunk.items():
+            want = (self.chunk_size,) + self.row_shape(k)
+            if v.shape != want or v.dtype != self.dtype(k):
+                raise ValueError(
+                    f"chunk array {k!r} is {v.shape}/{v.dtype}, expected "
+                    f"{want}/{self.dtype(k)}")
+        self._chunks.append({k: np.ascontiguousarray(v)
+                             for k, v in chunk.items()})
+        return self.num_chunks - 1
+
+    def write_rows(self, global_idx: np.ndarray,
+                   rows: Mapping[str, np.ndarray]) -> None:
+        """Batched host write at arbitrary global indices (chunk-grouped,
+        the scatter mirror of `fetch_rows`) — the traffic-ingest path."""
+        gidx = np.asarray(global_idx).reshape(-1)
+        if gidx.size and (gidx.min() < 0 or gidx.max() >= self.num_examples):
+            bad = gidx[(gidx < 0) | (gidx >= self.num_examples)]
+            raise IndexError(f"indices out of range [0, {self.num_examples})"
+                             f": {bad[:8]}")
+        cidx, off = index_to_chunk(gidx, self.chunk_size)
+        for c in np.unique(cidx):
+            sel = cidx == c
+            chunk = self._chunks[int(c)]
+            for k in self.keys:
+                chunk[k][off[sel]] = np.asarray(rows[k])[sel]
+
     # ---- reads ------------------------------------------------------------
 
     def chunk(self, c: int) -> dict[str, np.ndarray]:

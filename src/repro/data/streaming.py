@@ -317,9 +317,28 @@ class StreamingDataPlane:
             out_specs=rep,
         ))
 
+    def _sync_store_growth(self) -> None:
+        """Pick up chunks appended to the store after construction: extend
+        the chunk→slot table with -1 (not resident) so the new rows route
+        through the host-fetch path until a prefetch admits their chunks.
+        Sharded planes reject growth — chunk ownership is laid out as
+        contiguous ranges at construction, so the serving loop must
+        pre-reserve its capacity before the mesh placement instead."""
+        grown = self.store.num_chunks - self._chunk_slot.size
+        if grown <= 0:
+            return
+        if self.n_shards > 1:
+            raise ValueError(
+                f"store grew by {grown} chunks under a {self.n_shards}-shard "
+                "plane; append reserve chunks before building the plane "
+                "(growth would remap every shard's contiguous chunk range)")
+        self._chunk_slot = np.concatenate(
+            [self._chunk_slot, np.full((grown,), -1, np.int64)])
+
     def gather_global(self, idx: np.ndarray) -> dict:
         """Resolve global example indices into a replicated device batch:
         window hits on device, misses via one batched host fetch."""
+        self._sync_store_growth()
         idx = np.asarray(idx).reshape(-1)
         cidx, off = index_to_chunk(idx, self.chunk_size)
         slot = self._chunk_slot[cidx]
@@ -366,7 +385,14 @@ class StreamingDataPlane:
         the pending buffer (double-buffered: the live window is untouched
         until ``swap_window``).  Returns whether a new buffer was staged."""
         self._prefetches += 1
+        self._sync_store_growth()
         mass = np.asarray(chunk_mass).reshape(-1)
+        if mass.size < self.store.num_chunks and self.n_shards == 1:
+            # store grew after the mass was computed (single-shard growth):
+            # unseen chunks carry zero proposal mass until rescored
+            mass = np.concatenate(
+                [mass, np.zeros((self.store.num_chunks - mass.size,),
+                                mass.dtype)])
         if mass.size != self.store.num_chunks:
             raise ValueError(f"chunk_mass has {mass.size} entries, store "
                              f"has {self.store.num_chunks} chunks")
@@ -438,10 +464,13 @@ class StreamedISSGD:
                  master_step: Callable, cfg: ISSGDConfig,
                  num_examples: int, *, async_mode: bool = False,
                  swap_every: int = 1, prefetch_every: int = 1,
-                 jit: bool = True):
+                 jit: bool = True, serve_tick: Optional[Callable] = None):
         if swap_every < 1 or prefetch_every < 1:
             raise ValueError("swap_every and prefetch_every must be >= 1")
         self.plane = plane
+        # serve_tick(state) runs between the scoring and master dispatches
+        # (the serving loop's decode slice of each train step)
+        self.serve_tick = serve_tick
         self.cfg = cfg
         self.async_mode = bool(async_mode)
         self.swap_every = int(swap_every)
@@ -496,6 +525,8 @@ class StreamedISSGD:
         else:
             store, fresh, stale, _ = self._scoring(
                 state.stale_params, state.store, state.step, score_rows)
+        if self.serve_tick is not None:
+            self.serve_tick(state)
         idx, mass = self._sample(store, state.step, state.rng)
         batch = self.plane.gather_global(np.asarray(idx))
         margs = (state.params, state.opt_state, state.stale_params, store,
@@ -512,6 +543,8 @@ class StreamedISSGD:
         bs: BufferedWeightStore = state.store
         write_buf, _, _, smetrics = self._scoring(
             state.stale_params, bs.write_buf, state.step, score_rows)
+        if self.serve_tick is not None:
+            self.serve_tick(state)
         idx, mass = self._sample(bs.read_buf, state.step, state.rng)
         batch = self.plane.gather_global(np.asarray(idx))
         params, opt_state, stale_params, _, step, rng, metrics = \

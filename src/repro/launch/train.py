@@ -128,6 +128,17 @@ def validate_flags(ap, args, mp: int) -> None:
     if args.stream and args.mode == "exact":
         ap.error("--stream does not support --mode exact (the oracle "
                  "rescores the full dataset each step; keep it resident)")
+    if args.serve_loop:
+        if not args.stream:
+            ap.error("--serve-loop requires --stream (served traffic is "
+                     "ingested as chunks of the host-resident store)")
+        if args.arch == "mlp_svhn":
+            ap.error("--serve-loop needs a token arch (the decode service "
+                     "generates tokens); pick a transformer --arch")
+        if args.mode not in ("relaxed", "fused"):
+            ap.error("--serve-loop requires --mode relaxed|fused (uniform "
+                     "sampling draws reserved-capacity rows before they "
+                     "are ingested; exact is excluded by --stream)")
     if mp <= 1:
         return
     if args.strategy == "full":
@@ -249,6 +260,32 @@ def main():
     ap.add_argument("--prefetch-every", type=int, default=1,
                     help="stage a fresh proposal-ranked window every K "
                     "steps")
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="close the train/serve loop: run a continuous-"
+                    "batching decode tick each train step against "
+                    "published param snapshots, and ingest finished "
+                    "requests back into the store as scorable examples "
+                    "(requires --stream and a token arch)")
+    ap.add_argument("--serve-slots", type=int, default=2,
+                    help="serve loop: concurrent decode slots")
+    ap.add_argument("--serve-prompt-len", type=int, default=4,
+                    help="serve loop: synthetic-traffic prompt length")
+    ap.add_argument("--serve-max-new", type=int, default=4,
+                    help="serve loop: tokens generated per request")
+    ap.add_argument("--serve-rate", type=int, default=1,
+                    help="serve loop: new requests per serve tick")
+    ap.add_argument("--serve-every", type=int, default=1,
+                    help="serve loop: run a serve tick every K train steps")
+    ap.add_argument("--serve-publish-every", type=int, default=0,
+                    help="serve loop: snapshot train params for serving "
+                    "every K serve ticks (0 = --swap-every, extending the "
+                    "async staleness discipline to decode)")
+    ap.add_argument("--serve-decode-steps", type=int, default=2,
+                    help="serve loop: lock-step decodes per serve tick")
+    ap.add_argument("--serve-reserve-chunks", type=int, default=2,
+                    help="serve loop: zero chunks appended up front as "
+                    "traffic capacity (reserved rows are proposal-"
+                    "invisible until ingested)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
@@ -299,6 +336,7 @@ def main():
     pipe = None
     plane = None
     mesh = None
+    serve = None
     if args.stream:
         import numpy as np
         from repro.data.store import ChunkedExampleStore
@@ -317,6 +355,21 @@ def main():
             csize = next(c for c in range(max(n_local // 8, 1), 0, -1)
                          if n_local % c == 0)
         store = ChunkedExampleStore.from_arrays(data, csize)
+        n_live = n_examples
+        if args.serve_loop:
+            # reserve traffic capacity BEFORE any sharded layout: shard
+            # chunk ranges are contiguous slices of num_chunks, so the
+            # tail must exist up front (store.append_chunk docs)
+            for _ in range(max(args.serve_reserve_chunks, 1)):
+                store.append_chunk()
+            n_examples = store.num_examples
+            if store.num_chunks % n_shards:
+                ap.error(f"--serve-reserve-chunks {args.serve_reserve_chunks}"
+                         f" leaves num_chunks={store.num_chunks} not "
+                         f"divisible by --mesh {n_shards}")
+            from repro.core.weight_store import init_store, reserve_tail
+            state = state._replace(
+                store=reserve_tail(init_store(n_examples), n_live))
         wc = max(1, min(args.window_chunks, store.num_chunks // n_shards))
         # the step programs never take the dataset; drop the monolithic
         # device arrays now that the host store holds the examples —
@@ -348,6 +401,36 @@ def main():
                              prefetch_every=args.prefetch_every)
         if args.mode == "fused":
             probe = pipe.probe
+        if args.serve_loop:
+            from repro.configs import get_config, get_smoke_config
+            from repro.serving import (ContinuousBatcher, ServeLoop,
+                                       TrafficIngest, make_synthetic_traffic)
+            scfg = (get_smoke_config(args.arch) if args.smoke
+                    else get_config(args.arch))
+            serve_max_len = args.serve_prompt_len + args.serve_max_new
+            b_pp = None
+            if mp > 1:
+                from repro.dist.sharding import param_pspecs as _make_pp
+                b_pp = _make_pp(param_specs, params, mesh)
+            batcher = ContinuousBatcher(
+                params, scfg, num_slots=args.serve_slots,
+                max_len=serve_max_len, mesh=mesh, param_pspecs=b_pp)
+            ingest = TrafficIngest(store, seq_len=args.seq + 1,
+                                   start_row=n_live,
+                                   capacity_rows=n_examples - n_live)
+            traffic = make_synthetic_traffic(
+                scfg.vocab_size, args.serve_prompt_len,
+                rate=args.serve_rate, max_new_tokens=args.serve_max_new,
+                seed=args.seed + 7)
+            serve = ServeLoop(
+                batcher, ingest, traffic,
+                publish_every=args.serve_publish_every or args.swap_every,
+                serve_every=args.serve_every,
+                decode_steps=args.serve_decode_steps)
+            pipe.serve_tick = serve.on_train_step
+            print(f"serve-loop: {args.serve_slots} slots, max_len "
+                  f"{serve_max_len}, {n_examples - n_live} reserved rows",
+                  flush=True)
         print(f"streaming: {store.num_chunks} chunks x {csize} rows "
               f"host-resident, window {wc} chunks/shard x {n_shards} "
               f"shard(s)"
@@ -416,6 +499,10 @@ def main():
             state, m = pipe.step(state, data)
         else:
             state, m = step(state, data)
+        if serve is not None:
+            # finished traffic lands in the store between steps, once the
+            # tick's training dispatches have retired (donation safety)
+            state = serve.ingest_into(state)
         if probe is not None and i % args.probe_every == 0:
             state = probe(state, data)
         if i % args.log_every == 0 or i == args.steps - 1:
@@ -431,6 +518,13 @@ def main():
                   f"√TrΣ ideal/stale/unif = {rec['trace_ideal']:.3f}/"
                   f"{rec['trace_stale']:.3f}/{rec['trace_unif']:.3f} "
                   f"ess {rec['ess_frac']:.3f}", flush=True)
+    if serve is not None:
+        print(f"serve-loop: ingested {serve.ingest.ingested} rows "
+              f"({serve.ingest.dropped} dropped, "
+              f"{len(serve.batcher.finished)} requests finished)",
+              flush=True)
+        if history:
+            history[-1]["served_rows"] = int(serve.ingest.ingested)
     if plane is not None:
         s = plane.stats
         print(f"streaming stats: window hit rate {s.hit_rate:.3f} "

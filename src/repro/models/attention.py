@@ -385,7 +385,7 @@ def mla(params: Params, x: jax.Array, cfg: ModelConfig,
         lg += jnp.einsum("bqhd,bkxd->bhqk", qr_c.astype(jnp.float32),
                          k_rope.astype(jnp.float32))
         lg *= scale
-        mask = _causal_window_mask(qp_c, positions, 0)
+        mask = _causal_window_mask(qp_c, positions, cfg.sliding_window)
         lg = jnp.where(mask[:, None], lg, _NEG)
         p = jax.nn.softmax(lg, axis=-1)
         return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(x.dtype)
@@ -403,31 +403,43 @@ def mla(params: Params, x: jax.Array, cfg: ModelConfig,
 
 def mla_decode(params: Params, x: jax.Array, cfg: ModelConfig,
                latent_cache: jax.Array, rope_cache: jax.Array,
-               position: jax.Array, lengths: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+               position: jax.Array, lengths: jax.Array,
+               slot: Optional[jax.Array] = None,
+               model_axes: tuple[str, ...] = ()) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Absorbed one-token MLA decode over the *compressed* cache.
 
     latent_cache: (B, W, kv_lora), rope_cache: (B, W, qk_rope_dim);
     position: (B,) absolute position of the new token; lengths: (B,) valid
-    slots including the new one.  Returns (out (B,D), latent_new, rope_new).
-    """
+    slots including the new one.  ``slot`` (B,) is where the new token is
+    written (defaults to ``lengths - 1``, the linear layout; the engine
+    passes the ring slot ``position mod W``).  Slot order never affects
+    the output — the attention logits sum over cache slots and validity
+    is tracked by ``lengths`` alone.  With ``model_axes`` the per-head
+    expansions run on local heads and the wo output is psum-reduced; the
+    returned latent/rope rows are head-independent, hence replicated.
+    Returns (out (B,D), latent_new, rope_new)."""
+    from repro.core.collectives import psum_forward
     bsz, _ = x.shape
-    h = cfg.num_heads
+    sharded, h = (mla_shard_info(params, cfg) if model_axes
+                  else (False, cfg.num_heads))
     nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     scale = (nope + rdim) ** -0.5
 
     xs = x[:, None, :]  # (B,1,D)
     pos = position[:, None]
     q_nope, q_rope, _, k_rope_new, _, latent_new = _mla_qkv(
-        params, xs, cfg, pos, None, "decode")
+        params, xs, cfg, pos, None, "decode",
+        model_axes=model_axes if sharded else (), h=h)
     # absorb W_kv_b's key half into the query:  q_c = q_nope @ W_k^T (per head)
     wkv_b = params["wkv_b"].reshape(cfg.kv_lora_rank, h, nope + vdim)
+    if slot is None:
+        slot = lengths - 1
     w_k = wkv_b[..., :nope]              # (r, h, nope)
     w_v = wkv_b[..., nope:]              # (r, h, vdim)
     q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                      w_k.astype(jnp.float32))        # (B,h,r)
 
     # write the new token into the cache view (caller persists it)
-    slot = (lengths - 1)
     lc = latent_cache.at[jnp.arange(bsz), slot].set(latent_new[:, 0].astype(latent_cache.dtype))
     rc = rope_cache.at[jnp.arange(bsz), slot].set(k_rope_new[:, 0, 0].astype(rope_cache.dtype))
 
@@ -441,4 +453,6 @@ def mla_decode(params: Params, x: jax.Array, cfg: ModelConfig,
     ctx = jnp.einsum("bhk,bkr->bhr", p, lc.astype(jnp.float32))   # (B,h,r)
     out_h = jnp.einsum("bhr,rhd->bhd", ctx, w_v.astype(jnp.float32))  # (B,h,v)
     out = out_h.reshape(bsz, h * vdim).astype(x.dtype) @ params["wo"]
+    if sharded:
+        out = psum_forward(out, model_axes)
     return out, latent_new[:, 0], k_rope_new[:, 0, 0]

@@ -100,8 +100,17 @@ def mamba_shard_info(params: Params, cfg: ModelConfig) -> tuple[bool, int]:
 def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
           tape: Optional[Tape] = None, prefix: str = "mamba",
           mode: str = "ref", collector: Optional[dict] = None,
-          model_axes: tuple[str, ...] = ()) -> jax.Array:
+          model_axes: tuple[str, ...] = (),
+          pad_mask: Optional[jax.Array] = None) -> jax.Array:
     """Full-sequence mamba mixer. x: (B,S,D) → (B,S,D).
+
+    ``pad_mask`` (B,S) bool marks real (non-pad) positions of a
+    right-padded batch: Δ is zeroed at pad positions, which makes each
+    pad step the exact identity on the recurrent state (h_t =
+    exp(Δ·A)·h_{t-1} + Δ·B·x is h_{t-1} at Δ=0), so the collected decode
+    state matches the unpadded run bitwise; the conv window is gathered
+    from each row's true tail.  ``pad_mask=None`` is the unmasked
+    dataflow, unchanged.
 
     With ``model_axes`` set and channel-sharded weights (inside
     shard_map), the selective scan is embarrassingly parallel over
@@ -141,13 +150,25 @@ def mamba(params: Params, x: jax.Array, cfg: ModelConfig,
     c_mat = proj[..., dtr + ds:]
     delta = jax.nn.softplus(
         dt_r.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])
+    if pad_mask is not None:
+        delta = delta * pad_mask[..., None].astype(delta.dtype)
     a = -jnp.exp(params["a_log"])
 
     if collector is not None:  # prefill: recurrent state for decode
         y, h_final = ref.selective_scan_ref(x_c, delta, a, b_mat, c_mat,
                                             params["d_skip"], return_state=True)
         w = params["conv_w"].shape[0]
-        collector[f"{prefix}.conv"] = x_in[:, -(w - 1):, :]
+        if pad_mask is None:
+            collector[f"{prefix}.conv"] = x_in[:, -(w - 1):, :]
+        else:
+            # per-row gather of the last w-1 *real* inputs (left-zero-pad
+            # rows shorter than the window, matching _causal_conv)
+            tl = jnp.sum(pad_mask.astype(jnp.int32), axis=1)       # (B,)
+            idx = tl[:, None] - (w - 1) + jnp.arange(w - 1)[None]  # (B,w-1)
+            got = jnp.take_along_axis(
+                x_in, jnp.clip(idx, 0, x_in.shape[1] - 1)[..., None], axis=1)
+            collector[f"{prefix}.conv"] = jnp.where(
+                (idx >= 0)[..., None], got, jnp.zeros_like(got))
         collector[f"{prefix}.h"] = h_final
     elif mode == "pallas":
         y = ops.selective_scan(x_c, delta.astype(x_c.dtype), a, b_mat, c_mat,
@@ -172,18 +193,34 @@ def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
 
 
 def mamba_decode(params: Params, x: jax.Array, cfg: ModelConfig,
-                 state: MambaState) -> tuple[jax.Array, MambaState]:
-    """One-token decode. x: (B,D) → (B,D), updated state."""
+                 state: MambaState,
+                 model_axes: tuple[str, ...] = ()) -> tuple[jax.Array, MambaState]:
+    """One-token decode. x: (B,D) → (B,D), updated state.
+
+    With ``model_axes`` and channel-sharded weights the state buffers are
+    local channel blocks; the replicated in_proj output is sliced to this
+    device's block and the row-parallel x_proj / out_proj partial outputs
+    are `psum_forward`-reduced (decode is forward-only, so no backward
+    collectives are needed)."""
+    from repro.core.collectives import axis_info, psum_forward
     di, ds, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    sharded, di_l = (mamba_shard_info(params, cfg) if model_axes
+                     else (False, di))
     w = params["conv_w"].shape[0]
 
     xz = x @ params["in_proj"]
     x_in, z = jnp.split(xz, 2, axis=-1)                     # (B,di)
+    if sharded:
+        dev, _ = axis_info(model_axes)
+        x_in = jax.lax.dynamic_slice_in_dim(x_in, dev * di_l, di_l, -1)
+        z = jax.lax.dynamic_slice_in_dim(z, dev * di_l, di_l, -1)
     window = jnp.concatenate([state.conv, x_in[:, None]], axis=1)  # (B,W,di)
     x_c = jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"]
     x_c = jax.nn.silu(x_c)
 
     proj = x_c @ params["x_proj"]
+    if sharded:
+        proj = psum_forward(proj, model_axes)
     dt_r, b_t, c_t = proj[..., :dtr], proj[..., dtr:dtr + ds], proj[..., dtr + ds:]
     delta = jax.nn.softplus(
         dt_r.astype(jnp.float32) @ params["dt_proj"] + params["dt_bias"])
@@ -192,4 +229,6 @@ def mamba_decode(params: Params, x: jax.Array, cfg: ModelConfig,
                                        params["d_skip"])
     y = y * jax.nn.silu(z)
     out = y @ params["out_proj"]
+    if sharded:
+        out = psum_forward(out, model_axes)
     return out, MambaState(conv=window[:, 1:], h=h)

@@ -139,7 +139,8 @@ def _apply_layer(lp: Params, h: jax.Array, cfg: ModelConfig, spec,
                  attn_impl: str = "ref",
                  model_axes: tuple[str, ...] = (),
                  seq_shard: bool = False,
-                 attn_scores: Optional[str] = None) -> tuple[jax.Array, jax.Array]:
+                 attn_scores: Optional[str] = None,
+                 pad_mask: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
     aux = jnp.zeros((), jnp.float32)
     hn = _norm_segment(lp["ln1"], h, cfg, model_axes, seq_shard)
     if spec.mixer == "attn":
@@ -161,7 +162,8 @@ def _apply_layer(lp: Params, h: jax.Array, cfg: ModelConfig, spec,
     else:
         mix = ssm_mod.mamba(lp["mixer"], hn, cfg, tape,
                             prefix=f"{prefix}.mamba", mode=ssm_mode,
-                            collector=collector, model_axes=model_axes)
+                            collector=collector, model_axes=model_axes,
+                            pad_mask=pad_mask)
     h = h + mix
     if cfg.d_ff == 0:
         return h, aux
@@ -193,6 +195,9 @@ def forward(
     # tensor-sharded over when running inside shard_map; () = replicated
     seq_shard: bool = False,                # sequence-parallel norm segments
     attn_scores: Optional[str] = None,      # "fused"/"separate" score taps
+    pad_mask: Optional[jax.Array] = None,   # (B,S) bool: real positions of a
+    # right-padded batch (bucketed prefill); only the mamba scan needs it —
+    # causal attention is pad-exact for real rows by construction
 ) -> tuple[jax.Array, Aux]:
     """Returns logits (B, S_total, vocab) and Aux.
 
@@ -237,7 +242,8 @@ def forward(
                                   tape, f"l{i}", ssm_mode, collector=cache,
                                   attn_impl=attn_impl, model_axes=model_axes,
                                   seq_shard=seq_shard,
-                                  attn_scores=attn_scores)
+                                  attn_scores=attn_scores,
+                                  pad_mask=pad_mask)
             aux_acc = aux_acc + aux
         ys = (tape.records if collect else 0,
               cache if collect_cache else 0)

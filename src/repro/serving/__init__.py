@@ -3,12 +3,21 @@
 ``engine`` owns the cache layout (period-major, ring-buffered sliding
 windows) and the prefill/decode_step/generate loop; ``batcher`` schedules
 multi-tenant requests onto cache slots; ``sharded_decode`` is the
-model-parallel decode attention. Serving reuses the training forward's
-mixers, so train/serve parity is tested rather than assumed
-(tests/test_async.py, tests/test_batcher.py)."""
+model-parallel decode attention plus the mesh-serving builders; ``loop``
+closes the train/serve loop (published-snapshot decode ticks, traffic
+ingest back into the example store). Serving reuses the training
+forward's mixers, so train/serve parity is tested rather than assumed
+(tests/test_async.py, tests/test_batcher.py, tests/test_serving_loop.py)."""
 from repro.serving.engine import (ServeState, init_serve_state, prefill,
                                   decode_step, generate)
-from repro.serving.sharded_decode import sharded_decode_attention
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.loop import (ServeLoop, TrafficIngest,
+                                make_synthetic_traffic)
+from repro.serving.sharded_decode import (decode_cache_pspecs,
+                                          make_mesh_serving,
+                                          sharded_decode_attention)
 
 __all__ = ["ServeState", "init_serve_state", "prefill", "decode_step",
-           "generate", "sharded_decode_attention"]
+           "generate", "sharded_decode_attention", "ContinuousBatcher",
+           "Request", "ServeLoop", "TrafficIngest", "make_synthetic_traffic",
+           "decode_cache_pspecs", "make_mesh_serving"]

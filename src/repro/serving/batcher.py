@@ -6,6 +6,20 @@ free slots (one dynamic_update_slice per cache buffer), decodes all active
 slots in lock-step, and evicts on EOS/max-tokens.  Per-slot `lengths`
 already drive the attention masking, so slots at different positions
 coexist in one batched decode step.
+
+Compilation discipline: prompts are right-padded to power-of-two buckets
+(`min_bucket` floor) and prefilled with a traced `true_len`, so the
+prefill compiles once per *bucket*, not once per distinct prompt length —
+pinned by `prefill_traces`.  Decode passes an explicit `active` mask so
+evicted slots advance neither their lengths nor their caches (the
+freed-slot freeze), and a request is finished before its next token would
+write past `max_len` when the model has no sliding window (the "reject"
+half of ring-or-reject; ring models keep going).
+
+With ``mesh=`` the batcher drives `sharded_decode.make_mesh_serving`
+instead of the single-device engine: params stay tensor-sharded on the
+training `(data..., model)` mesh (pass the matching ``param_pspecs``) and
+the caches live sharded via `decode_cache_pspecs`.
 """
 from __future__ import annotations
 
@@ -31,12 +45,23 @@ class Request:
 
 @dataclasses.dataclass
 class _Slot:
+    """Per-slot bookkeeping: the resident request and its tokens so far."""
     request: Optional[Request] = None
     generated: list = dataclasses.field(default_factory=list)
+    prompt_len: int = 0
 
     @property
     def free(self) -> bool:
+        """Whether this slot can admit a new request."""
         return self.request is None
+
+
+def _bucket(n: int, min_bucket: int) -> int:
+    """Smallest power of two ≥ max(n, min_bucket)."""
+    b = max(min_bucket, 1)
+    while b < n:
+        b *= 2
+    return b
 
 
 class ContinuousBatcher:
@@ -44,7 +69,9 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg: ModelConfig, num_slots: int,
                  max_len: int, decode_kernel: str = "ref",
-                 sample: Optional[Callable] = None):
+                 sample: Optional[Callable] = None,
+                 prefill_buckets: bool = True, min_bucket: int = 8,
+                 mesh=None, param_pspecs=None):
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -53,12 +80,43 @@ class ContinuousBatcher:
         self.slots = [_Slot() for _ in range(num_slots)]
         self._next_tok = jnp.zeros((num_slots,), jnp.int32)
         self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
-        self._decode = jax.jit(
-            lambda p, t, s: decode_step(p, cfg, t, s,
-                                        decode_kernel=decode_kernel))
-        self._prefill = jax.jit(
-            lambda p, t: prefill(p, cfg, t, max_len=max_len))
+        self.prefill_buckets = prefill_buckets
+        self.min_bucket = min_bucket
+        self.prefill_traces = 0
+
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.serving.sharded_decode import (decode_cache_pspecs,
+                                                      make_mesh_serving)
+            cspecs = decode_cache_pspecs(cfg, mesh)
+            self.state = ServeState(
+                caches={k: jax.device_put(v, NamedSharding(mesh, cspecs[k]))
+                        for k, v in self.state.caches.items()},
+                lengths=jax.device_put(self.state.lengths,
+                                       NamedSharding(mesh, P())))
+            pre, dec = make_mesh_serving(cfg, mesh, max_len,
+                                         param_pspecs=param_pspecs,
+                                         decode_kernel=decode_kernel)
+        else:
+            def pre(p, t, tl):
+                return prefill(p, cfg, t, max_len, true_len=tl)
+
+            def dec(p, t, s, a):
+                return decode_step(p, cfg, t, s, decode_kernel=decode_kernel,
+                                   active=a)
+
+        def _counted_pre(p, t, tl):
+            self.prefill_traces += 1
+            return pre(p, t, tl)
+
+        self._prefill = jax.jit(_counted_pre)
+        self._decode = jax.jit(dec)
         self.finished: dict[int, list[int]] = {}
+        self.completed: list[tuple[Request, list[int]]] = []
+
+    def _active_mask(self) -> jax.Array:
+        """(num_slots,) bool: which slots currently hold a request."""
+        return jnp.asarray([not s.free for s in self.slots])
 
     # ------------------------------------------------------------- admission
     def try_insert(self, req: Request) -> bool:
@@ -66,7 +124,12 @@ class ContinuousBatcher:
         slot_id = next((i for i, s in enumerate(self.slots) if s.free), None)
         if slot_id is None:
             return False
-        logits, st1 = self._prefill(self.params, req.prompt[None])
+        prompt = jnp.asarray(req.prompt, jnp.int32)
+        s = int(prompt.shape[0])
+        b = _bucket(s, self.min_bucket) if self.prefill_buckets else s
+        padded = jnp.pad(prompt, (0, b - s))
+        logits, st1 = self._prefill(self.params, padded[None],
+                                    jnp.asarray(s, jnp.int32))
         # splice the single-sequence caches/length into the batch state
         caches = dict(self.state.caches)
         for name, buf in caches.items():
@@ -76,7 +139,8 @@ class ContinuousBatcher:
         self.state = ServeState(caches=caches, lengths=lengths)
         tok = self.sample(logits)[0].astype(jnp.int32)
         self._next_tok = self._next_tok.at[slot_id].set(tok)
-        self.slots[slot_id] = _Slot(request=req, generated=[int(tok)])
+        self.slots[slot_id] = _Slot(request=req, generated=[int(tok)],
+                                    prompt_len=s)
         return True
 
     # ----------------------------------------------------------------- step
@@ -86,23 +150,33 @@ class ContinuousBatcher:
         if not active:
             return 0
         logits, self.state = self._decode(self.params, self._next_tok,
-                                          self.state)
+                                          self.state, self._active_mask())
         toks = self.sample(logits).astype(jnp.int32)
         self._next_tok = toks
         for i in active:
             slot = self.slots[i]
             tok = int(toks[i])
             slot.generated.append(tok)
+            total = slot.prompt_len + len(slot.generated)
             done = (len(slot.generated) >= slot.request.max_new_tokens or
-                    tok == slot.request.eos_id)
+                    tok == slot.request.eos_id or
+                    # reject: a full-attention cache must not wrap its ring
+                    (self.cfg.sliding_window <= 0 and total >= self.max_len))
             if done:
                 self.finished[slot.request.uid] = slot.generated
+                self.completed.append((slot.request, list(slot.generated)))
                 self.slots[i] = _Slot()
                 # freeze the freed slot (its cache entries are dead weight
-                # until the next insert overwrites them)
+                # until the next insert overwrites them; the active mask
+                # keeps decode from touching them meanwhile)
                 self.state = self.state._replace(
                     lengths=self.state.lengths.at[i].set(0))
         return len([s for s in self.slots if not s.free])
+
+    def drain_completed(self) -> list[tuple[Request, list[int]]]:
+        """Return and clear finished (request, generated) pairs in order."""
+        out, self.completed = self.completed, []
+        return out
 
     def run(self, requests: list[Request], max_steps: int = 10_000) -> dict:
         """Serve a request list to completion (greedy admission)."""

@@ -9,13 +9,28 @@ scans over periods exactly like training does):
   Mamba conv    (P, B, conv_w-1, d_inner)   constant-size recurrent state
         h       (P, B, d_inner, d_state)
 
-Sliding-window caches are ring buffers: slot = position mod W.  RoPE is
+Every attention cache is a ring buffer: slot = position mod W.  RoPE is
 applied at write time with absolute positions, so ring reordering is
 harmless (softmax is permutation-invariant; validity is tracked by
 `lengths` alone because a full ring holds exactly the last W tokens).
+This holds for the MLA latent cache too — the absorbed-decode logits are
+a sum over cache slots, so slot order never matters.  For full-attention
+configs a wrapped ring silently forgets the oldest context; the batcher
+enforces the "reject" half of ring-or-reject by finishing a request
+before its total length would exceed `max_len` (see
+serving/batcher.ContinuousBatcher).
 
 `decode_kernel="pallas"` routes GQA cache attention through the
 flash-decode Pallas kernel; "ref" uses the jnp oracle (CPU / dry-run).
+
+Model parallelism: `decode_step`/`prefill` accept ``model_axes`` for use
+inside shard_map on a `(data..., model)` mesh — the same whole-head /
+channel-block tensor sharding as training (each sub-layer detects its own
+shardedness from local parameter shapes via `attn_shard_info` /
+`mla_shard_info` / `mamba_shard_info`).  GQA k/v caches shard their Hkv
+axis and mamba states their channel axis; the MLA latent/rope caches are
+replicated (they are head-independent).  `sharded_decode.make_mesh_serving`
+builds the shard_map wrappers with the matching cache PartitionSpecs.
 """
 from __future__ import annotations
 
@@ -53,10 +68,12 @@ def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     for i, spec in enumerate(cfg.layer_specs()):
         if spec.mixer == "attn":
             if cfg.attention == "mla":
+                # same ring-or-reject sizing as GQA: a configured sliding
+                # window bounds the cache, full attention gets max_len
                 out[f"l{i}.attn.latent"] = jax.ShapeDtypeStruct(
-                    (p, batch, max_len, cfg.kv_lora_rank), dtype)
+                    (p, batch, w, cfg.kv_lora_rank), dtype)
                 out[f"l{i}.attn.rope"] = jax.ShapeDtypeStruct(
-                    (p, batch, max_len, cfg.qk_rope_dim), dtype)
+                    (p, batch, w, cfg.qk_rope_dim), dtype)
             else:
                 kv = (p, batch, w, cfg.num_kv_heads, hd)
                 out[f"l{i}.attn.k"] = jax.ShapeDtypeStruct(kv, dtype)
@@ -79,11 +96,19 @@ def init_serve_state(cfg: ModelConfig, batch: int, max_len: int) -> ServeState:
 
 # ------------------------------------------------------------------ decode
 def _gqa_decode(lp, hn, cfg: ModelConfig, k_cache, v_cache, pos, window,
-                decode_kernel: str):
-    """hn: (B,D); caches (B,W,Hkv,hd); pos: (B,) absolute position."""
+                decode_kernel: str, active: Optional[jax.Array] = None,
+                model_axes: tuple[str, ...] = ()):
+    """hn: (B,D); caches (B,W,Hkv,hd); pos: (B,) absolute position.
+
+    ``active`` (B,) bool masks the cache write for evicted batcher slots
+    (None = all rows live, the exact seed dataflow).  With ``model_axes``
+    the projections are whole-head sharded (local Hkv caches) and the
+    row-parallel wo output is psum-reduced."""
+    from repro.core.collectives import psum_forward
     bsz = hn.shape[0]
     hd = cfg.resolved_head_dim
-    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    sharded, h, hkv = (attn_mod.attn_shard_info(lp, cfg) if model_axes
+                       else (False, cfg.num_heads, cfg.num_kv_heads))
 
     q = (hn @ lp["wq"]).reshape(bsz, h, hd)
     k_new = (hn @ lp["wk"]).reshape(bsz, hkv, hd)
@@ -93,8 +118,14 @@ def _gqa_decode(lp, hn, cfg: ModelConfig, k_cache, v_cache, pos, window,
 
     slot = pos % window
     barange = jnp.arange(bsz)
-    k_cache = k_cache.at[barange, slot].set(k_new.astype(k_cache.dtype))
-    v_cache = v_cache.at[barange, slot].set(v_new.astype(v_cache.dtype))
+    k_w = k_new.astype(k_cache.dtype)
+    v_w = v_new.astype(v_cache.dtype)
+    if active is not None:
+        keep = active[:, None, None]
+        k_w = jnp.where(keep, k_w, k_cache[barange, slot])
+        v_w = jnp.where(keep, v_w, v_cache[barange, slot])
+    k_cache = k_cache.at[barange, slot].set(k_w)
+    v_cache = v_cache.at[barange, slot].set(v_w)
     lengths = jnp.minimum(pos + 1, window)
 
     if decode_kernel == "pallas":
@@ -102,20 +133,32 @@ def _gqa_decode(lp, hn, cfg: ModelConfig, k_cache, v_cache, pos, window,
     else:
         o = ref.decode_attention_ref(q, k_cache, v_cache, lengths)
     out = o.reshape(bsz, h * hd) @ lp["wo"]
+    if sharded:
+        out = psum_forward(out, model_axes)
     return out, k_cache, v_cache
 
 
 def decode_step(params, cfg: ModelConfig, tokens: jax.Array,
                 state: ServeState, decode_kernel: str = "ref",
-                max_len: Optional[int] = None):
-    """One new token per sequence. tokens: (B,) → (logits (B,V), state)."""
+                active: Optional[jax.Array] = None,
+                model_axes: tuple[str, ...] = ()):
+    """One new token per sequence. tokens: (B,) → (logits (B,V), state).
+
+    ``active`` (B,) bool gates rows the batcher has evicted: inactive
+    rows advance neither their length nor any cache buffer (their logits
+    are garbage and discarded by the caller).  With ``active=None`` every
+    row is live and the dataflow is bitwise the unmasked one.  Every
+    cache write casts to its *own target buffer's* dtype, so hybrid
+    stacks with mixed-precision caches (e.g. an f32 mamba `h` next to a
+    low-precision MLA latent) round-trip each buffer correctly regardless
+    of dict ordering."""
     specs = cfg.layer_specs()
     caches = state.caches
     pos = state.lengths                          # (B,)
     bsz = tokens.shape[0]
-    any_cache = next(iter(caches.values()))
     # window is static: recover it from the cache buffers themselves
-    h = embed(params["embed"], tokens[:, None], cfg)[:, 0]   # (B,D)
+    h = embed(params["embed"], tokens[:, None], cfg,
+              model_axes=model_axes)[:, 0]       # (B,D)
 
     def period_body(h, per):
         pp, pc = per
@@ -125,80 +168,144 @@ def decode_step(params, cfg: ModelConfig, tokens: jax.Array,
             hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
             if spec.mixer == "attn":
                 if cfg.attention == "mla":
+                    lat = pc[f"l{i}.attn.latent"]
+                    rp = pc[f"l{i}.attn.rope"]
+                    # ring discipline, same as GQA: slot = pos mod W and a
+                    # full ring is entirely valid (absolute-position RoPE
+                    # at write time keeps reordering harmless)
+                    w_mla = lat.shape[1]
+                    slot = pos % w_mla
+                    valid = jnp.minimum(pos + 1, w_mla)
                     out, latent_new, rope_new = attn_mod.mla_decode(
-                        lp["mixer"], hn, cfg,
-                        pc[f"l{i}.attn.latent"], pc[f"l{i}.attn.rope"],
-                        pos, pos + 1)
-                    slot = pos
+                        lp["mixer"], hn, cfg, lat, rp, pos, valid,
+                        slot=slot, model_axes=model_axes)
                     ar = jnp.arange(bsz)
-                    new_pc[f"l{i}.attn.latent"] = pc[f"l{i}.attn.latent"].at[
-                        ar, slot].set(latent_new.astype(any_cache.dtype))
-                    new_pc[f"l{i}.attn.rope"] = pc[f"l{i}.attn.rope"].at[
-                        ar, slot].set(rope_new.astype(any_cache.dtype))
+                    lat_w = latent_new.astype(lat.dtype)
+                    rp_w = rope_new.astype(rp.dtype)
+                    if active is not None:
+                        lat_w = jnp.where(active[:, None], lat_w,
+                                          lat[ar, slot])
+                        rp_w = jnp.where(active[:, None], rp_w,
+                                         rp[ar, slot])
+                    new_pc[f"l{i}.attn.latent"] = lat.at[ar, slot].set(lat_w)
+                    new_pc[f"l{i}.attn.rope"] = rp.at[ar, slot].set(rp_w)
                 else:
                     w = pc[f"l{i}.attn.k"].shape[1]
                     out, kc, vc = _gqa_decode(
                         lp["mixer"], hn, cfg, pc[f"l{i}.attn.k"],
-                        pc[f"l{i}.attn.v"], pos, w, decode_kernel)
+                        pc[f"l{i}.attn.v"], pos, w, decode_kernel,
+                        active=active, model_axes=model_axes)
                     new_pc[f"l{i}.attn.k"] = kc
                     new_pc[f"l{i}.attn.v"] = vc
             else:
                 mstate = ssm_mod.MambaState(conv=pc[f"l{i}.mamba.conv"],
                                             h=pc[f"l{i}.mamba.h"])
-                out, mstate = ssm_mod.mamba_decode(lp["mixer"], hn, cfg, mstate)
-                new_pc[f"l{i}.mamba.conv"] = mstate.conv
-                new_pc[f"l{i}.mamba.h"] = mstate.h
+                out, mstate = ssm_mod.mamba_decode(lp["mixer"], hn, cfg,
+                                                   mstate,
+                                                   model_axes=model_axes)
+                conv_w, h_w = mstate.conv, mstate.h
+                if active is not None:
+                    keep = active[:, None, None]
+                    conv_w = jnp.where(keep, conv_w, pc[f"l{i}.mamba.conv"])
+                    h_w = jnp.where(keep, h_w, pc[f"l{i}.mamba.h"])
+                new_pc[f"l{i}.mamba.conv"] = conv_w
+                new_pc[f"l{i}.mamba.h"] = h_w
             h = h + out
             if cfg.d_ff > 0:
                 hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
                 if spec.ff == "moe":
                     ff = moe_mod.moe(lp["ff"], hn[:, None], cfg,
-                                     dropless=True).y[:, 0]
+                                     dropless=True,
+                                     model_axes=model_axes).y[:, 0]
                 else:
-                    ff = mlp(lp["ff"], hn[:, None], cfg)[:, 0]
+                    ff = mlp(lp["ff"], hn[:, None], cfg,
+                             model_axes=model_axes)[:, 0]
                 h = h + ff
         return h, new_pc
 
     h, new_caches = jax.lax.scan(period_body, h, (params["layers"], caches))
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = unembed(params["embed"], h, cfg)
-    return logits, ServeState(caches=new_caches, lengths=state.lengths + 1)
+    logits = unembed(params["embed"], h, cfg, model_axes=model_axes)
+    new_lengths = (state.lengths + 1 if active is None
+                   else jnp.where(active, state.lengths + 1, state.lengths))
+    return logits, ServeState(caches=new_caches, lengths=new_lengths)
 
 
 # ----------------------------------------------------------------- prefill
 def prefill(params, cfg: ModelConfig, tokens: jax.Array, max_len: int,
-            embeds: Optional[jax.Array] = None, attn_impl: str = "ref"):
+            embeds: Optional[jax.Array] = None, attn_impl: str = "ref",
+            true_len: Optional[jax.Array] = None,
+            model_axes: tuple[str, ...] = ()):
     """Process the prompt and build decode caches.
 
     tokens: (B, S_prompt).  Returns (last_logits (B,V), ServeState).
     attn_impl="pallas" routes prefill attention through the flash kernel.
+
+    ``true_len`` (a traced int32 scalar) enables *bucketed* prefill: the
+    prompt arrives right-padded to a fixed bucket length S and only the
+    first ``true_len`` tokens are real — so the batcher compiles one
+    prefill per bucket, not one per distinct prompt length.  Correctness
+    under right padding: causal attention never lets a real query see a
+    padded key (pad positions are strictly later), and the mamba scan is
+    made exact by zeroing Δ at pad positions (h_t = exp(Δ·A)h_{t-1} +
+    Δ·B·x is the identity at Δ=0), with the conv window gathered at the
+    true tail.  Cache placement resolves, per slot s of a cap-W buffer,
+    the source position ``s + W·⌊(true_len−1−s)/W⌋`` — which is both the
+    plain copy (true_len ≤ W) and the ring layout (true_len > W) the
+    decode step's ``slot = pos mod W`` continues from.  One caveat:
+    capacity-routed MoE prefill sees the pad tokens compete for expert
+    capacity, so padded MoE routing can differ from the unpadded run
+    (decode always routes dropless).
+
+    ``model_axes`` threads the tensor-sharded forward for use inside
+    shard_map (see `sharded_decode.make_mesh_serving`).
     """
     bsz, s = tokens.shape
+    pad_mask = None
+    if true_len is not None:
+        if embeds is not None:
+            raise ValueError("true_len (bucketed prefill) does not compose "
+                             "with frontend embeds")
+        true_len = jnp.asarray(true_len, jnp.int32)
+        pad_mask = jnp.broadcast_to(jnp.arange(s)[None] < true_len, (bsz, s))
     logits, aux = forward(params, cfg, tokens, embeds=embeds,
-                          collect_cache=True, attn_impl=attn_impl)
+                          collect_cache=True, attn_impl=attn_impl,
+                          model_axes=model_axes, pad_mask=pad_mask)
     n_front = embeds.shape[1] if embeds is not None else 0
     s_total = s + n_front
-    w = _window(cfg, max_len)
     shapes = cache_shapes(cfg, bsz, max_len)
     caches = {}
     for name, sds in shapes.items():
         got = aux.cache[name]                   # (P, B, S_total, ...) or state
-        buf = jnp.zeros(sds.shape, sds.dtype)
         if ".mamba." in name:
             caches[name] = got.astype(sds.dtype)
             continue
         cap = sds.shape[2]                      # W or max_len
-        if s_total <= cap:
-            buf = jax.lax.dynamic_update_slice_in_dim(
-                buf, got.astype(sds.dtype), 0, axis=2)
-        else:  # ring placement of the last `cap` positions
-            tail = got[:, :, -cap:]
-            positions = (jnp.arange(s_total - cap, s_total)) % cap
-            buf = buf.at[:, :, positions].set(tail.astype(sds.dtype))
+        # trailing dims come from the collected cache itself so the same
+        # code serves local (model-sharded) head/channel blocks
+        buf = jnp.zeros(sds.shape[:3] + got.shape[3:], sds.dtype)
+        if true_len is None:
+            if s_total <= cap:
+                buf = jax.lax.dynamic_update_slice_in_dim(
+                    buf, got.astype(sds.dtype), 0, axis=2)
+            else:  # ring placement of the last `cap` positions
+                tail = got[:, :, -cap:]
+                positions = (jnp.arange(s_total - cap, s_total)) % cap
+                buf = buf.at[:, :, positions].set(tail.astype(sds.dtype))
+        else:
+            sidx = jnp.arange(cap)
+            src = sidx + cap * ((true_len - 1 - sidx) // cap)
+            take = jnp.take(got, jnp.clip(src, 0, got.shape[2] - 1), axis=2)
+            vmask = (src >= 0).reshape((1, 1, cap) + (1,) * (got.ndim - 3))
+            buf = jnp.where(vmask, take.astype(sds.dtype), buf)
         caches[name] = buf
-    st = ServeState(caches=caches,
-                    lengths=jnp.full((bsz,), s_total, jnp.int32))
-    return logits[:, -1], st
+    if true_len is None:
+        lengths = jnp.full((bsz,), s_total, jnp.int32)
+        last = logits[:, -1]
+    else:
+        lengths = jnp.full((bsz,), true_len, jnp.int32)
+        last = jnp.take(logits, true_len - 1, axis=1)
+    return last, ServeState(caches=caches, lengths=lengths)
 
 
 def generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int,

@@ -1,0 +1,182 @@
+"""The train/serve loop: decode on the training mesh, traffic back into
+the store.
+
+This is the paper's deployment story made concrete.  Three actors:
+
+  * **ServeLoop** — a serve tick hooked between the scoring and master
+    dispatches of each train step (`AsyncPipeline`/`StreamedISSGD`
+    ``serve_tick``).  It decodes through a `ContinuousBatcher` against a
+    `PublishedParams` snapshot — the model-weights analogue of the
+    proposal's ``read_buf``: serving reads only published snapshots, so
+    under publish cadence K it is at most K train steps stale, and the
+    PR 2 swap invariant ("async ≡ relaxed with an L-step-staler
+    proposal") extends verbatim to decode (pinned in
+    tests/test_async.py::test_serve_snapshot_equals_explicit_stale_checkpoint).
+  * **TrafficIngest** — finished requests (prompt + generated tokens)
+    become store rows: written host-side into *pre-reserved* capacity
+    chunks of the `ChunkedExampleStore` (reserved before any sharded
+    placement, so chunk ownership never remaps), then flipped live in
+    the WeightStore (`mark_live`: scored_at EMPTY → -1).  From there the
+    round-robin scoring fan-out stamps and weights them like any other
+    data, and they enter the two-stage proposal — live traffic reshaping
+    the sampling distribution.
+  * **make_synthetic_traffic** — the stand-in for "millions of users": a
+    seeded request generator for smokes and tests.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.weight_store import (BufferedWeightStore, mark_live,
+                                     mark_live_buffered, publish_params)
+from repro.serving.batcher import ContinuousBatcher, Request
+
+
+class TrafficIngest:
+    """Turn finished requests into store rows at a reserved-capacity
+    watermark.
+
+    Rows are ``prompt + generated`` token sequences zero-padded (or
+    truncated) to ``seq_len``, written host-side via
+    `ChunkedExampleStore.write_rows` into the index range
+    ``[start_row, start_row + capacity_rows)``.  ``flush`` returns the
+    global indices just written so the caller can `mark_live` them in the
+    WeightStore; traffic past capacity is counted in ``dropped``."""
+
+    def __init__(self, store, seq_len: int, start_row: int,
+                 capacity_rows: int, label_key: Optional[str] = None):
+        self.store = store
+        self.seq_len = int(seq_len)
+        self.start_row = int(start_row)
+        self.capacity_rows = int(capacity_rows)
+        self.label_key = label_key
+        self.ingested = 0
+        self.dropped = 0
+        self._pending: list[np.ndarray] = []
+
+    def add(self, prompt, generated) -> None:
+        """Queue one finished request (prompt tokens + generated tokens)."""
+        toks = np.concatenate([np.asarray(prompt).reshape(-1),
+                               np.asarray(generated).reshape(-1)])
+        row = np.zeros((self.seq_len,),
+                       dtype=self.store.dtype(self._tokens_key()))
+        toks = toks[:self.seq_len]
+        row[:toks.size] = toks
+        self._pending.append(row)
+
+    def _tokens_key(self) -> str:
+        keys = self.store.keys
+        if "tokens" in keys:
+            return "tokens"
+        if len(keys) == 1:
+            return keys[0]
+        raise ValueError(f"cannot pick a token key from {keys}; expected a "
+                         "'tokens' array in the store schema")
+
+    def flush(self) -> np.ndarray:
+        """Write queued rows at the watermark; return their global indices
+        (empty when nothing fit).  LM stores carry next-token labels, so a
+        ``label_key`` array gets the shifted row."""
+        if not self._pending:
+            return np.zeros((0,), np.int64)
+        room = max(0, self.capacity_rows - self.ingested)
+        rows, overflow = self._pending[:room], self._pending[room:]
+        self._pending = []
+        self.dropped += len(overflow)
+        if not rows:
+            return np.zeros((0,), np.int64)
+        idx = self.start_row + self.ingested + np.arange(len(rows))
+        tok = np.stack(rows)
+        payload = {self._tokens_key(): tok}
+        if self.label_key is not None and self.label_key in self.store.keys:
+            lab = np.zeros_like(tok)
+            lab[:, :-1] = tok[:, 1:]
+            payload[self.label_key] = lab.astype(self.store.dtype(self.label_key))
+        for k in self.store.keys:
+            if k not in payload:
+                payload[k] = np.zeros((tok.shape[0],) + self.store.row_shape(k),
+                                      dtype=self.store.dtype(k))
+        self.store.write_rows(idx, payload)
+        self.ingested += len(rows)
+        return idx
+
+
+def make_synthetic_traffic(vocab: int, prompt_len: int, rate: int = 1,
+                           max_new_tokens: int = 8, seed: int = 0) -> Callable:
+    """A seeded request source: ``traffic(tick) -> [Request, ...]`` with
+    ``rate`` random-token prompts per tick — the smoke/test stand-in for
+    live user traffic."""
+    rng = np.random.default_rng(seed)
+    uids = itertools.count()
+
+    def traffic(tick: int) -> list[Request]:
+        return [Request(uid=next(uids),
+                        prompt=rng.integers(0, vocab, size=(prompt_len,),
+                                            dtype=np.int32),
+                        max_new_tokens=max_new_tokens)
+                for _ in range(rate)]
+
+    return traffic
+
+
+class ServeLoop:
+    """Drive a ContinuousBatcher as a serve tick inside the train loop.
+
+    ``on_train_step(state)`` (hook it as the pipeline's ``serve_tick``)
+    refreshes the batcher's `PublishedParams` snapshot every
+    ``publish_every`` ticks, admits new traffic, and runs ``decode_steps``
+    lock-step decodes.  ``ingest_into(state)`` — called between steps,
+    once the training dispatches of the tick have retired — drains
+    finished requests into the store via `TrafficIngest` and flips their
+    WeightStore rows live (on ``write_buf`` for a BufferedWeightStore, so
+    the rows reach the master only through `publish`, preserving the
+    swap-cadence staleness discipline)."""
+
+    def __init__(self, batcher: ContinuousBatcher, ingest: TrafficIngest,
+                 traffic: Callable, publish_every: int = 1,
+                 serve_every: int = 1, decode_steps: int = 1):
+        if publish_every < 1 or serve_every < 1:
+            raise ValueError("publish_every and serve_every must be >= 1")
+        self.batcher = batcher
+        self.ingest = ingest
+        self.traffic = traffic
+        self.publish_every = int(publish_every)
+        self.serve_every = int(serve_every)
+        self.decode_steps = int(decode_steps)
+        self.published = None          # PublishedParams snapshot
+        self.pending: list[Request] = []
+        self._tick = 0
+
+    def on_train_step(self, state) -> None:
+        """The serve tick: snapshot params on cadence, admit, decode."""
+        t = self._tick
+        self._tick += 1
+        if t % self.serve_every:
+            return
+        if self.published is None or (t // self.serve_every) % self.publish_every == 0:
+            self.published = publish_params(state.params, state.step)
+            self.batcher.params = self.published.params
+        self.pending.extend(self.traffic(t))
+        while self.pending and self.batcher.try_insert(self.pending[0]):
+            self.pending.pop(0)
+        for _ in range(self.decode_steps):
+            self.batcher.step()
+
+    def ingest_into(self, state):
+        """Drain finished requests into the example store + WeightStore;
+        returns the state with newly live rows (same state when no
+        traffic finished)."""
+        for req, generated in self.batcher.drain_completed():
+            self.ingest.add(req.prompt, generated)
+        idx = self.ingest.flush()
+        if idx.size == 0:
+            return state
+        store = state.store
+        if isinstance(store, BufferedWeightStore):
+            store = mark_live_buffered(store, idx)
+        else:
+            store = mark_live(store, idx)
+        return state._replace(store=store)

@@ -83,3 +83,85 @@ def sharded_decode_attention(
         in_specs=(P(), kv_spec, kv_spec, P()),
         out_specs=P(),
     )(q, k, v, lengths)
+
+
+# ------------------------------------------------- model-axis (mp) serving
+def decode_cache_pspecs(cfg, mesh: Mesh) -> dict:
+    """PartitionSpecs for every decode cache on a `(data..., model)` mesh.
+
+    GQA k/v caches shard their KV-head axis and mamba states their
+    channel axis over the model axes — matching the whole-head / block
+    tensor sharding of the params; MLA latent/rope caches are replicated
+    (head-independent).  The batch (slot) axis is replicated everywhere.
+    Raises when the model-parallel degree does not divide the sharded
+    dimension of a present layer type."""
+    from repro.dist.sharding import dim_spec, model_axes
+    maxes = model_axes(mesh)
+    m = 1
+    for ax in maxes:
+        m *= mesh.shape[ax]
+    ms = dim_spec(maxes)
+    out: dict = {}
+    for i, spec in enumerate(cfg.layer_specs()):
+        if spec.mixer == "attn":
+            if cfg.attention == "mla":
+                if cfg.num_heads % m:
+                    raise ValueError(
+                        f"model-parallel degree {m} must divide num_heads "
+                        f"({cfg.num_heads}) for MLA decode")
+                out[f"l{i}.attn.latent"] = P()
+                out[f"l{i}.attn.rope"] = P()
+            else:
+                if cfg.num_kv_heads % m or cfg.num_heads % m:
+                    raise ValueError(
+                        f"model-parallel degree {m} must divide num_heads "
+                        f"({cfg.num_heads}) and num_kv_heads "
+                        f"({cfg.num_kv_heads}) for GQA decode")
+                out[f"l{i}.attn.k"] = P(None, None, None, ms, None)
+                out[f"l{i}.attn.v"] = P(None, None, None, ms, None)
+        else:
+            if cfg.resolved_d_inner % m:
+                raise ValueError(
+                    f"model-parallel degree {m} must divide d_inner "
+                    f"({cfg.resolved_d_inner}) for mamba decode")
+            out[f"l{i}.mamba.conv"] = P(None, None, None, ms)
+            out[f"l{i}.mamba.h"] = P(None, None, ms, None)
+    return out
+
+
+def make_mesh_serving(cfg, mesh: Mesh, max_len: int,
+                      param_pspecs=None, decode_kernel: str = "ref"):
+    """Build (prefill_fn, decode_fn) running on the training mesh.
+
+    Both are shard_map-wrapped (unjitted — the batcher jits them) over
+    the full `(data..., model)` mesh: params enter with ``param_pspecs``
+    (None = replicated), caches with `decode_cache_pspecs`, and the
+    engine bodies run with ``model_axes`` so the per-layer math is
+    head/channel-local with psum'd row-parallel outputs.  Token and slot
+    axes are replicated, so every data shard computes the same logits —
+    serving rides along on whatever mesh training owns.
+
+    prefill_fn(params, tokens (B,S), true_len ()) -> (last_logits, state)
+    decode_fn(params, tokens (B,), state, active (B,)) -> (logits, state)
+    """
+    from repro.dist import shard_map
+    from repro.dist.sharding import model_axes
+    from repro.serving.engine import ServeState, decode_step, prefill
+
+    maxes = model_axes(mesh)
+    cspecs = decode_cache_pspecs(cfg, mesh)
+    state_specs = ServeState(caches=cspecs, lengths=P())
+    pspec = param_pspecs if param_pspecs is not None else P()
+
+    def _pre(p, t, tl):
+        return prefill(p, cfg, t, max_len, true_len=tl, model_axes=maxes)
+
+    def _dec(p, t, s, a):
+        return decode_step(p, cfg, t, s, decode_kernel=decode_kernel,
+                           active=a, model_axes=maxes)
+
+    pre = shard_map(_pre, mesh=mesh, in_specs=(pspec, P(), P()),
+                    out_specs=(P(), state_specs))
+    dec = shard_map(_dec, mesh=mesh, in_specs=(pspec, P(), state_specs, P()),
+                    out_specs=(P(), state_specs))
+    return pre, dec

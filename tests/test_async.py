@@ -114,6 +114,64 @@ def test_async_equals_lagged_relaxed_reference(swap_every):
                           np.asarray(hist[(T // K) * K].weights))
 
 
+@pytest.mark.parametrize("publish_every", [1, 3])
+def test_serve_snapshot_equals_explicit_stale_checkpoint(publish_every):
+    """The serving extension of the swap invariant: a serve tick reading
+    `PublishedParams` under publish cadence K decodes bitwise against the
+    explicit checkpoint params(K⌊t/K⌋).  The snapshot is a real copy —
+    it neither drifts with the live training params between publishes nor
+    perturbs the training stream it rides on."""
+    from repro.configs import get_smoke_config
+    from repro.core.async_pipeline import (AsyncPipeline, make_async_steps,
+                                           init_async_state)
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import ISSGDConfig
+    from repro.core.scorer import make_lm_scorer
+    from repro.core.weight_store import publish_params
+    from repro.data import make_token_dataset
+    from repro.models.transformer import init_transformer, per_example_loss
+    from repro.optim import sgd
+    from repro.serving.engine import generate
+
+    cfg = get_smoke_config("glm4-9b")
+    n, K, T = 64, publish_every, 5
+    train = make_token_dataset(jax.random.key(0), n=n, seq=17,
+                               vocab=cfg.vocab_size)
+    params = init_transformer(jax.random.key(1), cfg)
+    opt = sgd(0.05)
+    tcfg = ISSGDConfig(batch_size=4, score_batch_size=16, mode="relaxed",
+                       is_cfg=ISConfig(smoothing=0.1))
+    pel = lambda p, b: per_example_loss(p, cfg, b)[0]
+    scorer = make_lm_scorer(cfg, "loss")
+    s_step, m_step = make_async_steps(pel, scorer, opt, tcfg, n)
+    data = train.arrays
+    prompt = jax.random.randint(jax.random.key(9), (1, 4), 0, cfg.vocab_size)
+
+    hist, served, stamps = [], [], []
+    published = [None]
+
+    def serve_tick(state):
+        t = len(hist)
+        # host-side checkpoint of the live params entering tick t
+        hist.append(jax.tree.map(np.asarray, state.params))
+        if published[0] is None or t % K == 0:
+            published[0] = publish_params(state.params, state.step)
+        stamps.append(int(published[0].synced_at))
+        served.append(generate(published[0].params, cfg, prompt,
+                               steps=3, max_len=8)[0].tolist())
+
+    pipe = AsyncPipeline(s_step, m_step, swap_every=1, serve_tick=serve_tick)
+    state = init_async_state(params, opt, n)
+    for _ in range(T):
+        state, _ = pipe.step(state, data)
+
+    for t in range(T):
+        assert stamps[t] == K * (t // K), (t, stamps[t])
+        ck = jax.tree.map(jnp.asarray, hist[K * (t // K)])
+        want = generate(ck, cfg, prompt, steps=3, max_len=8)[0].tolist()
+        assert served[t] == want, t
+
+
 def test_scored_at_exposes_lag():
     """The lag is observable through read_buf.scored_at (B.1 timestamps):
     after step t the snapshot holds writes through K⌊(t+1)/K⌋ − 1 while

@@ -1,12 +1,18 @@
-"""Continuous batching: staggered multi-tenant decode == isolated decode."""
+"""Continuous batching: staggered multi-tenant decode == isolated decode,
+plus the seed-era regressions — freed-slot freeze, per-bucket (not
+per-length) prefill compilation, MLA ring discipline, and the decode_step
+signature/dtype fixes."""
+import inspect
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
-from repro.models.transformer import init_transformer
+from repro.models.transformer import forward, init_transformer
 from repro.serving.batcher import ContinuousBatcher, Request
-from repro.serving.engine import generate
+from repro.serving.engine import (ServeState, decode_step, generate, prefill)
 
 
 def test_batched_requests_match_isolated_generation():
@@ -45,3 +51,167 @@ def test_more_requests_than_slots_all_finish():
     got = batcher.run(reqs)
     assert set(got) == set(range(5))
     assert all(len(v) == 3 for v in got.values())
+
+
+def _glm4():
+    cfg = get_smoke_config("glm4-9b")
+    return cfg, init_transformer(jax.random.key(0), cfg)
+
+
+def _prompt(key, cfg, n):
+    return jax.random.randint(jax.random.key(key), (n,), 0, cfg.vocab_size)
+
+
+# --------------------------------------------------------------- churn
+def test_evict_readmit_same_slot_matches_isolated_generate():
+    """A slot that finished one request and admits another produces the
+    second request's tokens bitwise equal to an isolated generate — the
+    freed slot's dead cache rows leak nothing into the next tenant."""
+    cfg, params = _glm4()
+    a, b = _prompt(1, cfg, 8), _prompt(2, cfg, 8)
+    want_a = generate(params, cfg, a[None], steps=4, max_len=32)[0].tolist()
+    want_b = generate(params, cfg, b[None], steps=4, max_len=32)[0].tolist()
+
+    batcher = ContinuousBatcher(params, cfg, num_slots=1, max_len=32)
+    got = batcher.run([Request(uid=0, prompt=a, max_new_tokens=4),
+                       Request(uid=1, prompt=b, max_new_tokens=4)])
+    assert got[0] == want_a
+    assert got[1] == want_b
+
+
+def test_eos_evicts_early():
+    cfg, params = _glm4()
+    p = _prompt(3, cfg, 8)
+    gen = generate(params, cfg, p[None], steps=6, max_len=32)[0].tolist()
+    eos = gen[2]
+    stop = gen.index(eos)  # first occurrence (may be < 2)
+    batcher = ContinuousBatcher(params, cfg, num_slots=2, max_len=32)
+    got = batcher.run([Request(uid=0, prompt=p, max_new_tokens=6,
+                               eos_id=eos)])
+    assert got[0] == gen[:stop + 1]
+
+
+def test_admission_blocks_when_full_then_succeeds():
+    cfg, params = _glm4()
+    batcher = ContinuousBatcher(params, cfg, num_slots=1, max_len=32)
+    assert batcher.try_insert(Request(uid=0, prompt=_prompt(4, cfg, 8),
+                                      max_new_tokens=2))
+    late = Request(uid=1, prompt=_prompt(5, cfg, 8), max_new_tokens=2)
+    assert not batcher.try_insert(late)
+    while batcher.step():
+        pass
+    assert 0 in batcher.finished
+    assert batcher.try_insert(late)
+
+
+def test_more_slots_than_requests_steady_state():
+    cfg, params = _glm4()
+    batcher = ContinuousBatcher(params, cfg, num_slots=4, max_len=32)
+    got = batcher.run([Request(uid=i, prompt=_prompt(6 + i, cfg, 8),
+                               max_new_tokens=3) for i in range(2)])
+    assert set(got) == {0, 1}
+    # never-used slots stayed frozen at length 0
+    assert np.asarray(batcher.state.lengths).tolist() == [0, 0, 0, 0]
+
+
+# -------------------------------------------- seed-era regressions
+def test_freed_slot_stays_frozen():
+    """Regression: decode_step used to do `lengths + 1` for every row, so
+    an evicted slot's length crept back up and its dead cache rows kept
+    being written.  The active mask freezes both."""
+    cfg, params = _glm4()
+    batcher = ContinuousBatcher(params, cfg, num_slots=2, max_len=32)
+    assert batcher.try_insert(Request(uid=0, prompt=_prompt(8, cfg, 8),
+                                      max_new_tokens=8))
+    assert batcher.try_insert(Request(uid=1, prompt=_prompt(9, cfg, 8),
+                                      max_new_tokens=2))
+    while 1 not in batcher.finished:
+        batcher.step()
+    assert int(batcher.state.lengths[1]) == 0
+    dead = {k: np.asarray(v[:, 1]) for k, v in batcher.state.caches.items()}
+    for _ in range(3):
+        batcher.step()   # slot 0 still decoding
+    assert int(batcher.state.lengths[1]) == 0, "freed-slot length crept"
+    for k, v in batcher.state.caches.items():
+        assert np.array_equal(np.asarray(v[:, 1]), dead[k]), \
+            f"freed slot cache {k} was written"
+
+
+def test_prefill_compiles_per_bucket_not_per_length():
+    """Regression: every distinct prompt length used to retrace the
+    prefill jit.  Buckets pin the trace count to the bucket count."""
+    cfg, params = _glm4()
+    lengths = [3, 4, 5, 6, 7, 9]
+    batcher = ContinuousBatcher(params, cfg, num_slots=6, max_len=32,
+                                min_bucket=4)
+    for i, n in enumerate(lengths):
+        assert batcher.try_insert(Request(uid=i, prompt=_prompt(10 + i, cfg, n),
+                                          max_new_tokens=2))
+    # buckets: 3,4 -> 4; 5,6,7 -> 8; 9 -> 16
+    assert batcher.prefill_traces == 3
+
+    unbucketed = ContinuousBatcher(params, cfg, num_slots=6, max_len=32,
+                                   prefill_buckets=False)
+    for i, n in enumerate(lengths):
+        assert unbucketed.try_insert(
+            Request(uid=i, prompt=_prompt(10 + i, cfg, n), max_new_tokens=2))
+    assert unbucketed.prefill_traces == len(set(lengths))
+
+
+def test_mla_decode_ring_past_capacity():
+    """Regression: the MLA decode cache write was `slot = pos` with no
+    ring — once pos reached capacity the scatter clamped onto the last
+    row and the validity mask ran past the buffer.  MLA now gets the GQA
+    window discipline end to end: `cfg.sliding_window` bounds the cache,
+    decode rings over it, and teacher-forced decode past the wrap matches
+    the full-sequence forward under the same window mask."""
+    import dataclasses
+
+    cfg = get_smoke_config("minicpm3-4b")
+    assert cfg.attention == "mla"
+    w = 8
+    cfg = dataclasses.replace(cfg, sliding_window=w)
+    params = init_transformer(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(42), (1, 14), 0, cfg.vocab_size)
+
+    _, st = prefill(params, cfg, toks[:, :4], max_len=16)
+    assert st.caches["l0.attn.latent"].shape[2] == w  # window-bounded cache
+    logits = None
+    for pos in range(4, 14):   # teacher-force; ring wraps at pos >= 8
+        logits, st = decode_step(params, cfg, toks[:, pos], st)
+    ref, _ = forward(params, cfg, toks)
+    err = float(jnp.max(jnp.abs(logits - ref[:, -1])))
+    assert err < 2e-4, err
+
+
+def test_decode_step_signature_and_per_buffer_dtype():
+    """Regression: decode_step carried a dead `max_len` parameter, and the
+    MLA persist cast through `next(iter(caches.values())).dtype` — wrong
+    whenever dict order puts a different-precision buffer first.  Each
+    write now casts to its own target buffer, so results are invariant to
+    cache-dict ordering."""
+    assert "max_len" not in inspect.signature(decode_step).parameters
+
+    cfg = get_smoke_config("minicpm3-4b")
+    params = init_transformer(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(7), (1, 5), 0, cfg.vocab_size)
+    _, st = prefill(params, cfg, toks[:, :4], max_len=8)
+
+    def mixed(caches, order):
+        out = {}
+        for k in order:
+            v = caches[k]
+            out[k] = v.astype(jnp.bfloat16) if "rope" in k else v
+        return out
+
+    keys = list(st.caches.keys())
+    st_fwd = ServeState(caches=mixed(st.caches, keys), lengths=st.lengths)
+    st_rev = ServeState(caches=mixed(st.caches, keys[::-1]),
+                        lengths=st.lengths)
+    lg_f, out_f = decode_step(params, cfg, toks[:, 4], st_fwd)
+    lg_r, out_r = decode_step(params, cfg, toks[:, 4], st_rev)
+    assert np.array_equal(np.asarray(lg_f), np.asarray(lg_r))
+    for k in keys:
+        assert out_f.caches[k].dtype == st_fwd.caches[k].dtype, k
+        assert np.array_equal(np.asarray(out_f.caches[k], dtype=np.float32),
+                              np.asarray(out_r.caches[k], dtype=np.float32)), k

@@ -38,6 +38,25 @@ def test_architecture_doc_exists_and_is_linked():
         assert anchor in text, f"ARCHITECTURE.md lost its {anchor!r} anchor"
 
 
+def test_serving_loop_docs_anchored():
+    """The ISSUE 7 serving docs: ARCHITECTURE.md keeps its serving-loop
+    section and README its "Serving loop" walkthrough, both anchored to
+    the modules and invariants they describe."""
+    with open(os.path.join(REPO, "docs", "ARCHITECTURE.md")) as f:
+        arch = f.read()
+    for anchor in ("serving loop", "serving/engine.py", "serving/loop.py",
+                   "ContinuousBatcher", "ServeLoop", "TrafficIngest",
+                   "PublishedParams", "ring-or-reject", "mark_live",
+                   "decode_cache_pspecs", "tests/test_serving_loop.py"):
+        assert anchor in arch, f"ARCHITECTURE.md lost its {anchor!r} anchor"
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for anchor in ("## Serving loop", "--serve-loop", "--serve-reserve-chunks",
+                   "PublishedParams", "ContinuousBatcher", "TrafficIngest",
+                   "tests/test_serving_loop.py"):
+        assert anchor in readme, f"README lost its {anchor!r} anchor"
+
+
 def test_kernels_doc_exists_and_is_linked():
     """docs/KERNELS.md exists, is linked from README and the
     ARCHITECTURE module table, and keeps its per-kernel anchors."""
