@@ -78,6 +78,7 @@ def make_async_steps(
     model_axes: tuple[str, ...] = (),
     param_pspecs=None,
     monitor_traces: bool = True,
+    monitors=None,
 ) -> tuple[Callable, Callable]:
     """Build the two independently dispatched bodies of the async pipeline.
 
@@ -91,6 +92,13 @@ def make_async_steps(
     With ``monitor_traces=False`` the scoring step skips the fig-4 trace
     psums and stays collective-free (NaN monitors); the master's metrics
     always carry NaN traces — AsyncPipeline merges the scoring step's in.
+
+    With a non-empty ``monitors`` (telemetry.MonitorSet) the master step
+    grows one trailing ``{name: scalar}`` output — proposal health measured
+    on ``read_buf``, i.e. the lagged table the master actually sampled
+    from, so the ``staleness`` monitor observes exactly the invariant's
+    L(t).  ``master_step.with_monitors`` records the arity for drivers
+    (capture it *before* jax.jit, which drops function attributes).
     """
     if cfg.mode not in ("relaxed", "uniform"):
         raise ValueError(
@@ -98,13 +106,15 @@ def make_async_steps(
             "the fig-1 sync barrier; fused already merges the passes), got "
             f"{cfg.mode!r}")
     axes = tuple(axes)
+    monitors = monitors or None
     scoring_pass = make_scoring_pass(scorer, cfg, num_examples,
                                      constrain_batch, axes)
     master_pass = make_master_pass(per_example_loss, optimizer, cfg,
                                    num_examples, aux_loss=aux_loss,
                                    constrain_batch=constrain_batch, axes=axes,
                                    model_axes=model_axes,
-                                   param_pspecs=param_pspecs)
+                                   param_pspecs=param_pspecs,
+                                   monitors=monitors)
     sb = cfg.score_batch_size
 
     def scoring_step(stale_params, write_buf, step, data):
@@ -117,10 +127,12 @@ def make_async_steps(
     def master_step(params, opt_state, stale_params, read_buf, step, rng,
                     data):
         rng, k_sample = jax.random.split(rng)
-        params, opt_state, stale_params, _, metrics = master_pass(
+        params, opt_state, stale_params, _, metrics, *mon = master_pass(
             params, opt_state, stale_params, read_buf, step, k_sample, data)
-        return params, opt_state, stale_params, step + 1, rng, metrics
+        out = (params, opt_state, stale_params, step + 1, rng, metrics)
+        return out + (mon[0],) if monitors else out
 
+    master_step.with_monitors = bool(monitors)
     return scoring_step, master_step
 
 
@@ -140,18 +152,29 @@ class AsyncPipeline:
     call counter (initialized from the first state's step), so driving a
     second, reset TrainState through the same instance phase-shifts the
     swaps when swap_every > 1.
+
+    ``telemetry`` (telemetry.Telemetry) times each phase as a dispatch
+    span — non-blocking by default, so instrumentation never re-serializes
+    the scoring/master overlap — and emits a swap counter at the
+    telemetry cadence.  When the master step was built with monitors, the
+    trailing monitor dict lands on ``self.last_monitors`` (device arrays;
+    the driver's logger fetches them).
     """
 
     def __init__(self, scoring_step: Callable, master_step: Callable,
                  swap_every: int = 1, *, jit: bool = True,
                  donate: bool = True,
-                 serve_tick: Optional[Callable] = None):
+                 serve_tick: Optional[Callable] = None,
+                 telemetry=None):
         if swap_every < 1:
             raise ValueError(f"swap_every must be >= 1, got {swap_every}")
         # serve_tick(state) is interleaved between the scoring and master
         # dispatches: the serving loop decodes against its published param
         # snapshot in the window the two training programs overlap
         self.serve_tick = serve_tick
+        # jax.jit drops function attributes — capture the arity first
+        self._with_monitors = bool(getattr(master_step, "with_monitors",
+                                           False))
         if jit:
             # donate write_buf: the table shard is updated in place
             scoring_step = jax.jit(
@@ -161,6 +184,12 @@ class AsyncPipeline:
         self._master = master_step
         self.swap_every = int(swap_every)
         self._t: Optional[int] = None  # host-side step counter (swap cadence)
+        if telemetry is None:
+            from repro.telemetry import Telemetry
+            telemetry = Telemetry.null()
+        self.telemetry = telemetry
+        self.swaps = 0                 # published tables over this run
+        self.last_monitors: Optional[dict] = None
 
     def step(self, state: TrainState, data: dict
              ) -> tuple[TrainState, StepMetrics]:
@@ -169,14 +198,23 @@ class AsyncPipeline:
         computations, then swap the buffers every `swap_every` steps."""
         if self._t is None:
             self._t = int(state.step)   # one host sync, at startup only
+        tel = self.telemetry
         bs: BufferedWeightStore = state.store
-        write_buf, smetrics = self._scoring(state.stale_params, bs.write_buf,
-                                            state.step, data)
+        write_buf, smetrics = tel.timed(
+            "scoring.dispatch", self._scoring, state.stale_params,
+            bs.write_buf, state.step, data, step=self._t)
         if self.serve_tick is not None:
-            self.serve_tick(state)
-        params, opt_state, stale_params, step, rng, metrics = self._master(
-            state.params, state.opt_state, state.stale_params, bs.read_buf,
-            state.step, state.rng, data)
+            with tel.span("serve.tick", step=self._t):
+                self.serve_tick(state)
+        out = tel.timed(
+            "master.dispatch", self._master, state.params, state.opt_state,
+            state.stale_params, bs.read_buf, state.step, state.rng, data,
+            step=self._t)
+        if self._with_monitors:
+            params, opt_state, stale_params, step, rng, metrics, mon = out
+            self.last_monitors = mon
+        else:
+            params, opt_state, stale_params, step, rng, metrics = out
         self._t += 1
         bs = BufferedWeightStore(bs.read_buf, write_buf, bs.synced_at)
         if self._t % self.swap_every == 0:
@@ -184,7 +222,11 @@ class AsyncPipeline:
             # through state.step) — correct even if the pipeline is reused
             # with a fresh TrainState; only the swap *cadence* rides on the
             # host counter, which is why a pipeline instance is per-run.
-            bs = publish(bs, state.step)
+            with tel.span("store.publish", step=self._t):
+                bs = publish(bs, state.step)
+            self.swaps += 1
+        if tel.due(self._t):
+            tel.counter("store.swaps", self.swaps, step=self._t)
         metrics = metrics._replace(trace_ideal=smetrics.trace_ideal,
                                    trace_stale=smetrics.trace_stale,
                                    trace_unif=smetrics.trace_unif)

@@ -31,6 +31,14 @@ def psum(x, axes: Axes):
     return jax.lax.psum(x, axes if len(axes) > 1 else axes[0])
 
 
+def pmax(x, axes: Axes):
+    """lax.pmax over `axes`; identity when axes is empty.  (The telemetry
+    monitors use it for global max-weight / freshest-stamp reductions.)"""
+    if not axes:
+        return x
+    return jax.lax.pmax(x, axes if len(axes) > 1 else axes[0])
+
+
 def axis_size(ax: str) -> int:
     """Static size of a mapped axis (psum-of-1 constant-folds on every
     jax version; jax.lax.axis_size only exists on newer ones)."""

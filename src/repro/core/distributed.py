@@ -199,6 +199,7 @@ def make_sharded_train_step(
     fused_score: Optional[Callable] = None,
     param_specs=None,
     params_template=None,
+    monitors=None,
 ) -> tuple[Callable, ISSGDConfig]:
     """The ISSGD step under shard_map over `mesh`.
 
@@ -212,8 +213,13 @@ def make_sharded_train_step(
     state are tensor-sharded through the `param_pspecs` rules; the
     loss/scorer callables must then be model-axis-aware (built with
     ``model_axes=("model",)``).
+
+    With a non-empty ``monitors`` the step returns ``(state, metrics,
+    {name: scalar})`` — the monitor scalars psum/pmax to global values
+    inside the program and come out replicated (P() specs).
     """
     axes = data_axes(mesh)
+    monitors = monitors or None
     nd = mesh_device_count(mesh, axes)
     cfg = resolve_score_shards(cfg, mesh)
     if num_examples % nd:
@@ -226,16 +232,21 @@ def make_sharded_train_step(
                            num_examples, aux_loss=aux_loss,
                            fused_score=fused_score, axes=axes,
                            model_axes=maxes,
-                           param_pspecs=pp if maxes else None)
+                           param_pspecs=pp if maxes else None,
+                           monitors=monitors)
     state_specs = train_state_pspecs(mesh, pp, op)
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
+    out_specs = (state_specs, metric_specs)
+    if monitors:
+        out_specs += ({name: P() for name in monitors.names},)
 
     step = shard_map(
         body, mesh=mesh,
         in_specs=(state_specs, dspecs),
-        out_specs=(state_specs, metric_specs),
+        out_specs=out_specs,
     )
+    step.with_monitors = bool(monitors)
     return step, cfg
 
 
@@ -251,6 +262,7 @@ def make_sharded_async_steps(
     monitor_traces: bool = True,
     param_specs=None,
     params_template=None,
+    monitors=None,
 ) -> tuple[Callable, Callable, ISSGDConfig]:
     """The async pipeline's two computations under shard_map over `mesh`.
 
@@ -267,10 +279,15 @@ def make_sharded_async_steps(
     scoring program, parity with the fused step's monitors); pass
     ``monitor_traces=False`` (train.py ``--no-trace-monitors``) for the
     strictly collective-free scoring build the HLO gate pins.
+
+    With a non-empty ``monitors`` the master step grows the trailing
+    monitor dict (replicated); ``master_step.with_monitors`` is reattached
+    on the shard_mapped wrapper for AsyncPipeline to capture pre-jit.
     """
     from repro.core.async_pipeline import ScoreMetrics, make_async_steps
 
     axes = data_axes(mesh)
+    monitors = monitors or None
     nd = mesh_device_count(mesh, axes)
     cfg = resolve_score_shards(cfg, mesh)
     if num_examples % nd:
@@ -282,11 +299,15 @@ def make_sharded_async_steps(
     scoring_body, master_body = make_async_steps(
         per_example_loss, scorer, optimizer, cfg, num_examples,
         aux_loss=aux_loss, axes=axes, model_axes=maxes,
-        param_pspecs=pp if maxes else None, monitor_traces=monitor_traces)
+        param_pspecs=pp if maxes else None, monitor_traces=monitor_traces,
+        monitors=monitors)
     store_spec = _store_pspec(axes)
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
     smetric_specs = ScoreMetrics(*([P()] * len(ScoreMetrics._fields)))
+    master_out = (pp, op, pp, P(), P(), metric_specs)
+    if monitors:
+        master_out += ({name: P() for name in monitors.names},)
 
     scoring_step = shard_map(
         scoring_body, mesh=mesh,
@@ -296,8 +317,9 @@ def make_sharded_async_steps(
     master_step = shard_map(
         master_body, mesh=mesh,
         in_specs=(pp, op, pp, store_spec, P(), P(), dspecs),
-        out_specs=(pp, op, pp, P(), P(), metric_specs),
+        out_specs=master_out,
     )
+    master_step.with_monitors = bool(monitors)
     return scoring_step, master_step, cfg
 
 
@@ -316,6 +338,7 @@ def make_sharded_streamed_steps(
     monitor_traces: bool = True,
     param_specs=None,
     params_template=None,
+    monitors=None,
 ) -> tuple[Callable, Callable, Callable, ISSGDConfig]:
     """The streamed data plane's three device programs under shard_map.
 
@@ -336,6 +359,7 @@ def make_sharded_streamed_steps(
     from repro.data.streaming import make_streamed_steps
 
     axes = data_axes(mesh)
+    monitors = monitors or None
     nd = mesh_device_count(mesh, axes)
     cfg = resolve_score_shards(cfg, mesh)
     if num_examples % nd:
@@ -348,7 +372,8 @@ def make_sharded_streamed_steps(
         per_example_loss, scorer, optimizer, cfg, num_examples, chunk_size,
         aux_loss=aux_loss, fused_score=fused_score, axes=axes,
         model_axes=maxes, param_pspecs=pp if maxes else None,
-        async_mode=async_mode, monitor_traces=monitor_traces)
+        async_mode=async_mode, monitor_traces=monitor_traces,
+        monitors=monitors)
     expect_scores = master_body.expect_scores
 
     store_spec = _store_pspec(axes)
@@ -371,12 +396,16 @@ def make_sharded_streamed_steps(
     master_in = (pp, op, pp, store_spec, P(), P(), replicated_rows)
     if expect_scores:
         master_in += (ds, ds)
+    master_out = (pp, op, pp, store_spec, P(), P(), metric_specs)
+    if monitors:
+        master_out += ({name: P() for name in monitors.names},)
     master_step = shard_map(
         master_body, mesh=mesh,
         in_specs=master_in,
-        out_specs=(pp, op, pp, store_spec, P(), P(), metric_specs),
+        out_specs=master_out,
     )
     master_step.expect_scores = expect_scores
+    master_step.with_monitors = bool(monitors)
     return scoring_step, sample_step, master_step, cfg
 
 

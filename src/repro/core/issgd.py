@@ -272,6 +272,12 @@ def make_master_pass(
     # `param_pspecs` (the tree from dist.sharding.param_pspecs) is
     # required so the grad norm can tell sharded from replicated leaves
     param_pspecs=None,
+    monitors=None,                  # telemetry.MonitorSet: compile the
+    # enabled proposal-health monitors into the step as ONE extra output
+    # (a {name: scalar} dict).  None / empty set is the identity code
+    # path — the program is HLO-identical to a monitor-free build, and
+    # enabling monitors never changes the trajectory (both pinned in
+    # tests/test_telemetry.py)
     streaming: bool = False,        # `data` is the pre-gathered replicated
     # minibatch (B rows) instead of the resident dataset; the sampled
     # indices are still drawn in-program from the store, and the host
@@ -289,6 +295,12 @@ def make_master_pass(
     ``read_buf`` in the async pipeline.  `fresh_scores`/`stale_slice` feed
     the fig-4 trace monitors; when None (async — the monitors ride with
     the scoring step instead) the traces come back NaN.
+
+    With a non-empty ``monitors`` set the return tuple grows one trailing
+    element: the ``{name: scalar}`` proposal-health dict of
+    telemetry/monitors.py, computed from the same proposal the sampler
+    drew from (in async mode that is ``read_buf`` — the observed
+    staleness monitor reads the lag right off its scored_at stamps).
     """
     is_cfg = cfg.is_cfg
     n = num_examples
@@ -299,6 +311,7 @@ def make_master_pass(
         constrain_batch = lambda b: b
     axes = tuple(axes)
     model_axes = tuple(model_axes)
+    monitors = monitors or None
 
     def master_pass(params, opt_state, stale_params, store: WeightStore,
                     step, k_sample, data,
@@ -311,6 +324,13 @@ def make_master_pass(
         proposal = read_proposal(store, step, is_cfg)
         sum_w = psum(jnp.sum(proposal), axes)
         mean_weight = sum_w / n
+        if monitors:
+            from repro.telemetry.monitors import proposal_monitors
+            # over the proposal actually sampled from, BEFORE this step's
+            # writes (in async mode `store` is the lagged read_buf, so the
+            # staleness monitor observes exactly L(t))
+            mon = proposal_monitors(store, proposal, step, axes, n,
+                                    monitors, sum_w=sum_w)
 
         # ---- 3. compose the minibatch (two-stage sample + one-owner gather) --
         if cfg.mode == "uniform":
@@ -392,6 +412,8 @@ def make_master_pass(
             ess_frac=ess, mean_weight=mean_weight,
             sample_indices=idx,
         )
+        if monitors:
+            return new_params, opt_state, stale_params, store, metrics, mon
         return new_params, opt_state, stale_params, store, metrics
 
     return master_pass
@@ -409,6 +431,7 @@ def make_train_step(
     axes: tuple[str, ...] = (),
     model_axes: tuple[str, ...] = (),
     param_pspecs=None,
+    monitors=None,
 ) -> Callable:
     """Build the fused ISSGD step: (state, dataset_arrays) -> (state, metrics).
 
@@ -417,8 +440,14 @@ def make_train_step(
     already includes step t's scoring writes (lag 0).  The async pipeline
     (core/async_pipeline.py) runs the same two bodies concurrently through
     a double-buffered store instead.
+
+    With a non-empty ``monitors`` (telemetry.MonitorSet) the step returns
+    ``(state, metrics, monitor_dict)`` instead — the proposal-health
+    scalars ride the compiled step as extra outputs; without it the
+    program is untouched (HLO-identical, tests/test_telemetry.py).
     """
     axes = tuple(axes)
+    monitors = monitors or None
     scoring = (None if cfg.mode == "fused" else
                make_scoring_pass(scorer, cfg, num_examples,
                                  constrain_batch, axes))
@@ -426,9 +455,9 @@ def make_train_step(
                               aux_loss=aux_loss, fused_score=fused_score,
                               constrain_batch=constrain_batch, axes=axes,
                               model_axes=model_axes,
-                              param_pspecs=param_pspecs)
+                              param_pspecs=param_pspecs, monitors=monitors)
 
-    def train_step(state: TrainState, data: dict) -> tuple[TrainState, StepMetrics]:
+    def train_step(state: TrainState, data: dict):
         rng, k_sample = jax.random.split(state.rng)
         step = state.step
 
@@ -443,13 +472,16 @@ def make_train_step(
                 score_params, state.store, step, data)
 
         # ---- 2-6. the master's half ------------------------------------------
-        params, opt_state, stale_params, store, metrics = master(
+        params, opt_state, stale_params, store, metrics, *mon = master(
             state.params, state.opt_state, state.stale_params, store, step,
             k_sample, data, fresh_scores, stale_slice)
         new_state = TrainState(params, opt_state, stale_params, store,
                                step + 1, rng)
+        if monitors:
+            return new_state, metrics, mon[0]
         return new_state, metrics
 
+    train_step.with_monitors = bool(monitors)
     return train_step
 
 

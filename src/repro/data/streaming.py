@@ -92,6 +92,7 @@ def make_streamed_steps(
     param_pspecs=None,
     async_mode: bool = False,
     monitor_traces: bool = True,
+    monitors=None,
 ) -> tuple[Callable, Callable, Callable]:
     """The three device programs of the streamed ISSGD step.
 
@@ -119,6 +120,11 @@ def make_streamed_steps(
     step (``monitor_traces``), the master's traces come back NaN, and the
     two programs share no buffers — the AsyncPipeline discipline over the
     double-buffered store, with the fan-out's rows host-streamed.
+
+    With a non-empty ``monitors`` (telemetry.MonitorSet) the master step
+    grows one trailing ``{name: scalar}`` proposal-health output — see
+    make_async_steps; ``master_step.with_monitors`` records the arity
+    (capture before jax.jit, which drops function attributes).
     """
     if cfg.mode == "exact":
         raise ValueError(
@@ -133,6 +139,7 @@ def make_streamed_steps(
         raise ValueError(f"chunk_size={chunk_size} must divide "
                          f"num_examples={num_examples}")
     axes = tuple(axes)
+    monitors = monitors or None
     n = num_examples
     sb = cfg.score_batch_size
     is_cfg = cfg.is_cfg
@@ -148,7 +155,8 @@ def make_streamed_steps(
                                    fused_score=fused_score,
                                    constrain_batch=constrain_batch,
                                    axes=axes, model_axes=model_axes,
-                                   param_pspecs=param_pspecs, streaming=True)
+                                   param_pspecs=param_pspecs, streaming=True,
+                                   monitors=monitors)
 
     def scoring_step(score_params, store: WeightStore, step, score_rows):
         store, fresh_scores, stale_slice = scoring_pass(
@@ -176,22 +184,25 @@ def make_streamed_steps(
         def master_step(params, opt_state, stale_params, store, step, rng,
                         batch_rows, fresh_scores, stale_slice):
             rng, k_sample = jax.random.split(rng)
-            params, opt_state, stale_params, store, metrics = master_pass(
-                params, opt_state, stale_params, store, step, k_sample,
-                batch_rows, fresh_scores, stale_slice)
-            return (params, opt_state, stale_params, store, step + 1, rng,
-                    metrics)
+            params, opt_state, stale_params, store, metrics, *mon = \
+                master_pass(params, opt_state, stale_params, store, step,
+                            k_sample, batch_rows, fresh_scores, stale_slice)
+            out = (params, opt_state, stale_params, store, step + 1, rng,
+                   metrics)
+            return out + (mon[0],) if monitors else out
     else:
         def master_step(params, opt_state, stale_params, store, step, rng,
                         batch_rows):
             rng, k_sample = jax.random.split(rng)
-            params, opt_state, stale_params, store, metrics = master_pass(
-                params, opt_state, stale_params, store, step, k_sample,
-                batch_rows)
-            return (params, opt_state, stale_params, store, step + 1, rng,
-                    metrics)
+            params, opt_state, stale_params, store, metrics, *mon = \
+                master_pass(params, opt_state, stale_params, store, step,
+                            k_sample, batch_rows)
+            out = (params, opt_state, stale_params, store, step + 1, rng,
+                   metrics)
+            return out + (mon[0],) if monitors else out
 
     master_step.expect_scores = expect_scores
+    master_step.with_monitors = bool(monitors)
     return scoring_step, sample_step, master_step
 
 
@@ -457,6 +468,13 @@ class StreamedISSGD:
     streamed run equals a non-streamed async run with the same cadence.
     Like AsyncPipeline, an instance is per-run (the swap/prefetch cadence
     rides on a host counter initialized from the first state's step).
+
+    ``telemetry`` (telemetry.Telemetry) wraps each phase in a dispatch
+    span (stream.fetch / scoring.dispatch / sample.dispatch /
+    stream.gather / master.dispatch / store.publish / stream.prefetch /
+    serve.tick) and emits the plane's hit-rate and swap counters at the
+    telemetry cadence; monitor-built master steps land their dict on
+    ``self.last_monitors``.
     """
 
     def __init__(self, plane: StreamingDataPlane,
@@ -464,7 +482,8 @@ class StreamedISSGD:
                  master_step: Callable, cfg: ISSGDConfig,
                  num_examples: int, *, async_mode: bool = False,
                  swap_every: int = 1, prefetch_every: int = 1,
-                 jit: bool = True, serve_tick: Optional[Callable] = None):
+                 jit: bool = True, serve_tick: Optional[Callable] = None,
+                 telemetry=None):
         if swap_every < 1 or prefetch_every < 1:
             raise ValueError("swap_every and prefetch_every must be >= 1")
         self.plane = plane
@@ -477,6 +496,14 @@ class StreamedISSGD:
         self.prefetch_every = int(prefetch_every)
         self._expect_scores = getattr(master_step, "expect_scores",
                                       (not async_mode) and cfg.mode != "fused")
+        # capture before jit — jax.jit drops function attributes
+        self._with_monitors = bool(getattr(master_step, "with_monitors",
+                                           False))
+        if telemetry is None:
+            from repro.telemetry import Telemetry
+            telemetry = Telemetry.null()
+        self.telemetry = telemetry
+        self.last_monitors: Optional[dict] = None
         if jit:
             # async: write_buf (arg 1) is donated — in-place shard update,
             # mirroring AsyncPipeline; sync keeps the caller's store alive
@@ -512,48 +539,83 @@ class StreamedISSGD:
         """One streamed train step.  ``data`` is accepted (and ignored)
         only for drop-in signature parity with the resident step."""
         t = self._tick(state)
-        score_rows = (None if self.cfg.mode == "fused"
-                      else self.plane.fetch_sharded(self._score_indices(t)))
+        tel = self.telemetry
+        if self.cfg.mode == "fused":
+            score_rows = None
+        else:
+            with tel.span("stream.fetch", step=t):
+                score_rows = self.plane.fetch_sharded(self._score_indices(t))
         self.plane.swap_window()
-        return (self._step_async(state, score_rows)
-                if self.async_mode else
-                self._step_sync(state, score_rows))
+        out = (self._step_async(state, score_rows)
+               if self.async_mode else
+               self._step_sync(state, score_rows))
+        if tel.due(self._t):
+            s = self.plane.stats
+            tel.counter("stream.hit_rate", s.hit_rate, step=self._t)
+            tel.counter("stream.hits", s.hits, step=self._t)
+            tel.counter("stream.misses", s.misses, step=self._t)
+            tel.counter("stream.streamed_rows", s.streamed_rows, step=self._t)
+            tel.counter("stream.window_swaps", s.swaps, step=self._t)
+            tel.counter("stream.prefetches", s.prefetches, step=self._t)
+        return out
+
+    def _unpack_master(self, out):
+        if self._with_monitors:
+            self.last_monitors = out[-1]
+            return out[:-1]
+        return out
 
     def _step_sync(self, state, score_rows):
+        tel = self.telemetry
+        t = self._t
         if self.cfg.mode == "fused":
             store, fresh, stale = state.store, None, None
         else:
-            store, fresh, stale, _ = self._scoring(
-                state.stale_params, state.store, state.step, score_rows)
+            store, fresh, stale, _ = tel.timed(
+                "scoring.dispatch", self._scoring, state.stale_params,
+                state.store, state.step, score_rows, step=t)
         if self.serve_tick is not None:
-            self.serve_tick(state)
-        idx, mass = self._sample(store, state.step, state.rng)
-        batch = self.plane.gather_global(np.asarray(idx))
+            with tel.span("serve.tick", step=t):
+                self.serve_tick(state)
+        idx, mass = tel.timed("sample.dispatch", self._sample, store,
+                              state.step, state.rng, step=t)
+        with tel.span("stream.gather", step=t):
+            batch = self.plane.gather_global(np.asarray(idx))
         margs = (state.params, state.opt_state, state.stale_params, store,
                  state.step, state.rng, batch)
         if self._expect_scores:
             margs += (fresh, stale)
         params, opt_state, stale_params, store, step, rng, metrics = \
-            self._master(*margs)
+            self._unpack_master(tel.timed("master.dispatch", self._master,
+                                          *margs, step=t))
         self._advance(mass)
         return (TrainState(params, opt_state, stale_params, store, step,
                            rng), metrics)
 
     def _step_async(self, state, score_rows):
+        tel = self.telemetry
+        t = self._t
         bs: BufferedWeightStore = state.store
-        write_buf, _, _, smetrics = self._scoring(
-            state.stale_params, bs.write_buf, state.step, score_rows)
+        write_buf, _, _, smetrics = tel.timed(
+            "scoring.dispatch", self._scoring, state.stale_params,
+            bs.write_buf, state.step, score_rows, step=t)
         if self.serve_tick is not None:
-            self.serve_tick(state)
-        idx, mass = self._sample(bs.read_buf, state.step, state.rng)
-        batch = self.plane.gather_global(np.asarray(idx))
+            with tel.span("serve.tick", step=t):
+                self.serve_tick(state)
+        idx, mass = tel.timed("sample.dispatch", self._sample, bs.read_buf,
+                              state.step, state.rng, step=t)
+        with tel.span("stream.gather", step=t):
+            batch = self.plane.gather_global(np.asarray(idx))
         params, opt_state, stale_params, _, step, rng, metrics = \
-            self._master(state.params, state.opt_state, state.stale_params,
-                         bs.read_buf, state.step, state.rng, batch)
+            self._unpack_master(tel.timed(
+                "master.dispatch", self._master, state.params,
+                state.opt_state, state.stale_params, bs.read_buf, state.step,
+                state.rng, batch, step=t))
         bs = BufferedWeightStore(bs.read_buf, write_buf, bs.synced_at)
         self._advance(mass)
         if self._t % self.swap_every == 0:
-            bs = publish(bs, state.step)
+            with tel.span("store.publish", step=self._t):
+                bs = publish(bs, state.step)
         metrics = metrics._replace(trace_ideal=smetrics.trace_ideal,
                                    trace_stale=smetrics.trace_stale,
                                    trace_unif=smetrics.trace_unif)
@@ -562,7 +624,8 @@ class StreamedISSGD:
 
     def _advance(self, mass) -> None:
         if self._t % self.prefetch_every == 0:
-            self.plane.prefetch(np.asarray(mass))
+            with self.telemetry.span("stream.prefetch", step=self._t):
+                self.plane.prefetch(np.asarray(mass))
         self._t += 1
 
     def probe(self, state: TrainState, data: Optional[dict] = None

@@ -289,6 +289,30 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="write schema-versioned telemetry events (spans, "
+                    "counters, per-step metrics, monitors) to this JSONL "
+                    "file; tools/metrics_report.py renders a run summary "
+                    "from it")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="telemetry cadence in steps for periodic counters "
+                    "and metrics records (0 = --log-every)")
+    ap.add_argument("--monitors", default="none",
+                    help="proposal-health monitors compiled into the step "
+                    "as extra outputs: 'all', 'none', or a comma list of "
+                    "ess,entropy,max_weight_frac,empty_rows,staleness; "
+                    "off is HLO-identical to a monitor-free build and on "
+                    "never changes the trajectory")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the window given "
+                    "by --profile-steps into this directory")
+    ap.add_argument("--profile-steps", default="2:2",
+                    help="profiler capture window as START:COUNT train "
+                    "steps (default 2:2 — skip compile, grab two steps)")
+    ap.add_argument("--telemetry-blocking", action="store_true",
+                    help="block on each phase's outputs inside its span "
+                    "(true per-phase wall-clock; serializes the async "
+                    "scoring/master overlap — off by default)")
     args = ap.parse_args()
     mp = max(args.model_parallel, 1)
     dp = max(args.mesh, 1)
@@ -298,6 +322,32 @@ def main():
     model_axes = ("model",) if mp > 1 else ()
     seq_shard = mp > 1 and (args.sequence_parallel is None
                             or args.sequence_parallel)
+
+    from repro.telemetry import EventSink, MonitorSet, NullSink, Telemetry
+    try:
+        mon_set = MonitorSet.parse(args.monitors)
+    except ValueError as e:
+        ap.error(f"--monitors: {e}")
+    try:
+        prof_start, prof_count = map(int, args.profile_steps.split(":"))
+    except ValueError:
+        ap.error(f"--profile-steps must be START:COUNT, got "
+                 f"{args.profile_steps!r}")
+    if args.metrics_jsonl:
+        sink = EventSink(args.metrics_jsonl,
+                         run={"arch": args.arch, "mode": args.mode,
+                              "steps": args.steps, "mesh": args.mesh,
+                              "model_parallel": mp,
+                              "async_scoring": args.async_scoring,
+                              "stream": args.stream,
+                              "serve_loop": args.serve_loop,
+                              "swap_every": args.swap_every,
+                              "monitors": list(mon_set.names),
+                              "seed": args.seed})
+    else:
+        sink = NullSink()
+    tel = Telemetry(sink, every=args.metrics_every or args.log_every,
+                    blocking=args.telemetry_blocking)
 
     if args.arch == "mlp_svhn":
         params, train, pel, scorer, param_specs = build_mlp(args, model_axes)
@@ -388,17 +438,20 @@ def main():
                 pel, scorer, opt, tcfg, n_examples, mesh, template,
                 chunk_size=csize, fused_score=fused_score,
                 async_mode=args.async_scoring,
-                monitor_traces=not args.no_trace_monitors, **pspec_kw)
+                monitor_traces=not args.no_trace_monitors,
+                monitors=mon_set, **pspec_kw)
         else:
             s_step, smp_step, m_step = make_streamed_steps(
                 pel, scorer, opt, tcfg, n_examples, csize,
                 fused_score=fused_score, async_mode=args.async_scoring,
-                monitor_traces=not args.no_trace_monitors)
+                monitor_traces=not args.no_trace_monitors,
+                monitors=mon_set)
         plane = StreamingDataPlane(store, wc, mesh=mesh)
         pipe = StreamedISSGD(plane, s_step, smp_step, m_step, tcfg,
                              n_examples, async_mode=args.async_scoring,
                              swap_every=args.swap_every,
-                             prefetch_every=args.prefetch_every)
+                             prefetch_every=args.prefetch_every,
+                             telemetry=tel)
         if args.mode == "fused":
             probe = pipe.probe
         if args.serve_loop:
@@ -426,7 +479,7 @@ def main():
                 batcher, ingest, traffic,
                 publish_every=args.serve_publish_every or args.swap_every,
                 serve_every=args.serve_every,
-                decode_steps=args.serve_decode_steps)
+                decode_steps=args.serve_decode_steps, telemetry=tel)
             pipe.serve_tick = serve.on_train_step
             print(f"serve-loop: {args.serve_slots} slots, max_len "
                   f"{serve_max_len}, {n_examples - n_live} reserved rows",
@@ -449,14 +502,16 @@ def main():
                   f"{args.swap_every})", flush=True)
             s_step, m_step, tcfg = dist.make_sharded_async_steps(
                 pel, scorer, opt, tcfg, train.size, mesh, data,
-                monitor_traces=not args.no_trace_monitors, **pspec_kw)
+                monitor_traces=not args.no_trace_monitors,
+                monitors=mon_set, **pspec_kw)
             data = dist.shard_dataset(data, mesh)
         else:
             print(f"async scoring, swap every {args.swap_every}", flush=True)
             s_step, m_step = make_async_steps(
                 pel, scorer, opt, tcfg, train.size,
-                monitor_traces=not args.no_trace_monitors)
-        pipe = AsyncPipeline(s_step, m_step, args.swap_every)
+                monitor_traces=not args.no_trace_monitors,
+                monitors=mon_set)
+        pipe = AsyncPipeline(s_step, m_step, args.swap_every, telemetry=tel)
     elif use_mesh:
         from repro.core import distributed as dist
         from repro.launch.mesh import make_debug_mesh
@@ -465,7 +520,8 @@ def main():
               f"{jax.device_count()} devices", flush=True)
         raw_step, tcfg = dist.make_sharded_train_step(
             pel, scorer, opt, tcfg, train.size, mesh, data,
-            fused_score=fused_score, **pspec_kw)
+            fused_score=fused_score, monitors=mon_set, **pspec_kw)
+        step_monitors = raw_step.with_monitors  # jax.jit drops attributes
         step = jax.jit(raw_step)
         if args.mode == "fused":
             probe = jax.jit(dist.make_sharded_score_step(
@@ -473,8 +529,10 @@ def main():
                 **pspec_kw))
         data = dist.shard_dataset(data, mesh)
     else:
-        step = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
-                                       fused_score=fused_score))
+        raw_step = make_train_step(pel, scorer, opt, tcfg, train.size,
+                                   fused_score=fused_score, monitors=mon_set)
+        step_monitors = raw_step.with_monitors  # jax.jit drops attributes
+        step = jax.jit(raw_step)
         if args.mode == "fused":
             from repro.core.issgd import make_score_step
             probe = jax.jit(make_score_step(scorer, tcfg, train.size))
@@ -494,45 +552,81 @@ def main():
 
     history = []
     t0 = time.time()
+    profiling = False
     for i in range(args.steps):
+        if args.profile_dir and i == prof_start:
+            jax.profiler.start_trace(args.profile_dir)
+            profiling = True
+            sink.emit("profile", step=i, action="start",
+                      dir=args.profile_dir)
+        mon = None
         if pipe is not None:
             state, m = pipe.step(state, data)
+            mon = pipe.last_monitors
         else:
-            state, m = step(state, data)
+            out = tel.timed("train.step", step, state, data, step=i)
+            if step_monitors:
+                state, m, mon = out
+            else:
+                state, m = out
         if serve is not None:
             # finished traffic lands in the store between steps, once the
             # tick's training dispatches have retired (donation safety)
             state = serve.ingest_into(state)
         if probe is not None and i % args.probe_every == 0:
             state = probe(state, data)
-        if i % args.log_every == 0 or i == args.steps - 1:
-            rec = {"step": i, "loss": float(m.loss),
-                   "grad_norm": float(m.grad_norm),
-                   "trace_ideal": float(m.trace_ideal),
-                   "trace_stale": float(m.trace_stale),
-                   "trace_unif": float(m.trace_unif),
-                   "ess_frac": float(m.ess_frac),
+        if profiling and i == prof_start + prof_count - 1:
+            # retire the window's dispatches before closing the trace
+            jax.block_until_ready(state.params)
+            jax.profiler.stop_trace()
+            profiling = False
+            sink.emit("profile", step=i, action="stop")
+        log_now = i % args.log_every == 0 or i == args.steps - 1
+        emit_now = bool(sink) and (tel.due(i) or i == args.steps - 1)
+        if log_now or emit_now:
+            # ONE forced transfer for everything this step logs — per-field
+            # float() calls would each block the dispatch queue separately
+            vals, mon_vals = jax.device_get(
+                ((m.loss, m.grad_norm, m.trace_ideal, m.trace_stale,
+                  m.trace_unif, m.ess_frac), mon))
+            rec = {"step": i, "loss": float(vals[0]),
+                   "grad_norm": float(vals[1]),
+                   "trace_ideal": float(vals[2]),
+                   "trace_stale": float(vals[3]),
+                   "trace_unif": float(vals[4]),
+                   "ess_frac": float(vals[5]),
                    "elapsed_s": round(time.time() - t0, 2)}
-            history.append(rec)
-            print(f"step {i:5d} loss {rec['loss']:.4f} "
-                  f"√TrΣ ideal/stale/unif = {rec['trace_ideal']:.3f}/"
-                  f"{rec['trace_stale']:.3f}/{rec['trace_unif']:.3f} "
-                  f"ess {rec['ess_frac']:.3f}", flush=True)
+            if plane is not None:
+                rec["stream_hit_rate"] = round(plane.stats.hit_rate, 4)
+            if serve is not None:
+                rec["served_rows"] = int(serve.ingest.ingested)
+            if log_now:
+                history.append(rec)
+                print(f"step {i:5d} loss {rec['loss']:.4f} "
+                      f"√TrΣ ideal/stale/unif = {rec['trace_ideal']:.3f}/"
+                      f"{rec['trace_stale']:.3f}/{rec['trace_unif']:.3f} "
+                      f"ess {rec['ess_frac']:.3f}", flush=True)
+            if emit_now:
+                sink.emit("metrics", step=i,
+                          **{k: v for k, v in rec.items() if k != "step"})
+                if mon_vals is not None:
+                    sink.emit("monitors", step=i,
+                              **{k: v for k, v in mon_vals.items()})
+    if profiling:   # window ran past the end of the run
+        jax.block_until_ready(state.params)
+        jax.profiler.stop_trace()
+        sink.emit("profile", step=args.steps - 1, action="stop")
     if serve is not None:
         print(f"serve-loop: ingested {serve.ingest.ingested} rows "
               f"({serve.ingest.dropped} dropped, "
               f"{len(serve.batcher.finished)} requests finished)",
               flush=True)
-        if history:
-            history[-1]["served_rows"] = int(serve.ingest.ingested)
     if plane is not None:
         s = plane.stats
         print(f"streaming stats: window hit rate {s.hit_rate:.3f} "
               f"({s.hits} hits / {s.misses} misses), "
               f"{s.streamed_rows} scoring rows streamed, "
               f"{s.swaps} window swaps", flush=True)
-        if history:
-            history[-1]["stream_hit_rate"] = round(s.hit_rate, 4)
     if args.save_checkpoint:
         from repro.checkpoint import save_checkpoint
         # sharded runs save gather-free: per-shard entries + manifest
@@ -542,6 +636,18 @@ def main():
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=2)
+    end = {"steps": args.steps, "elapsed_s": round(time.time() - t0, 2)}
+    if history:
+        end["final_loss"] = history[-1]["loss"]
+    if plane is not None:
+        s = plane.stats
+        end.update(stream_hit_rate=round(s.hit_rate, 4),
+                   stream_window_swaps=s.swaps)
+    if serve is not None:
+        end.update(served_rows=int(serve.ingest.ingested),
+                   served_dropped=int(serve.ingest.dropped))
+    sink.emit("run_end", step=args.steps - 1, **end)
+    sink.close()
 
 
 if __name__ == "__main__":

@@ -133,11 +133,18 @@ class ServeLoop:
     finished requests into the store via `TrafficIngest` and flips their
     WeightStore rows live (on ``write_buf`` for a BufferedWeightStore, so
     the rows reach the master only through `publish`, preserving the
-    swap-cadence staleness discipline)."""
+    swap-cadence staleness discipline).
+
+    ``telemetry`` (telemetry.Telemetry) emits the serving counters at the
+    telemetry cadence in ticks — serve.ingested / serve.dropped /
+    serve.finished / serve.publishes / serve.pending — plus a
+    serve.ingest_watermark counter on every nonzero flush (the reserved-
+    capacity fill level)."""
 
     def __init__(self, batcher: ContinuousBatcher, ingest: TrafficIngest,
                  traffic: Callable, publish_every: int = 1,
-                 serve_every: int = 1, decode_steps: int = 1):
+                 serve_every: int = 1, decode_steps: int = 1,
+                 telemetry=None):
         if publish_every < 1 or serve_every < 1:
             raise ValueError("publish_every and serve_every must be >= 1")
         self.batcher = batcher
@@ -149,6 +156,12 @@ class ServeLoop:
         self.published = None          # PublishedParams snapshot
         self.pending: list[Request] = []
         self._tick = 0
+        if telemetry is None:
+            from repro.telemetry import Telemetry
+            telemetry = Telemetry.null()
+        self.telemetry = telemetry
+        self.publishes = 0             # param snapshots taken
+        self.finished = 0              # requests drained complete
 
     def on_train_step(self, state) -> None:
         """The serve tick: snapshot params on cadence, admit, decode."""
@@ -159,11 +172,19 @@ class ServeLoop:
         if self.published is None or (t // self.serve_every) % self.publish_every == 0:
             self.published = publish_params(state.params, state.step)
             self.batcher.params = self.published.params
+            self.publishes += 1
         self.pending.extend(self.traffic(t))
         while self.pending and self.batcher.try_insert(self.pending[0]):
             self.pending.pop(0)
         for _ in range(self.decode_steps):
             self.batcher.step()
+        tel = self.telemetry
+        if tel.due(t):
+            tel.counter("serve.ingested", self.ingest.ingested, step=t)
+            tel.counter("serve.dropped", self.ingest.dropped, step=t)
+            tel.counter("serve.finished", self.finished, step=t)
+            tel.counter("serve.publishes", self.publishes, step=t)
+            tel.counter("serve.pending", len(self.pending), step=t)
 
     def ingest_into(self, state):
         """Drain finished requests into the example store + WeightStore;
@@ -171,9 +192,13 @@ class ServeLoop:
         traffic finished)."""
         for req, generated in self.batcher.drain_completed():
             self.ingest.add(req.prompt, generated)
+            self.finished += 1
         idx = self.ingest.flush()
         if idx.size == 0:
             return state
+        # the fill level of the reserved capacity range, after this flush
+        self.telemetry.counter("serve.ingest_watermark", self.ingest.ingested,
+                               step=self._tick)
         store = state.store
         if isinstance(store, BufferedWeightStore):
             store = mark_live_buffered(store, idx)

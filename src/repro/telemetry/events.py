@@ -1,0 +1,149 @@
+"""Streaming JSONL event sink — the host side of the telemetry plane.
+
+One record per line, schema-versioned so downstream tooling
+(`tools/metrics_report.py`, CI greps, future controllers) can evolve
+without guessing.  Every record carries:
+
+    v       int     schema version (SCHEMA_VERSION)
+    kind    str     record type: "run" | "span" | "counter" | "metrics"
+                    | "monitors" | "profile" | "run_end"
+    t       float   host wall-clock (time.time()) at emit
+    step    int?    train step the record belongs to, when one applies
+
+plus kind-specific fields ("span": name, dur_s; "counter": name, value;
+"metrics"/"monitors": the scalar payload).  Writes are host-side only and
+buffered (``flush_every``), so emitting never forces a device sync — the
+non-blocking discipline the async pipeline's overlap depends on lives in
+`repro/telemetry/spans.py`; this module just never undoes it.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import IO, Optional
+
+SCHEMA_VERSION = 1
+
+
+def _jsonable(v):
+    """Coerce numpy/JAX scalars (already host-side) to plain Python."""
+    if hasattr(v, "item") and getattr(v, "ndim", None) == 0:
+        return v.item()
+    if hasattr(v, "tolist"):
+        return v.tolist()
+    return v
+
+
+class EventSink:
+    """Append schema-versioned JSONL records to ``path``.
+
+    The file is opened eagerly and a ``kind="run"`` header record is
+    written first (schema version + whatever run metadata the caller
+    passes), so a truncated file still identifies itself.  ``emit`` never
+    raises on exotic values — everything non-JSON-serializable is
+    stringified — because telemetry must not kill a training run.
+    """
+
+    def __init__(self, path: str, run: Optional[dict] = None,
+                 flush_every: int = 32):
+        self.path = path
+        self._f: Optional[IO] = open(path, "w")
+        self._since_flush = 0
+        self.flush_every = max(int(flush_every), 1)
+        self.emitted = 0
+        self.emit("run", **(run or {}))
+        self.flush()
+
+    def emit(self, kind: str, step: Optional[int] = None, **fields) -> None:
+        """Write one record: the envelope (v/kind/t/step) plus `fields`."""
+        if self._f is None:
+            return
+        rec = {"v": SCHEMA_VERSION, "kind": kind, "t": time.time()}
+        if step is not None:
+            rec["step"] = int(step)
+        for k, v in fields.items():
+            rec[k] = _jsonable(v)
+        try:
+            line = json.dumps(rec)
+        except TypeError:
+            rec = {k: (v if isinstance(v, (int, float, str, bool, type(None)))
+                       else str(v)) for k, v in rec.items()}
+            line = json.dumps(rec)
+        self._f.write(line + "\n")
+        self.emitted += 1
+        self._since_flush += 1
+        if self._since_flush >= self.flush_every:
+            self.flush()
+
+    def span(self, name: str, dur_s: float,
+             step: Optional[int] = None) -> None:
+        """A timing span record: phase `name` took `dur_s` seconds."""
+        self.emit("span", step=step, name=name, dur_s=round(dur_s, 6))
+
+    def counter(self, name: str, value, step: Optional[int] = None) -> None:
+        """A named scalar counter/gauge sample."""
+        self.emit("counter", step=step, name=name, value=_jsonable(value))
+
+    def flush(self) -> None:
+        """Flush buffered lines to disk (a host-side file flush only)."""
+        if self._f is not None:
+            self._f.flush()
+            self._since_flush = 0
+
+    def close(self) -> None:
+        """Flush and close; idempotent (later emits become no-ops)."""
+        if self._f is not None:
+            self._f.flush()
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        """Context-manager support: ``with EventSink(p) as sink: ...``."""
+        return self
+
+    def __exit__(self, *exc):
+        """Close on scope exit (exceptions propagate)."""
+        self.close()
+        return False
+
+
+class NullSink:
+    """The no-op sink: telemetry-off call sites keep the same code path
+    with zero I/O.  Falsy, so ``if sink:`` gates optional work."""
+
+    path = None
+    emitted = 0
+
+    def emit(self, kind, step=None, **fields):
+        """Discard the record."""
+
+    def span(self, name, dur_s, step=None):
+        """Discard the span."""
+
+    def counter(self, name, value, step=None):
+        """Discard the counter."""
+
+    def flush(self):
+        """Nothing buffered, nothing flushed."""
+
+    def close(self):
+        """Nothing open, nothing closed."""
+
+    def __bool__(self):
+        return False
+
+
+def read_events(path: str) -> list[dict]:
+    """Parse a telemetry JSONL file back into records (malformed lines are
+    skipped — a crashed run may leave a torn final line)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return out

@@ -1,0 +1,123 @@
+"""In-step proposal-health monitors — compiled into the master step.
+
+The paper's whole argument is quantitative: importance sampling pays off
+only while Tr(Σ) under the (stale) proposal beats uniform despite the
+synchronization and staleness costs, and the failure modes are all
+proposal-shape pathologies — a peaked proposal (B.3's "time bomb"), a
+starved store, runaway staleness.  These monitors are the cheap in-program
+observables of exactly those pathologies, computed from tensors the master
+pass already holds (the store it sampled from and the smoothed proposal it
+read), as *optional extra outputs* of the already-compiled step:
+
+    ess               Kish effective sample size of the proposal / N
+                      (1.0 = uniform; small = peaked, IS variance blowing up)
+    entropy           Shannon entropy of the normalized proposal (nats)
+    max_weight_frac   largest single proposal weight / total mass — the
+                      sharpest peakedness alarm (one example dominating)
+    empty_rows        count of reserved serving-capacity rows still EMPTY
+                      (traffic headroom not yet ingested)
+    staleness         observed proposal lag L(t): step − max(scored_at) of
+                      the store the master sampled from — equals the PR 2
+                      invariant's L(t) = t − K⌊t/K⌋ + 1 under swap cadence K
+
+All reductions psum/pmax over the data axes, so the values are global and
+replicated on every device; with axes=() they are exact local arithmetic.
+Monitors off (``MonitorSet(())`` / None) is the *identity* code path: the
+step program is HLO-identical to a build that never heard of telemetry,
+and monitors on never perturbs the trajectory — both pinned in
+tests/test_telemetry.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives import pmax, psum
+from repro.core.weight_store import EMPTY, WeightStore
+
+MONITOR_NAMES = ("ess", "entropy", "max_weight_frac", "empty_rows",
+                 "staleness")
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorSet:
+    """Which proposal-health monitors the step compiles in.
+
+    Falsy when empty, so ``monitors or None`` collapses "no monitors"
+    and "empty set" onto the untouched pre-telemetry code path.
+    """
+    names: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        unknown = [n for n in self.names if n not in MONITOR_NAMES]
+        if unknown:
+            raise ValueError(f"unknown monitor(s) {unknown}; available: "
+                             f"{', '.join(MONITOR_NAMES)}")
+
+    def __bool__(self) -> bool:
+        return bool(self.names)
+
+    @classmethod
+    def all(cls) -> "MonitorSet":
+        """Every available monitor."""
+        return cls(MONITOR_NAMES)
+
+    @classmethod
+    def parse(cls, spec: str) -> "MonitorSet":
+        """CLI form: ``"all"``, ``"none"``/``""``, or a comma list of
+        monitor names (order-normalized to MONITOR_NAMES order)."""
+        spec = (spec or "").strip().lower()
+        if spec in ("", "none", "off"):
+            return cls(())
+        if spec == "all":
+            return cls.all()
+        asked = {s.strip() for s in spec.split(",") if s.strip()}
+        unknown = asked - set(MONITOR_NAMES)
+        if unknown:
+            raise ValueError(f"unknown monitor(s) {sorted(unknown)}; "
+                             f"available: {', '.join(MONITOR_NAMES)} "
+                             f"(or 'all'/'none')")
+        return cls(tuple(n for n in MONITOR_NAMES if n in asked))
+
+
+def proposal_monitors(store: WeightStore, proposal: jax.Array,
+                      step, axes: tuple[str, ...], num_examples: int,
+                      monitors: MonitorSet,
+                      sum_w=None) -> dict[str, jax.Array]:
+    """The enabled monitors as a ``{name: scalar}`` dict (replicated).
+
+    ``store`` and ``proposal`` are the (possibly shard-local) table and
+    smoothed proposal the master pass just read — reserved EMPTY rows
+    already carry zero proposal mass.  ``sum_w`` lets the master pass
+    share its existing psum'd total instead of reducing again.
+    """
+    axes = tuple(axes)
+    out: dict[str, jax.Array] = {}
+    names = monitors.names
+    if any(n in names for n in ("ess", "entropy", "max_weight_frac")):
+        if sum_w is None:
+            sum_w = psum(jnp.sum(proposal), axes)
+        sum_w = jnp.maximum(sum_w, 1e-30)
+    if "ess" in names:
+        sum_w2 = psum(jnp.sum(jnp.square(proposal)), axes)
+        out["ess"] = (jnp.square(sum_w) / jnp.maximum(sum_w2, 1e-30)
+                      / num_examples)
+    if "entropy" in names:
+        # H(ω) = log Σw − (Σ w·log w)/Σw over ω = w/Σw, zero-mass rows
+        # contributing their exact limit 0 — shard-decomposable, so one
+        # psum of the w·log w partials gives the global entropy
+        wlogw = jnp.where(proposal > 0,
+                          proposal * jnp.log(jnp.maximum(proposal, 1e-30)),
+                          jnp.zeros_like(proposal))
+        out["entropy"] = jnp.log(sum_w) - psum(jnp.sum(wlogw), axes) / sum_w
+    if "max_weight_frac" in names:
+        out["max_weight_frac"] = pmax(jnp.max(proposal), axes) / sum_w
+    if "empty_rows" in names:
+        out["empty_rows"] = psum(
+            jnp.sum((store.scored_at <= EMPTY).astype(jnp.int32)), axes)
+    if "staleness" in names:
+        out["staleness"] = (jnp.asarray(step, jnp.int32)
+                            - pmax(jnp.max(store.scored_at), axes))
+    return out

@@ -1,0 +1,59 @@
+"""Phase timing spans with a non-blocking default.
+
+The span taxonomy (documented in docs/ARCHITECTURE.md §8) names the
+phases of one train step: ``scoring.dispatch``, ``master.dispatch``,
+``store.publish``, ``serve.tick``, ``stream.prefetch``, ``stream.fetch``,
+``stream.gather``, ``sample.dispatch``, ``train.step``.
+
+The central design constraint: JAX dispatch is asynchronous, and the
+async pipeline (PR 2) *depends* on the scoring and master computations
+being in flight simultaneously.  A naive timer that calls
+``block_until_ready`` around each phase would re-serialize exactly the
+overlap it is trying to measure.  So:
+
+  * the default (``block=False``) times only the host-side dispatch —
+    the span ends when the call returns, while the device work is still
+    in flight.  A dispatch span much shorter than the phase's true device
+    time is the *witness* that the next phase started concurrently
+    (pinned in tests/test_telemetry.py);
+  * ``block=True`` (train.py ``--telemetry-blocking``) blocks on the
+    phase's outputs before closing the span — accurate per-phase device
+    wall-clock for sync runs and profiling sessions, at the cost of
+    serializing the streams.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Callable, Optional
+
+
+@contextmanager
+def span(sink, name: str, step: Optional[int] = None):
+    """Context manager measuring the host wall-clock of its block and
+    emitting one ``kind="span"`` record.  Purely host-side: it never
+    blocks on device values (whatever the block dispatched stays in
+    flight)."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        sink.span(name, time.perf_counter() - t0, step=step)
+
+
+def timed(sink, name: str, fn: Callable, *args,
+          step: Optional[int] = None, block: bool = False):
+    """Call ``fn(*args)`` inside a span and return its result.
+
+    With ``block=False`` (default) the span closes as soon as dispatch
+    returns — the non-blocking mode async runs require.  With
+    ``block=True`` the span additionally waits for every array in the
+    result (``jax.block_until_ready``), measuring true device wall-clock.
+    """
+    t0 = time.perf_counter()
+    out = fn(*args)
+    if block:
+        import jax
+        out = jax.block_until_ready(out)
+    sink.span(name, time.perf_counter() - t0, step=step)
+    return out

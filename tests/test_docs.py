@@ -15,6 +15,7 @@ def test_doc_coverage_contract_packages():
     from check_docstrings import DEFAULT_PACKAGES, check_packages
     assert "src/repro/kernels" in DEFAULT_PACKAGES
     assert "src/repro/serving" in DEFAULT_PACKAGES
+    assert "src/repro/telemetry" in DEFAULT_PACKAGES
     missing = check_packages(root=REPO)
     assert not missing, "undocumented public definitions:\n" + "\n".join(
         f"  {p}:{ln}: {name}" for p, ln, name in missing)
@@ -54,6 +55,30 @@ def test_serving_loop_docs_anchored():
     for anchor in ("## Serving loop", "--serve-loop", "--serve-reserve-chunks",
                    "PublishedParams", "ContinuousBatcher", "TrafficIngest",
                    "tests/test_serving_loop.py"):
+        assert anchor in readme, f"README lost its {anchor!r} anchor"
+
+
+def test_telemetry_docs_anchored():
+    """The ISSUE 8 observability docs: ARCHITECTURE.md keeps its
+    telemetry section and README its "Observability" walkthrough, both
+    anchored to the event schema, span taxonomy, monitors, and the gates
+    that keep telemetry non-invasive."""
+    with open(os.path.join(REPO, "docs", "ARCHITECTURE.md")) as f:
+        arch = f.read()
+    for anchor in ("## 8. Telemetry", "telemetry/monitors.py",
+                   "telemetry/events.py", "MonitorSet", "EventSink",
+                   "NullSink", "staleness", "max_weight_frac",
+                   "empty_rows", "scoring.dispatch", "master.dispatch",
+                   "non-blocking", "--metrics-jsonl",
+                   "tools/metrics_report.py", "tests/test_telemetry.py",
+                   "test_monitors_off_is_hlo_identical",
+                   "test_monitors_on_is_bitwise_noninvasive"):
+        assert anchor in arch, f"ARCHITECTURE.md lost its {anchor!r} anchor"
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for anchor in ("## Observability", "--metrics-jsonl", "--monitors",
+                   "--profile-dir", '"kind": "monitors"', "staleness",
+                   "tools/metrics_report.py", "tests/test_telemetry.py"):
         assert anchor in readme, f"README lost its {anchor!r} anchor"
 
 

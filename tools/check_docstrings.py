@@ -11,7 +11,7 @@ exempt; ``interrogate`` would enforce the same rule set, but the repo
 avoids adding dependencies the image doesn't bake in.
 
 Usage:  python tools/check_docstrings.py [pkg_dir ...]
-        (defaults to src/repro/{core,data,dist,kernels,serving})
+        (defaults to src/repro/{core,data,dist,kernels,serving,telemetry})
 Exits non-zero listing every undocumented public definition.
 """
 from __future__ import annotations
@@ -21,7 +21,8 @@ import os
 import sys
 
 DEFAULT_PACKAGES = ("src/repro/core", "src/repro/data", "src/repro/dist",
-                    "src/repro/kernels", "src/repro/serving")
+                    "src/repro/kernels", "src/repro/serving",
+                    "src/repro/telemetry")
 
 
 def _public_defs(tree: ast.Module):
