@@ -12,6 +12,7 @@ import numpy as np
 from repro.core.importance import ISConfig
 from repro.core.issgd import ISSGDConfig, init_train_state, make_train_step
 from repro.core.scorer import make_mlp_scorer
+from repro.core.strategies import make_proposal
 from repro.data import make_svhn_like
 from repro.models.mlp import MLPConfig, accuracy, init_mlp_classifier
 from repro.models.mlp import per_example_loss as mlp_pel
@@ -47,7 +48,14 @@ def run_training(params, train, *, mode: str, steps: int, lr: float,
                  smoothing: float, strategy: str = "ghost",
                  batch: int = 64, score_batch: int = 512,
                  refresh_every: int = 8, staleness_threshold: int = 0,
-                 seed: int = 0, record_every: int = 5):
+                 seed: int = 0, record_every: int = 5, mix=None,
+                 timings: dict | None = None):
+    """Run `steps` of the single-device ISSGD loop; returns (state, hist,
+    elapsed_s).  `strategy` takes any zoo name (core/strategies.py), with
+    `mix` as the bandit_mixed coefficients.  Pass a dict as `timings` to
+    get compile_s and steady-state us_per_step (step 0 excluded) filled
+    in — the wall-clock the ablation tables report.
+    """
     opt = sgd(lr)
     tcfg = ISSGDConfig(
         batch_size=batch, score_batch_size=score_batch,
@@ -60,22 +68,38 @@ def run_training(params, train, *, mode: str, steps: int, lr: float,
         fused = lambda p, b: per_example_loss_and_score(p, b, CFG)
     step = jax.jit(make_train_step(
         lambda p, b: mlp_pel(p, b, CFG),
-        make_mlp_scorer(CFG, strategy), opt, tcfg, train.size,
-        fused_score=fused))
+        make_proposal(make_mlp_scorer, CFG, strategy, mix=mix),
+        opt, tcfg, train.size, fused_score=fused))
     st = init_train_state(params, opt, train.size, seed=seed)
     hist = []
     t0 = time.time()
+    t_warm = t0
     for i in range(steps):
         st, m = step(st, train.arrays)
+        if i == 0:
+            # retire compile + first execute; steady-state timing starts here
+            jax.block_until_ready(st.params)
+            t_warm = time.time()
         if i % record_every == 0 or i == steps - 1:
+            # ONE host sync for everything this record carries — per-metric
+            # float() calls would each block the dispatch queue separately,
+            # serializing the timed loop once per field
+            vals = jax.device_get((m.loss, m.trace_ideal, m.trace_stale,
+                                   m.trace_unif, m.ess_frac))
             hist.append({
-                "step": i, "loss": float(m.loss),
-                "trace_ideal": float(m.trace_ideal),
-                "trace_stale": float(m.trace_stale),
-                "trace_unif": float(m.trace_unif),
-                "ess": float(m.ess_frac),
+                "step": i, "loss": float(vals[0]),
+                "trace_ideal": float(vals[1]),
+                "trace_stale": float(vals[2]),
+                "trace_unif": float(vals[3]),
+                "ess": float(vals[4]),
             })
-    return st, hist, time.time() - t0
+    jax.block_until_ready(st.params)
+    t_end = time.time()
+    if timings is not None:
+        timings["compile_s"] = t_warm - t0
+        if steps > 1:
+            timings["us_per_step"] = (t_end - t_warm) / (steps - 1) * 1e6
+    return st, hist, t_end - t0
 
 
 def median_runs(fn, runs: int = 5):

@@ -1,44 +1,76 @@
-"""Beyond-paper ablation: which scoring strategy pays?
+"""Beyond-paper ablation: which proposal strategy pays?
 
-The paper uses exact grad-norm weights (Prop. 1).  We compare the
-strategies the framework offers — exact ghost, the forward-only logit-grad
-proxy, raw loss values, and uniform — on equal step budgets, reporting
-final loss, test error, and the achieved √Tr(Σ) reduction.
+The paper uses exact grad-norm weights (Prop. 1).  We compare the full
+proposal zoo (core/strategies.py) — exact ghost, the forward-only
+logit-grad proxy, raw loss values, the K&F sqrt(2L) upper bound, and the
+bandit-mixed loss+logit_grad blend — against a true uniform baseline,
+on equal step budgets, reporting final loss, test error, steady-state
+wall-clock µs/step, and (IS legs only) the achieved √Tr(Σ) reduction.
+
+The uniform leg runs mode="uniform" with the ``null`` zero scorer: the
+scoring pass keeps its cadence (parity with the IS legs) but compiles
+to a trivial program, so plain SGD is no longer billed the ghost
+backward the old harness built and never sampled from — and
+``variance_reduction``, meaningless under uniform sampling, is reported
+only where the proposal actually drives the draw.
+
+The bandit_mixed leg threads one BanditMixer across the seeds: each
+run's achieved variance reduction is the bandit reward, so λ moves
+toward whichever component (loss vs logit_grad) is paying — a small,
+deterministic demonstration of the online-mixture recipe.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import CFG, run_training, setup
+from benchmarks.common import run_training, setup
+from repro.core.strategies import BanditMixer
 from repro.models.mlp import accuracy
 
 STEPS = 300
 RUNS = 3
 
+#: (strategy, mode) legs on equal step budgets; "uniform" pairs the
+#: uniform sampler with the null scorer (see module docstring).
+LEGS = (("ghost", "relaxed"), ("logit_grad", "relaxed"),
+        ("loss", "relaxed"), ("upper_bound", "relaxed"),
+        ("bandit_mixed", "relaxed"), ("uniform", "uniform"))
+
 
 def strategy_ablation():
     rows, summary = [], {}
-    for strat, mode in [("ghost", "relaxed"), ("logit_grad", "relaxed"),
-                        ("loss", "relaxed"), ("uniform", "uniform")]:
-        losses, errs, reductions = [], [], []
+    mixer = BanditMixer(("loss", "logit_grad"))
+    for strat, mode in LEGS:
+        losses, errs, reductions, uss = [], [], [], []
         for seed in range(RUNS):
             cfg, train, test, params = setup(seed)
+            timings: dict = {}
             st, hist, _ = run_training(
                 params, train, mode=mode, steps=STEPS, lr=0.02,
-                smoothing=1.0, strategy=strat if mode == "relaxed" else "ghost",
-                seed=seed)
+                smoothing=1.0,
+                strategy="null" if mode == "uniform" else strat,
+                mix=mixer.mix() if strat == "bandit_mixed" else None,
+                seed=seed, timings=timings)
             losses.append(hist[-1]["loss"])
             errs.append(1.0 - float(accuracy(st.params, test.arrays, cfg)))
-            tail = hist[len(hist) // 2:]
-            stale = np.mean([r["trace_stale"] for r in tail])
-            unif = np.mean([r["trace_unif"] for r in tail])
-            reductions.append(unif / max(stale, 1e-9))
-        label = strat if mode == "relaxed" else "uniform"
-        row = {"strategy": label,
+            uss.append(timings["us_per_step"])
+            if mode == "relaxed":
+                tail = hist[len(hist) // 2:]
+                stale = np.mean([r["trace_stale"] for r in tail])
+                unif = np.mean([r["trace_unif"] for r in tail])
+                red = float(unif / max(stale, 1e-9))
+                reductions.append(red)
+                if strat == "bandit_mixed":
+                    mixer.update(red)   # one bandit round per seed
+        row = {"strategy": strat,
                "final_loss": float(np.median(losses)),
                "test_error": float(np.median(errs)),
-               "variance_reduction": float(np.median(reductions))}
+               "us_per_step": float(np.median(uss)),
+               "variance_reduction":
+                   float(np.median(reductions)) if reductions else None}
         rows.append(row)
-        summary[f"{label}/var_reduction"] = row["variance_reduction"]
-        summary[f"{label}/test_error"] = row["test_error"]
+        summary[f"{strat}/test_error"] = row["test_error"]
+        summary[f"{strat}/us_per_step"] = row["us_per_step"]
+        if reductions:
+            summary[f"{strat}/var_reduction"] = row["variance_reduction"]
     return rows, summary

@@ -79,6 +79,7 @@ def make_async_steps(
     param_pspecs=None,
     monitor_traces: bool = True,
     monitors=None,
+    gated: bool = False,
 ) -> tuple[Callable, Callable]:
     """Build the two independently dispatched bodies of the async pipeline.
 
@@ -99,6 +100,11 @@ def make_async_steps(
     from, so the ``staleness`` monitor observes exactly the invariant's
     L(t).  ``master_step.with_monitors`` records the arity for drivers
     (capture it *before* jax.jit, which drops function attributes).
+
+    With ``gated=True`` (mode="relaxed" only) the master step takes one
+    extra trailing ``use_is`` device-bool — the adaptive controller's
+    uniform↔IS gate, selected in-program so flips never recompile
+    (``master_step.gated`` records the arity, also pre-jit).
     """
     if cfg.mode not in ("relaxed", "uniform"):
         raise ValueError(
@@ -114,7 +120,7 @@ def make_async_steps(
                                    constrain_batch=constrain_batch, axes=axes,
                                    model_axes=model_axes,
                                    param_pspecs=param_pspecs,
-                                   monitors=monitors)
+                                   monitors=monitors, gated=gated)
     sb = cfg.score_batch_size
 
     def scoring_step(stale_params, write_buf, step, data):
@@ -124,15 +130,28 @@ def make_async_steps(
                                        n_total=sb, monitor=monitor_traces)
         return store, smetrics
 
-    def master_step(params, opt_state, stale_params, read_buf, step, rng,
-                    data):
+    def _master_step(params, opt_state, stale_params, read_buf, step, rng,
+                     data, use_is=None):
         rng, k_sample = jax.random.split(rng)
         params, opt_state, stale_params, _, metrics, *mon = master_pass(
-            params, opt_state, stale_params, read_buf, step, k_sample, data)
+            params, opt_state, stale_params, read_buf, step, k_sample, data,
+            None, None, use_is)
         out = (params, opt_state, stale_params, step + 1, rng, metrics)
         return out + (mon[0],) if monitors else out
 
+    if gated:
+        def master_step(params, opt_state, stale_params, read_buf, step,
+                        rng, data, use_is):
+            return _master_step(params, opt_state, stale_params, read_buf,
+                                step, rng, data, use_is)
+    else:
+        def master_step(params, opt_state, stale_params, read_buf, step,
+                        rng, data):
+            return _master_step(params, opt_state, stale_params, read_buf,
+                                step, rng, data)
+
     master_step.with_monitors = bool(monitors)
+    master_step.gated = bool(gated)
     return scoring_step, master_step
 
 
@@ -159,13 +178,19 @@ class AsyncPipeline:
     telemetry cadence.  When the master step was built with monitors, the
     trailing monitor dict lands on ``self.last_monitors`` (device arrays;
     the driver's logger fetches them).
+
+    When the master step was built ``gated=True``, pass the adaptive
+    ``controller`` (core/controller.ProposalController): its ``gate()``
+    scalar is appended to every master dispatch, and the driver applies
+    decided swap cadences by assigning ``pipe.swap_every`` (a host int,
+    consulted fresh each step).
     """
 
     def __init__(self, scoring_step: Callable, master_step: Callable,
                  swap_every: int = 1, *, jit: bool = True,
                  donate: bool = True,
                  serve_tick: Optional[Callable] = None,
-                 telemetry=None):
+                 telemetry=None, controller=None):
         if swap_every < 1:
             raise ValueError(f"swap_every must be >= 1, got {swap_every}")
         # serve_tick(state) is interleaved between the scoring and master
@@ -175,6 +200,11 @@ class AsyncPipeline:
         # jax.jit drops function attributes — capture the arity first
         self._with_monitors = bool(getattr(master_step, "with_monitors",
                                            False))
+        self._gated = bool(getattr(master_step, "gated", False))
+        self.controller = controller
+        if self._gated and controller is None:
+            raise ValueError("master_step was built gated=True; pass the "
+                             "controller= that owns its use_is gate")
         if jit:
             # donate write_buf: the table shard is updated in place
             scoring_step = jax.jit(
@@ -206,10 +236,11 @@ class AsyncPipeline:
         if self.serve_tick is not None:
             with tel.span("serve.tick", step=self._t):
                 self.serve_tick(state)
-        out = tel.timed(
-            "master.dispatch", self._master, state.params, state.opt_state,
-            state.stale_params, bs.read_buf, state.step, state.rng, data,
-            step=self._t)
+        margs = (state.params, state.opt_state, state.stale_params,
+                 bs.read_buf, state.step, state.rng, data)
+        if self._gated:
+            margs += (self.controller.gate(),)
+        out = tel.timed("master.dispatch", self._master, *margs, step=self._t)
         if self._with_monitors:
             params, opt_state, stale_params, step, rng, metrics, mon = out
             self.last_monitors = mon

@@ -200,6 +200,7 @@ def make_sharded_train_step(
     param_specs=None,
     params_template=None,
     monitors=None,
+    gated: bool = False,
 ) -> tuple[Callable, ISSGDConfig]:
     """The ISSGD step under shard_map over `mesh`.
 
@@ -217,6 +218,11 @@ def make_sharded_train_step(
     With a non-empty ``monitors`` the step returns ``(state, metrics,
     {name: scalar})`` — the monitor scalars psum/pmax to global values
     inside the program and come out replicated (P() specs).
+
+    With ``gated=True`` the step takes the controller's replicated
+    ``use_is`` device bool as a trailing argument (see
+    core/issgd.make_train_step); ``step.gated`` is reattached on the
+    shard_mapped wrapper for callers to capture pre-jit.
     """
     axes = data_axes(mesh)
     monitors = monitors or None
@@ -233,20 +239,24 @@ def make_sharded_train_step(
                            fused_score=fused_score, axes=axes,
                            model_axes=maxes,
                            param_pspecs=pp if maxes else None,
-                           monitors=monitors)
+                           monitors=monitors, gated=gated)
     state_specs = train_state_pspecs(mesh, pp, op)
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
+    in_specs = (state_specs, dspecs)
+    if gated:
+        in_specs += (P(),)          # the replicated use_is scalar
     out_specs = (state_specs, metric_specs)
     if monitors:
         out_specs += ({name: P() for name in monitors.names},)
 
     step = shard_map(
         body, mesh=mesh,
-        in_specs=(state_specs, dspecs),
+        in_specs=in_specs,
         out_specs=out_specs,
     )
     step.with_monitors = bool(monitors)
+    step.gated = bool(gated)
     return step, cfg
 
 
@@ -263,6 +273,7 @@ def make_sharded_async_steps(
     param_specs=None,
     params_template=None,
     monitors=None,
+    gated: bool = False,
 ) -> tuple[Callable, Callable, ISSGDConfig]:
     """The async pipeline's two computations under shard_map over `mesh`.
 
@@ -283,6 +294,9 @@ def make_sharded_async_steps(
     With a non-empty ``monitors`` the master step grows the trailing
     monitor dict (replicated); ``master_step.with_monitors`` is reattached
     on the shard_mapped wrapper for AsyncPipeline to capture pre-jit.
+    With ``gated=True`` the master takes the controller's replicated
+    ``use_is`` bool as a trailing argument (``master_step.gated`` is
+    likewise reattached).
     """
     from repro.core.async_pipeline import ScoreMetrics, make_async_steps
 
@@ -300,11 +314,14 @@ def make_sharded_async_steps(
         per_example_loss, scorer, optimizer, cfg, num_examples,
         aux_loss=aux_loss, axes=axes, model_axes=maxes,
         param_pspecs=pp if maxes else None, monitor_traces=monitor_traces,
-        monitors=monitors)
+        monitors=monitors, gated=gated)
     store_spec = _store_pspec(axes)
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
     smetric_specs = ScoreMetrics(*([P()] * len(ScoreMetrics._fields)))
+    master_in = (pp, op, pp, store_spec, P(), P(), dspecs)
+    if gated:
+        master_in += (P(),)         # the replicated use_is scalar
     master_out = (pp, op, pp, P(), P(), metric_specs)
     if monitors:
         master_out += ({name: P() for name in monitors.names},)
@@ -316,10 +333,11 @@ def make_sharded_async_steps(
     )
     master_step = shard_map(
         master_body, mesh=mesh,
-        in_specs=(pp, op, pp, store_spec, P(), P(), dspecs),
+        in_specs=master_in,
         out_specs=master_out,
     )
     master_step.with_monitors = bool(monitors)
+    master_step.gated = bool(gated)
     return scoring_step, master_step, cfg
 
 
@@ -339,6 +357,7 @@ def make_sharded_streamed_steps(
     param_specs=None,
     params_template=None,
     monitors=None,
+    gated: bool = False,
 ) -> tuple[Callable, Callable, Callable, ISSGDConfig]:
     """The streamed data plane's three device programs under shard_map.
 
@@ -354,6 +373,10 @@ def make_sharded_streamed_steps(
     ``data_template`` only fixes per-key ndim/dtype for the specs; shapes
     may differ (the template is typically the resident arrays or one host
     chunk).
+
+    With ``gated=True`` both the sample and master programs take the
+    controller's replicated ``use_is`` bool as a trailing argument
+    (``.gated`` reattached on both wrappers).
     """
     from repro.core.async_pipeline import ScoreMetrics
     from repro.data.streaming import make_streamed_steps
@@ -373,7 +396,7 @@ def make_sharded_streamed_steps(
         aux_loss=aux_loss, fused_score=fused_score, axes=axes,
         model_axes=maxes, param_pspecs=pp if maxes else None,
         async_mode=async_mode, monitor_traces=monitor_traces,
-        monitors=monitors)
+        monitors=monitors, gated=gated)
     expect_scores = master_body.expect_scores
 
     store_spec = _store_pspec(axes)
@@ -388,14 +411,19 @@ def make_sharded_streamed_steps(
         in_specs=(pp, store_spec, P(), sharded_rows),
         out_specs=(store_spec, ds, ds, smetric_specs),
     )
+    sample_in = (store_spec, P(), P())
+    if gated:
+        sample_in += (P(),)         # the replicated use_is scalar
     sample_step = shard_map(
         sample_body, mesh=mesh,
-        in_specs=(store_spec, P(), P()),
+        in_specs=sample_in,
         out_specs=(P(), P()),
     )
     master_in = (pp, op, pp, store_spec, P(), P(), replicated_rows)
     if expect_scores:
         master_in += (ds, ds)
+    if gated:
+        master_in += (P(),)
     master_out = (pp, op, pp, store_spec, P(), P(), metric_specs)
     if monitors:
         master_out += ({name: P() for name in monitors.names},)
@@ -406,6 +434,8 @@ def make_sharded_streamed_steps(
     )
     master_step.expect_scores = expect_scores
     master_step.with_monitors = bool(monitors)
+    master_step.gated = bool(gated)
+    sample_step.gated = bool(gated)
     return scoring_step, sample_step, master_step, cfg
 
 

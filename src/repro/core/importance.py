@@ -103,7 +103,37 @@ def effective_sample_size(
     return jnp.square(s1) / jnp.maximum(s2, 1e-30)
 
 
-def proposal_entropy(weights: jax.Array) -> jax.Array:
-    """Entropy of ω (B.3 suggests monitoring it to adapt the smoothing)."""
-    w = weights / jnp.maximum(jnp.sum(weights), 1e-30)
-    return -jnp.sum(jnp.where(w > 0, w * jnp.log(jnp.maximum(w, 1e-30)), 0.0))
+def proposal_entropy(
+    weights: jax.Array,
+    axes: tuple[str, ...] = (),
+    sum_w: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Entropy of ω (B.3 suggests monitoring it to adapt the smoothing).
+
+    The canonical (and only) entropy implementation — the telemetry
+    monitors delegate here.  Shard-decomposable:
+
+        H(ω) = log Σw − (Σ w·log w)/Σw   over   ω = w/Σw,
+
+    with zero-mass rows contributing their exact limit 0, so one psum of
+    the w·log w partials over ``axes`` gives the global entropy of a
+    sharded table.  ``sum_w`` lets callers share an existing psum'd
+    total; with the defaults (no axes, no total) this is plain local
+    arithmetic on whatever slice it is handed.
+    """
+    if sum_w is None:
+        local = jnp.sum(weights)
+        if axes:
+            from repro.core.collectives import psum
+            sum_w = psum(local, tuple(axes))
+        else:
+            sum_w = local
+    sum_w = jnp.maximum(sum_w, 1e-30)
+    wlogw = jnp.where(weights > 0,
+                      weights * jnp.log(jnp.maximum(weights, 1e-30)),
+                      jnp.zeros_like(weights))
+    partial = jnp.sum(wlogw)
+    if axes:
+        from repro.core.collectives import psum
+        partial = psum(partial, tuple(axes))
+    return jnp.log(sum_w) - partial / sum_w

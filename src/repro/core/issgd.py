@@ -283,6 +283,13 @@ def make_master_pass(
     # indices are still drawn in-program from the store, and the host
     # driver (data/streaming.py) resolves them against its window — the
     # draw is deterministic given (store, step, rng), so both sides agree
+    gated: bool = False,            # the controller's uniform↔IS gate: the
+    # body takes one extra trailing device-bool `use_is` and selects the
+    # sampling branch with jnp.where, so the host can flip modes without
+    # a recompile.  gated=False is the identity code path (HLO-identical
+    # to a build that never heard of the gate); a closed gate is bitwise
+    # the uniform-mode program (both pinned in tests/test_controller.py).
+    # Requires mode="relaxed" — the gate *is* the relaxed↔uniform switch.
 ) -> Callable:
     """The master's half of the step as a reusable body.
 
@@ -301,12 +308,22 @@ def make_master_pass(
     telemetry/monitors.py, computed from the same proposal the sampler
     drew from (in async mode that is ``read_buf`` — the observed
     staleness monitor reads the lag right off its scored_at stamps).
+
+    With ``gated=True`` the body takes one extra trailing ``use_is``
+    device-bool (LAST in the signature, after the optional score args):
+    both the uniform draw and the IS draw are computed from the same
+    ``k_sample`` and selected elementwise, so a closed gate reproduces
+    the uniform-mode trajectory bit-for-bit and an open gate the relaxed
+    one — the controller (core/controller.py) owns the scalar.
     """
     is_cfg = cfg.is_cfg
     n = num_examples
     sb = n if cfg.mode == "exact" else cfg.score_batch_size
     if cfg.mode == "fused" and fused_score is None:
         raise ValueError("mode='fused' requires fused_score")
+    if gated and cfg.mode != "relaxed":
+        raise ValueError(f"gated=True switches relaxed↔uniform in-program; "
+                         f"it requires mode='relaxed', got {cfg.mode!r}")
     if constrain_batch is None:
         constrain_batch = lambda b: b
     axes = tuple(axes)
@@ -315,7 +332,9 @@ def make_master_pass(
 
     def master_pass(params, opt_state, stale_params, store: WeightStore,
                     step, k_sample, data,
-                    fresh_scores=None, stale_slice=None):
+                    fresh_scores=None, stale_slice=None, use_is=None):
+        if gated and use_is is None:
+            raise ValueError("gated master_pass needs the use_is scalar")
         _, n_dev = axis_info(axes)
         n_local = store.weights.shape[0]
         w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
@@ -336,6 +355,18 @@ def make_master_pass(
         if cfg.mode == "uniform":
             idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
             scales = jnp.ones((cfg.batch_size,), jnp.float32)
+        elif gated:
+            # both draws from the same k_sample (pure functions of the
+            # key), selected by the controller's gate: a closed gate IS
+            # the uniform branch above, bit-for-bit
+            idx_u = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
+            idx_is = two_stage_sample(k_sample, proposal, cfg.batch_size,
+                                      axes=axes, shards_per_device=w_loc)
+            idx = jnp.where(use_is, idx_is, idx_u)
+            sampled_w = gather_rows(proposal, idx, axes)
+            scales = jnp.where(use_is,
+                               is_loss_scale(sampled_w, mean_weight),
+                               jnp.ones((cfg.batch_size,), jnp.float32))
         else:
             idx = two_stage_sample(k_sample, proposal, cfg.batch_size,
                                    axes=axes, shards_per_device=w_loc)
@@ -432,6 +463,7 @@ def make_train_step(
     model_axes: tuple[str, ...] = (),
     param_pspecs=None,
     monitors=None,
+    gated: bool = False,
 ) -> Callable:
     """Build the fused ISSGD step: (state, dataset_arrays) -> (state, metrics).
 
@@ -445,6 +477,12 @@ def make_train_step(
     ``(state, metrics, monitor_dict)`` instead — the proposal-health
     scalars ride the compiled step as extra outputs; without it the
     program is untouched (HLO-identical, tests/test_telemetry.py).
+
+    With ``gated=True`` (mode="relaxed" only) the step signature becomes
+    ``(state, data, use_is)``: the trailing device-bool selects the
+    sampling branch in-program (see ``make_master_pass``), so the
+    adaptive controller can flip uniform↔IS without recompiling.
+    ``gated=False`` is the identity code path.
     """
     axes = tuple(axes)
     monitors = monitors or None
@@ -455,9 +493,10 @@ def make_train_step(
                               aux_loss=aux_loss, fused_score=fused_score,
                               constrain_batch=constrain_batch, axes=axes,
                               model_axes=model_axes,
-                              param_pspecs=param_pspecs, monitors=monitors)
+                              param_pspecs=param_pspecs, monitors=monitors,
+                              gated=gated)
 
-    def train_step(state: TrainState, data: dict):
+    def _train_step(state: TrainState, data: dict, use_is=None):
         rng, k_sample = jax.random.split(state.rng)
         step = state.step
 
@@ -474,14 +513,22 @@ def make_train_step(
         # ---- 2-6. the master's half ------------------------------------------
         params, opt_state, stale_params, store, metrics, *mon = master(
             state.params, state.opt_state, state.stale_params, store, step,
-            k_sample, data, fresh_scores, stale_slice)
+            k_sample, data, fresh_scores, stale_slice, use_is)
         new_state = TrainState(params, opt_state, stale_params, store,
                                step + 1, rng)
         if monitors:
             return new_state, metrics, mon[0]
         return new_state, metrics
 
+    if gated:
+        def train_step(state: TrainState, data: dict, use_is):
+            return _train_step(state, data, use_is)
+    else:
+        def train_step(state: TrainState, data: dict):
+            return _train_step(state, data)
+
     train_step.with_monitors = bool(monitors)
+    train_step.gated = bool(gated)
     return train_step
 
 

@@ -1,0 +1,174 @@
+"""Pluggable proposal strategies over the WeightStore.
+
+`core/scorer.py` owns the per-architecture score functions (loss /
+logit_grad / ghost / ghost_rev / full).  This module is the layer above:
+it resolves a *proposal strategy name* into a ``(params, batch) -> (B,)``
+scorer, delegating the base names to the architecture factory untouched
+(same bits, same compile) and adding the strategy zoo on top:
+
+``upper_bound``
+    Katharopoulos & Fleuret-style forward-only proposal ω̃ = sqrt(2·L).
+    For softmax cross-entropy, Pinsker's inequality gives
+    ‖p − y‖₁ ≤ sqrt(2·CE), and ‖p − y‖₂ ≤ ‖p − y‖₁, so sqrt(2L) is a
+    provable upper bound on the ``logit_grad`` score at loss-forward
+    cost (pinned in tests/test_sampler_stats.py).
+
+``bandit_mixed``
+    Convex mixture ω̃ = Σ_k λ_k·s_k over base scorers (Bouchard et al.,
+    Online Learning to Sample).  The mixture is per-example pure — no
+    batch statistics — so the store's global normalization turns it into
+    a mixture of the component proposals with mass-reweighted
+    coefficients, shard-safe under every mesh.  ``BanditMixer`` learns λ
+    across runs/rounds from observed variance-reduction rewards.
+
+``null``
+    Constant-zero scores: the honest uniform-mode stub.  A raw weight of
+    0 smooths to the additive floor (the uniform belief), and the
+    scoring pass compiles to a trivial program — so a uniform benchmark
+    leg keeps monitoring parity without billing a ghost backward to
+    plain SGD.
+
+Any proposal strategy composes with every execution mode
+(relaxed / async / streamed / sharded) because it plugs in where the
+architecture scorer always did.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scorer import STRATEGIES
+
+#: Every name `make_proposal` resolves: the architecture-native score
+#: strategies plus the zoo built on top of them.
+PROPOSALS = STRATEGIES + ("upper_bound", "bandit_mixed", "null")
+
+
+def upper_bound_scorer(loss_scorer: Callable) -> Callable:
+    """Wrap a loss scorer into the K&F upper-bound proposal ω̃ = sqrt(2·L).
+
+    ``loss_scorer`` must return per-example non-negative losses (the
+    ``"loss"`` strategy of either architecture factory qualifies); the
+    wrapper costs one sqrt on top of the forward pass.
+    """
+    def score(params, batch):
+        return jnp.sqrt(2.0 * jnp.maximum(loss_scorer(params, batch), 0.0))
+    return score
+
+
+def mixed_scorer(scorers: Sequence[Callable],
+                 weights: Optional[Sequence[float]] = None) -> Callable:
+    """Convex mixture of base scorers: ω̃ = Σ_k λ_k · s_k(params, batch).
+
+    ``weights`` (defaults to uniform) are normalized to sum to 1 and
+    baked in as compile-time constants — re-build the step to move λ
+    (``BanditMixer`` round boundaries).  The combination is per-example
+    pure, so it is exact under data- and model-sharded scoring.
+    """
+    scorers = tuple(scorers)
+    if not scorers:
+        raise ValueError("mixed_scorer needs at least one component")
+    if weights is None:
+        lam = (1.0 / len(scorers),) * len(scorers)
+    else:
+        lam = tuple(float(w) for w in weights)
+        if len(lam) != len(scorers):
+            raise ValueError(
+                f"{len(lam)} mixture weights for {len(scorers)} scorers")
+        if min(lam) < 0.0:
+            raise ValueError("mixture weights must be non-negative")
+        total = sum(lam)
+        if total <= 0.0:
+            raise ValueError("mixture weights must not all be zero")
+        lam = tuple(w / total for w in lam)
+
+    def score(params, batch):
+        acc = lam[0] * scorers[0](params, batch)
+        for l_k, s_k in zip(lam[1:], scorers[1:]):
+            acc = acc + l_k * s_k(params, batch)
+        return acc
+    return score
+
+
+def null_scorer() -> Callable:
+    """Constant-zero scorer: smooths to the uniform proposal.
+
+    The scoring pass still runs (monitoring parity with the IS modes)
+    but compiles to a near-empty program — the right baseline leg for
+    uniform-mode benchmarks.
+    """
+    def score(params, batch):
+        b = jax.tree.leaves(batch)[0].shape[0]
+        return jnp.zeros((b,), jnp.float32)
+    return score
+
+
+def make_proposal(base_factory: Callable, cfg, strategy: str, *,
+                  mix: Optional[Sequence[float]] = None,
+                  mix_of: Sequence[str] = ("loss", "logit_grad"),
+                  **factory_kw) -> Callable:
+    """Resolve ``strategy`` into a ``(params, batch) -> (B,) ω̃`` scorer.
+
+    ``base_factory`` is an architecture scorer factory
+    (:func:`repro.core.scorer.make_mlp_scorer` or ``make_lm_scorer``);
+    ``factory_kw`` is forwarded to every base-factory call (model_axes,
+    attn_impl, ...).  Names in :data:`repro.core.scorer.STRATEGIES`
+    delegate to the factory unchanged, so default runs compile the exact
+    pre-zoo program.  ``mix`` / ``mix_of`` configure the
+    ``bandit_mixed`` mixture (λ coefficients and component strategies).
+    """
+    if strategy in STRATEGIES:
+        return base_factory(cfg, strategy, **factory_kw)
+    if strategy == "upper_bound":
+        return upper_bound_scorer(base_factory(cfg, "loss", **factory_kw))
+    if strategy == "bandit_mixed":
+        comps = tuple(base_factory(cfg, s, **factory_kw) for s in mix_of)
+        return mixed_scorer(comps, mix)
+    if strategy == "null":
+        return null_scorer()
+    raise ValueError(f"unknown proposal strategy {strategy!r}; "
+                     f"available: {', '.join(PROPOSALS)}")
+
+
+class BanditMixer:
+    """EXP3-style multiplicative-weights learner for mixture coefficients.
+
+    One bandit round per observed scalar reward (typically the achieved
+    variance reduction √TrΣ_unif/√TrΣ_stale of a run sampled under the
+    current mixture).  With a single mixture-level reward the
+    importance-weighted per-arm estimate reduces to share-proportional
+    credit: each arm's cumulative score grows by ``reward · λ_k``, and
+    ``mix()`` returns the softmax of the cumulative scores with a γ
+    exploration floor.  Deterministic: no internal randomness, so
+    benchmark runs are reproducible.
+    """
+
+    def __init__(self, arms: Sequence[str], eta: float = 0.5,
+                 explore: float = 0.1):
+        self.arms = tuple(arms)
+        if not self.arms:
+            raise ValueError("BanditMixer needs at least one arm")
+        self.eta = float(eta)
+        self.explore = float(explore)
+        self._scores = [0.0] * len(self.arms)
+        self.rounds = 0
+
+    def mix(self) -> tuple:
+        """Current mixture λ: exploration-floored softmax of arm scores."""
+        m = max(self._scores)
+        exps = [math.exp(self.eta * (s - m)) for s in self._scores]
+        z = sum(exps)
+        k = len(exps)
+        return tuple((1.0 - self.explore) * e / z + self.explore / k
+                     for e in exps)
+
+    def update(self, reward: float) -> None:
+        """Credit ``reward`` to each arm in proportion to its share of
+        the mixture that earned it, and advance the round counter."""
+        lam = self.mix()
+        for j, l_j in enumerate(lam):
+            self._scores[j] += float(reward) * l_j
+        self.rounds += 1

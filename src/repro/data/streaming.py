@@ -93,6 +93,7 @@ def make_streamed_steps(
     async_mode: bool = False,
     monitor_traces: bool = True,
     monitors=None,
+    gated: bool = False,
 ) -> tuple[Callable, Callable, Callable]:
     """The three device programs of the streamed ISSGD step.
 
@@ -125,6 +126,13 @@ def make_streamed_steps(
     grows one trailing ``{name: scalar}`` proposal-health output — see
     make_async_steps; ``master_step.with_monitors`` records the arity
     (capture before jax.jit, which drops function attributes).
+
+    With ``gated=True`` (mode="relaxed" only) BOTH the sample step and
+    the master step take one extra trailing ``use_is`` device-bool — the
+    adaptive controller's uniform↔IS gate.  The two programs replay the
+    same draw, so they must see the same gate value for a step; the
+    driver (StreamedISSGD) appends the controller's scalar to both
+    dispatches.  ``master_step.gated`` records the arity pre-jit.
     """
     if cfg.mode == "exact":
         raise ValueError(
@@ -156,7 +164,7 @@ def make_streamed_steps(
                                    constrain_batch=constrain_batch,
                                    axes=axes, model_axes=model_axes,
                                    param_pspecs=param_pspecs, streaming=True,
-                                   monitors=monitors)
+                                   monitors=monitors, gated=gated)
 
     def scoring_step(score_params, store: WeightStore, step, score_rows):
         store, fresh_scores, stale_slice = scoring_pass(
@@ -166,7 +174,7 @@ def make_streamed_steps(
                                        monitor=traces_in_scoring)
         return store, fresh_scores, stale_slice, smetrics
 
-    def sample_step(store: WeightStore, step, rng):
+    def _sample(store: WeightStore, step, rng, use_is):
         from repro.core.sampler import two_stage_sample
         _, k_sample = jax.random.split(rng)          # master's split, replayed
         _, n_dev = axis_info(axes)
@@ -174,35 +182,63 @@ def make_streamed_steps(
         proposal = read_proposal(store, step, is_cfg)
         if cfg.mode == "uniform":
             idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
+        elif gated:
+            # replicate the gated master's selection bit-for-bit (issgd)
+            idx_u = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
+            idx_is = two_stage_sample(k_sample, proposal, cfg.batch_size,
+                                      axes=axes, shards_per_device=w_loc)
+            idx = jnp.where(use_is, idx_is, idx_u)
         else:
             idx = two_stage_sample(k_sample, proposal, cfg.batch_size,
                                    axes=axes, shards_per_device=w_loc)
         mass = chunk_proposal_mass(proposal, chunk_size, axes)
         return idx, mass
 
-    if expect_scores:
+    if gated:
+        def sample_step(store: WeightStore, step, rng, use_is):
+            return _sample(store, step, rng, use_is)
+    else:
+        def sample_step(store: WeightStore, step, rng):
+            return _sample(store, step, rng, None)
+
+    def _run_master(params, opt_state, stale_params, store, step, rng,
+                    batch_rows, fresh_scores=None, stale_slice=None,
+                    use_is=None):
+        rng, k_sample = jax.random.split(rng)
+        params, opt_state, stale_params, store, metrics, *mon = \
+            master_pass(params, opt_state, stale_params, store, step,
+                        k_sample, batch_rows, fresh_scores, stale_slice,
+                        use_is)
+        out = (params, opt_state, stale_params, store, step + 1, rng,
+               metrics)
+        return out + (mon[0],) if monitors else out
+
+    if expect_scores and gated:
+        def master_step(params, opt_state, stale_params, store, step, rng,
+                        batch_rows, fresh_scores, stale_slice, use_is):
+            return _run_master(params, opt_state, stale_params, store, step,
+                               rng, batch_rows, fresh_scores, stale_slice,
+                               use_is)
+    elif expect_scores:
         def master_step(params, opt_state, stale_params, store, step, rng,
                         batch_rows, fresh_scores, stale_slice):
-            rng, k_sample = jax.random.split(rng)
-            params, opt_state, stale_params, store, metrics, *mon = \
-                master_pass(params, opt_state, stale_params, store, step,
-                            k_sample, batch_rows, fresh_scores, stale_slice)
-            out = (params, opt_state, stale_params, store, step + 1, rng,
-                   metrics)
-            return out + (mon[0],) if monitors else out
+            return _run_master(params, opt_state, stale_params, store, step,
+                               rng, batch_rows, fresh_scores, stale_slice)
+    elif gated:
+        def master_step(params, opt_state, stale_params, store, step, rng,
+                        batch_rows, use_is):
+            return _run_master(params, opt_state, stale_params, store, step,
+                               rng, batch_rows, use_is=use_is)
     else:
         def master_step(params, opt_state, stale_params, store, step, rng,
                         batch_rows):
-            rng, k_sample = jax.random.split(rng)
-            params, opt_state, stale_params, store, metrics, *mon = \
-                master_pass(params, opt_state, stale_params, store, step,
-                            k_sample, batch_rows)
-            out = (params, opt_state, stale_params, store, step + 1, rng,
-                   metrics)
-            return out + (mon[0],) if monitors else out
+            return _run_master(params, opt_state, stale_params, store, step,
+                               rng, batch_rows)
 
     master_step.expect_scores = expect_scores
     master_step.with_monitors = bool(monitors)
+    master_step.gated = bool(gated)
+    sample_step.gated = bool(gated)
     return scoring_step, sample_step, master_step
 
 
@@ -475,6 +511,11 @@ class StreamedISSGD:
     serve.tick) and emits the plane's hit-rate and swap counters at the
     telemetry cadence; monitor-built master steps land their dict on
     ``self.last_monitors``.
+
+    Steps built ``gated=True`` need the adaptive ``controller``
+    (core/controller.ProposalController): its ``gate()`` scalar is
+    appended to both the sample and master dispatches of a step, and
+    decided swap cadences apply via ``pipe.swap_every`` assignment.
     """
 
     def __init__(self, plane: StreamingDataPlane,
@@ -483,7 +524,7 @@ class StreamedISSGD:
                  num_examples: int, *, async_mode: bool = False,
                  swap_every: int = 1, prefetch_every: int = 1,
                  jit: bool = True, serve_tick: Optional[Callable] = None,
-                 telemetry=None):
+                 telemetry=None, controller=None):
         if swap_every < 1 or prefetch_every < 1:
             raise ValueError("swap_every and prefetch_every must be >= 1")
         self.plane = plane
@@ -499,6 +540,11 @@ class StreamedISSGD:
         # capture before jit — jax.jit drops function attributes
         self._with_monitors = bool(getattr(master_step, "with_monitors",
                                            False))
+        self._gated = bool(getattr(master_step, "gated", False))
+        self.controller = controller
+        if self._gated and controller is None:
+            raise ValueError("master_step was built gated=True; pass the "
+                             "controller= that owns its use_is gate")
         if telemetry is None:
             from repro.telemetry import Telemetry
             telemetry = Telemetry.null()
@@ -577,14 +623,16 @@ class StreamedISSGD:
         if self.serve_tick is not None:
             with tel.span("serve.tick", step=t):
                 self.serve_tick(state)
+        gate = (self.controller.gate(),) if self._gated else ()
         idx, mass = tel.timed("sample.dispatch", self._sample, store,
-                              state.step, state.rng, step=t)
+                              state.step, state.rng, *gate, step=t)
         with tel.span("stream.gather", step=t):
             batch = self.plane.gather_global(np.asarray(idx))
         margs = (state.params, state.opt_state, state.stale_params, store,
                  state.step, state.rng, batch)
         if self._expect_scores:
             margs += (fresh, stale)
+        margs += gate
         params, opt_state, stale_params, store, step, rng, metrics = \
             self._unpack_master(tel.timed("master.dispatch", self._master,
                                           *margs, step=t))
@@ -602,15 +650,16 @@ class StreamedISSGD:
         if self.serve_tick is not None:
             with tel.span("serve.tick", step=t):
                 self.serve_tick(state)
+        gate = (self.controller.gate(),) if self._gated else ()
         idx, mass = tel.timed("sample.dispatch", self._sample, bs.read_buf,
-                              state.step, state.rng, step=t)
+                              state.step, state.rng, *gate, step=t)
         with tel.span("stream.gather", step=t):
             batch = self.plane.gather_global(np.asarray(idx))
         params, opt_state, stale_params, _, step, rng, metrics = \
             self._unpack_master(tel.timed(
                 "master.dispatch", self._master, state.params,
                 state.opt_state, state.stale_params, bs.read_buf, state.step,
-                state.rng, batch, step=t))
+                state.rng, batch, *gate, step=t))
         bs = BufferedWeightStore(bs.read_buf, write_buf, bs.synced_at)
         self._advance(mass)
         if self._t % self.swap_every == 0:

@@ -74,8 +74,15 @@ import jax.numpy as jnp
 from repro.core.importance import ISConfig
 from repro.core.issgd import ISSGDConfig, init_train_state, make_train_step
 from repro.core.scorer import make_lm_scorer, make_mlp_scorer
+from repro.core.strategies import PROPOSALS, make_proposal
 from repro.data import make_svhn_like, make_token_dataset
 from repro.optim import sgd
+
+
+def _proposal_name(args) -> str:
+    """The resolved proposal strategy: --proposal-strategy, falling back
+    to the architecture-native --strategy when unset."""
+    return args.proposal_strategy or args.strategy
 
 
 def build_mlp(args, model_axes=()):
@@ -87,7 +94,8 @@ def build_mlp(args, model_axes=()):
                               dim=cfg.input_dim)
     params = init_mlp_classifier(jax.random.key(args.seed + 1), cfg)
     pel = lambda p, b: per_example_loss(p, b, cfg, model_axes=model_axes)
-    scorer = make_mlp_scorer(cfg, args.strategy, model_axes=model_axes)
+    scorer = make_proposal(make_mlp_scorer, cfg, _proposal_name(args),
+                           model_axes=model_axes)
     return params, train, pel, scorer, mlp_specs(cfg)
 
 
@@ -101,8 +109,8 @@ def build_lm(args, model_axes=(), seq_shard=False):
     params = init_transformer(jax.random.key(args.seed + 1), cfg)
     pel = lambda p, b: per_example_loss(p, cfg, b, model_axes=model_axes,
                                         seq_shard=seq_shard)[0]
-    scorer = make_lm_scorer(cfg, args.strategy, model_axes=model_axes,
-                            seq_shard=seq_shard)
+    scorer = make_proposal(make_lm_scorer, cfg, _proposal_name(args),
+                           model_axes=model_axes, seq_shard=seq_shard)
     return params, train, pel, scorer, transformer_specs(cfg)
 
 
@@ -125,6 +133,10 @@ def validate_flags(ap, args, mp: int) -> None:
         ap.error("--async-scoring requires --mode relaxed|uniform (fused "
                  "scores ride the train forward and exact has no separate "
                  "pass to overlap)")
+    if args.adaptive_is and args.mode != "relaxed":
+        ap.error("--adaptive-is requires --mode relaxed (the controller "
+                 "gates the relaxed sampler between uniform and IS; the "
+                 "other modes have no gate to drive)")
     if args.stream and args.mode == "exact":
         ap.error("--stream does not support --mode exact (the oracle "
                  "rescores the full dataset each step; keep it resident)")
@@ -141,7 +153,7 @@ def validate_flags(ap, args, mp: int) -> None:
                      "are ingested; exact is excluded by --stream)")
     if mp <= 1:
         return
-    if args.strategy == "full":
+    if _proposal_name(args) == "full":
         ap.error("--strategy full is the vmap-of-grad test oracle and does "
                  "not support --model-parallel; use ghost or ghost_rev")
     if args.arch == "mlp_svhn":
@@ -185,6 +197,10 @@ docs/ARCHITECTURE.md):
   --sequence-parallel transformer + --model-parallel only; auto-skips
                       when M does not divide the sequence length
   --strategy full     single-device test oracle; not --model-parallel
+  --adaptive-is       requires --mode relaxed (the controller flips the
+                      relaxed sampler's uniform/IS gate from live
+                      telemetry; composes with --mesh/--async-scoring/
+                      --stream/--model-parallel)
 """
 
 
@@ -206,6 +222,23 @@ def main():
                     help="fused mode: run a coverage probe every K steps")
     ap.add_argument("--strategy", default="ghost",
                     choices=["loss", "logit_grad", "ghost", "ghost_rev", "full"])
+    ap.add_argument("--proposal-strategy", default="",
+                    choices=[""] + list(PROPOSALS),
+                    help="proposal strategy from the zoo "
+                    "(core/strategies.py): any --strategy name plus "
+                    "upper_bound (K&F sqrt(2L) forward-only bound), "
+                    "bandit_mixed (convex loss+logit_grad mixture), and "
+                    "null (zero scores = uniform proposal); empty falls "
+                    "back to --strategy")
+    ap.add_argument("--adaptive-is", action="store_true",
+                    help="run the adaptive IS controller "
+                    "(core/controller.py): the sampler starts uniform and "
+                    "switches to IS only when the observed trace ratio "
+                    "says it pays; with --async-scoring the swap cadence "
+                    "adapts to the dispatch-time ratio too (requires "
+                    "--mode relaxed)")
+    ap.add_argument("--adapt-every", type=int, default=25,
+                    help="controller decision cadence in steps")
     ap.add_argument("--smoothing", type=float, default=1.0)
     ap.add_argument("--refresh-every", type=int, default=8)
     ap.add_argument("--staleness-threshold", type=int, default=0)
@@ -343,9 +376,21 @@ def main():
                               "serve_loop": args.serve_loop,
                               "swap_every": args.swap_every,
                               "monitors": list(mon_set.names),
+                              "proposal_strategy": _proposal_name(args),
+                              "adaptive_is": args.adaptive_is,
                               "seed": args.seed})
     else:
         sink = NullSink()
+    ctl = None
+    if args.adaptive_is:
+        from repro.core.controller import ControllerConfig, ProposalController
+        ctl = ProposalController(
+            ControllerConfig(adapt_every=args.adapt_every,
+                             adapt_swap=args.async_scoring),
+            swap_every=args.swap_every)
+        # the tap is truthy even over a NullSink, so the metrics/span
+        # records the controller feeds on keep flowing file or no file
+        sink = ctl.attach(sink)
     tel = Telemetry(sink, every=args.metrics_every or args.log_every,
                     blocking=args.telemetry_blocking)
 
@@ -439,19 +484,19 @@ def main():
                 chunk_size=csize, fused_score=fused_score,
                 async_mode=args.async_scoring,
                 monitor_traces=not args.no_trace_monitors,
-                monitors=mon_set, **pspec_kw)
+                monitors=mon_set, gated=args.adaptive_is, **pspec_kw)
         else:
             s_step, smp_step, m_step = make_streamed_steps(
                 pel, scorer, opt, tcfg, n_examples, csize,
                 fused_score=fused_score, async_mode=args.async_scoring,
                 monitor_traces=not args.no_trace_monitors,
-                monitors=mon_set)
+                monitors=mon_set, gated=args.adaptive_is)
         plane = StreamingDataPlane(store, wc, mesh=mesh)
         pipe = StreamedISSGD(plane, s_step, smp_step, m_step, tcfg,
                              n_examples, async_mode=args.async_scoring,
                              swap_every=args.swap_every,
                              prefetch_every=args.prefetch_every,
-                             telemetry=tel)
+                             telemetry=tel, controller=ctl)
         if args.mode == "fused":
             probe = pipe.probe
         if args.serve_loop:
@@ -503,15 +548,16 @@ def main():
             s_step, m_step, tcfg = dist.make_sharded_async_steps(
                 pel, scorer, opt, tcfg, train.size, mesh, data,
                 monitor_traces=not args.no_trace_monitors,
-                monitors=mon_set, **pspec_kw)
+                monitors=mon_set, gated=args.adaptive_is, **pspec_kw)
             data = dist.shard_dataset(data, mesh)
         else:
             print(f"async scoring, swap every {args.swap_every}", flush=True)
             s_step, m_step = make_async_steps(
                 pel, scorer, opt, tcfg, train.size,
                 monitor_traces=not args.no_trace_monitors,
-                monitors=mon_set)
-        pipe = AsyncPipeline(s_step, m_step, args.swap_every, telemetry=tel)
+                monitors=mon_set, gated=args.adaptive_is)
+        pipe = AsyncPipeline(s_step, m_step, args.swap_every, telemetry=tel,
+                             controller=ctl)
     elif use_mesh:
         from repro.core import distributed as dist
         from repro.launch.mesh import make_debug_mesh
@@ -520,8 +566,10 @@ def main():
               f"{jax.device_count()} devices", flush=True)
         raw_step, tcfg = dist.make_sharded_train_step(
             pel, scorer, opt, tcfg, train.size, mesh, data,
-            fused_score=fused_score, monitors=mon_set, **pspec_kw)
+            fused_score=fused_score, monitors=mon_set,
+            gated=args.adaptive_is, **pspec_kw)
         step_monitors = raw_step.with_monitors  # jax.jit drops attributes
+        step_gated = raw_step.gated
         step = jax.jit(raw_step)
         if args.mode == "fused":
             probe = jax.jit(dist.make_sharded_score_step(
@@ -530,8 +578,10 @@ def main():
         data = dist.shard_dataset(data, mesh)
     else:
         raw_step = make_train_step(pel, scorer, opt, tcfg, train.size,
-                                   fused_score=fused_score, monitors=mon_set)
+                                   fused_score=fused_score, monitors=mon_set,
+                                   gated=args.adaptive_is)
         step_monitors = raw_step.with_monitors  # jax.jit drops attributes
+        step_gated = raw_step.gated
         step = jax.jit(raw_step)
         if args.mode == "fused":
             from repro.core.issgd import make_score_step
@@ -564,7 +614,9 @@ def main():
             state, m = pipe.step(state, data)
             mon = pipe.last_monitors
         else:
-            out = tel.timed("train.step", step, state, data, step=i)
+            sargs = ((state, data, ctl.gate()) if step_gated
+                     else (state, data))
+            out = tel.timed("train.step", step, *sargs, step=i)
             if step_monitors:
                 state, m, mon = out
             else:
@@ -612,6 +664,15 @@ def main():
                 if mon_vals is not None:
                     sink.emit("monitors", step=i,
                               **{k: v for k, v in mon_vals.items()})
+        if ctl is not None:
+            # after the step's metrics have been folded into the window
+            d = ctl.maybe_decide(i)
+            if d is not None:
+                if pipe is not None:
+                    pipe.swap_every = d.swap_every
+                print(f"controller: step {i} use_is={d.use_is} "
+                      f"swap_every={d.swap_every} reason={d.reason}",
+                      flush=True)
     if profiling:   # window ran past the end of the run
         jax.block_until_ready(state.params)
         jax.profiler.stop_trace()

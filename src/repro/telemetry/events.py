@@ -7,6 +7,9 @@ without guessing.  Every record carries:
     v       int     schema version (SCHEMA_VERSION)
     kind    str     record type: "run" | "span" | "counter" | "metrics"
                     | "monitors" | "profile" | "run_end"
+                    | "controller.config" | "controller.decision"
+                    (the last two emitted by core/controller.py through
+                    its sink tap; replayable via replay_decisions)
     t       float   host wall-clock (time.time()) at emit
     step    int?    train step the record belongs to, when one applies
 

@@ -105,13 +105,10 @@ def proposal_monitors(store: WeightStore, proposal: jax.Array,
         out["ess"] = (jnp.square(sum_w) / jnp.maximum(sum_w2, 1e-30)
                       / num_examples)
     if "entropy" in names:
-        # H(ω) = log Σw − (Σ w·log w)/Σw over ω = w/Σw, zero-mass rows
-        # contributing their exact limit 0 — shard-decomposable, so one
-        # psum of the w·log w partials gives the global entropy
-        wlogw = jnp.where(proposal > 0,
-                          proposal * jnp.log(jnp.maximum(proposal, 1e-30)),
-                          jnp.zeros_like(proposal))
-        out["entropy"] = jnp.log(sum_w) - psum(jnp.sum(wlogw), axes) / sum_w
+        # delegate to the one canonical entropy (core/importance.py) —
+        # shard-decomposable, zero-mass rows contribute their limit 0
+        from repro.core.importance import proposal_entropy
+        out["entropy"] = proposal_entropy(proposal, axes, sum_w)
     if "max_weight_frac" in names:
         out["max_weight_frac"] = pmax(jnp.max(proposal), axes) / sum_w
     if "empty_rows" in names:

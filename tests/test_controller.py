@@ -1,0 +1,310 @@
+"""Adaptive IS controller (core/controller.py) and the gated step contract.
+
+Pins the PR's invariants:
+
+  * gated=False is the identity path — HLO-byte-identical to a build
+    that never heard of the controller;
+  * a gated relaxed step with the gate closed is *bitwise* a plain
+    uniform-mode run, and with the gate open bitwise the relaxed run
+    (both draws come from the same key; the gate only selects);
+  * the async pipeline under a never-opening controller is bitwise the
+    uniform-mode pipeline;
+  * every in-run decision is an exact pure fold over the JSONL event
+    stream — replay_decisions over the file reproduces the run's
+    decisions bit-for-bit;
+  * the decision rules themselves (variance-ratio gate, ess-floor veto,
+    hysteresis, swap cadence from the dispatch-time ratio);
+  * the benchmark harness's timed loop performs exactly one host sync
+    per recording step (the PR's benchmark-layer bugfix).
+"""
+import dataclasses
+import inspect
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import REPO
+from repro.core.controller import (ControllerConfig, ProposalController,
+                                   replay_decisions)
+from repro.core.importance import ISConfig
+from repro.core.issgd import ISSGDConfig, init_train_state, make_train_step
+from repro.core.scorer import make_mlp_scorer
+from repro.data import make_svhn_like
+from repro.models.mlp import MLPConfig, init_mlp_classifier, per_example_loss
+from repro.optim import sgd
+from repro.telemetry import EventSink, NullSink
+from repro.telemetry.events import read_events
+
+
+def _setup(mode="relaxed", n=256):
+    cfg = MLPConfig(input_dim=16, hidden=(32,), num_classes=4)
+    train, _ = make_svhn_like(jax.random.key(0), n=n, dim=16, classes=4)
+    params = init_mlp_classifier(jax.random.key(1), cfg)
+    opt = sgd(0.05)
+    tcfg = ISSGDConfig(batch_size=16, score_batch_size=64, mode=mode,
+                       is_cfg=ISConfig(smoothing=0.1), score_shards=4)
+    pel = lambda p, b: per_example_loss(p, b, cfg)
+    scorer = make_mlp_scorer(cfg, "ghost")
+    return pel, scorer, opt, tcfg, params, train
+
+
+def _bitwise_equal_states(a, b):
+    a = a._replace(rng=jax.random.key_data(a.rng))
+    b = b._replace(rng=jax.random.key_data(b.rng))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------- identity
+
+def test_gate_off_is_hlo_identical():
+    """gated=False must not change a single HLO byte of the step."""
+    pel, scorer, opt, tcfg, params, train = _setup()
+    state = init_train_state(params, opt, train.size, seed=0)
+
+    def lowered(**kw):
+        step = make_train_step(pel, scorer, opt, tcfg, train.size, **kw)
+        return jax.jit(step).lower(state, train.arrays).as_text()
+
+    base = lowered()
+    assert lowered(gated=False) == base
+
+
+def test_gated_requires_relaxed():
+    pel, scorer, opt, tcfg, params, train = _setup(mode="uniform")
+    with pytest.raises(ValueError, match="relaxed"):
+        make_train_step(pel, scorer, opt, tcfg, train.size, gated=True)
+
+
+# ------------------------------------------------------- gate bitwise pins
+
+@pytest.mark.parametrize("open_gate,ref_mode",
+                         [(False, "uniform"), (True, "relaxed")])
+def test_gate_matches_reference_mode_bitwise(open_gate, ref_mode):
+    """Closed gate ≡ uniform mode, open gate ≡ relaxed mode — per step
+    and in the final state, bit for bit."""
+    pel, scorer, opt, tcfg, params, train = _setup()
+    gstep = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
+                                    gated=True))
+    rcfg = dataclasses.replace(tcfg, mode=ref_mode)
+    rstep = jax.jit(make_train_step(pel, scorer, opt, rcfg, train.size))
+    gs = init_train_state(params, opt, train.size, seed=0)
+    rs = init_train_state(params, opt, train.size, seed=0)
+    gate = jnp.asarray(open_gate)
+    for t in range(6):
+        gs, gm = gstep(gs, train.arrays, gate)
+        rs, rm = rstep(rs, train.arrays)
+        assert np.array_equal(np.asarray(gm.sample_indices),
+                              np.asarray(rm.sample_indices)), t
+        assert float(gm.loss) == float(rm.loss), t
+    _bitwise_equal_states(gs, rs)
+
+
+def test_gate_flip_mid_run_tracks_reference():
+    """Flipping the gate mid-run never recompiles and lands on the
+    matching reference branch each step."""
+    pel, scorer, opt, tcfg, params, train = _setup()
+    gstep = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
+                                    gated=True))
+    ustep = jax.jit(make_train_step(
+        pel, scorer, opt, dataclasses.replace(tcfg, mode="uniform"),
+        train.size))
+    rstep = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size))
+    gs = init_train_state(params, opt, train.size, seed=0)
+    rs = init_train_state(params, opt, train.size, seed=0)
+    schedule = [False, False, True, False, True, True]
+    for t, open_gate in enumerate(schedule):
+        gs, gm = gstep(gs, train.arrays, jnp.asarray(open_gate))
+        # the reference advances with whichever plain-mode step matches;
+        # both read the same state, so the trajectories stay aligned
+        rs, rm = (rstep if open_gate else ustep)(rs, train.arrays)
+        assert np.array_equal(np.asarray(gm.sample_indices),
+                              np.asarray(rm.sample_indices)), t
+    _bitwise_equal_states(gs, rs)
+
+
+def test_async_closed_gate_is_uniform_bitwise():
+    """An async pipeline under a never-opening controller is bitwise the
+    uniform-mode pipeline."""
+    from repro.core.async_pipeline import (AsyncPipeline, init_async_state,
+                                           make_async_steps)
+    pel, scorer, opt, tcfg, params, train = _setup()
+    data, n = train.arrays, train.size
+
+    gsteps = make_async_steps(pel, scorer, opt, tcfg, n, gated=True)
+    with pytest.raises(ValueError, match="controller"):
+        AsyncPipeline(*gsteps, swap_every=2)   # gated needs its gate owner
+    ctl = ProposalController(ControllerConfig())      # gate starts closed
+    gpipe = AsyncPipeline(*gsteps, swap_every=2, controller=ctl)
+    ucfg = dataclasses.replace(tcfg, mode="uniform")
+    upipe = AsyncPipeline(*make_async_steps(pel, scorer, opt, ucfg, n),
+                          swap_every=2)
+    ga, ua = (init_async_state(params, opt, n),
+              init_async_state(params, opt, n))
+    for t in range(6):
+        ga, gm = gpipe.step(ga, data)
+        ua, um = upipe.step(ua, data)
+        assert float(gm.loss) == float(um.loss), t
+    for x, y in zip(jax.tree.leaves(ga._replace(rng=jax.random.key_data(ga.rng))),
+                    jax.tree.leaves(ua._replace(rng=jax.random.key_data(ua.rng)))):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ replay pins
+
+def test_jsonl_replay_matches_in_run(tmp_path):
+    """Decisions recomputed offline from the JSONL alone match the
+    in-run decisions exactly (strict replay raises on any mismatch)."""
+    pel, scorer, opt, tcfg, params, train = _setup()
+    path = str(tmp_path / "events.jsonl")
+    ctl = ProposalController(ControllerConfig(adapt_every=4))
+    sink = ctl.attach(EventSink(path))
+    step = jax.jit(make_train_step(pel, scorer, opt, tcfg, train.size,
+                                   gated=True))
+    st = init_train_state(params, opt, train.size, seed=0)
+    for i in range(16):
+        st, m = step(st, train.arrays, ctl.gate())
+        if i % 2 == 0:
+            vals = jax.device_get((m.loss, m.trace_stale, m.trace_unif,
+                                   m.ess_frac))
+            sink.emit("metrics", step=i, loss=float(vals[0]),
+                      trace_stale=float(vals[1]),
+                      trace_unif=float(vals[2]), ess_frac=float(vals[3]))
+        ctl.maybe_decide(i)
+    sink.close()
+    assert len(ctl.decisions) == 4
+    assert replay_decisions(read_events(path)) == ctl.decisions
+
+
+def test_replay_strict_raises_on_tampered_stream(tmp_path):
+    import json
+    path = str(tmp_path / "events.jsonl")
+    ctl = ProposalController(ControllerConfig(adapt_every=1))
+    sink = ctl.attach(EventSink(path))
+    sink.emit("metrics", step=0, trace_stale=1.0, trace_unif=2.0)
+    ctl.maybe_decide(0)
+    sink.close()
+    recs = list(read_events(path))
+    tampered = [dict(r, trace_unif=0.5) if r["kind"] == "metrics" else r
+                for r in recs]
+    with pytest.raises(ValueError, match="replay mismatch"):
+        replay_decisions(tampered)
+    assert replay_decisions(recs) == ctl.decisions   # untouched stream ok
+
+
+# --------------------------------------------------------- decision rules
+
+def test_gate_decision_rules():
+    ctl = ProposalController(ControllerConfig(adapt_every=1))
+    sink = ctl.attach(NullSink())
+    assert bool(sink)       # the tap stays truthy over a NullSink
+    d = ctl.maybe_decide(0)
+    assert d.reason == "no-signal" and not d.use_is
+    sink.emit("metrics", step=1, trace_stale=1.0, trace_unif=2.0,
+              ess_frac=0.9)
+    d = ctl.maybe_decide(1)
+    assert d.use_is and d.reason == "is-pays" and d.var_ratio == 2.0
+    sink.emit("metrics", step=2, trace_stale=2.0, trace_unif=1.0)
+    d = ctl.maybe_decide(2)
+    assert not d.use_is and d.reason == "uniform-pays"
+
+
+def test_decision_cadence():
+    ctl = ProposalController(ControllerConfig(adapt_every=4))
+    ctl.attach(NullSink())
+    assert [i for i in range(12) if ctl.maybe_decide(i)] == [3, 7, 11]
+
+
+def test_ess_floor_vetoes_gate():
+    ctl = ProposalController(ControllerConfig(adapt_every=1, ess_floor=0.5))
+    sink = ctl.attach(NullSink())
+    sink.emit("metrics", step=0, trace_stale=1.0, trace_unif=3.0,
+              ess_frac=0.1)
+    d = ctl.maybe_decide(0)
+    assert not d.use_is and d.reason == "ess-floor"
+
+
+def test_nonfinite_pairs_are_skipped():
+    ctl = ProposalController(ControllerConfig(adapt_every=1))
+    sink = ctl.attach(NullSink())
+    sink.emit("metrics", step=0, trace_stale=float("nan"), trace_unif=2.0)
+    sink.emit("metrics", step=0, trace_stale=0.0, trace_unif=2.0)
+    d = ctl.maybe_decide(0)
+    assert d.reason == "no-signal" and d.var_ratio is None
+
+
+def test_hysteresis_delays_flip():
+    ctl = ProposalController(ControllerConfig(adapt_every=1, hysteresis=2))
+    sink = ctl.attach(NullSink())
+    sink.emit("metrics", step=0, trace_stale=1.0, trace_unif=2.0)
+    d = ctl.maybe_decide(0)
+    assert not d.use_is and d.reason == "is-pays-pending"
+    sink.emit("metrics", step=1, trace_stale=1.0, trace_unif=2.0)
+    d = ctl.maybe_decide(1)
+    assert d.use_is and d.reason == "is-pays"
+
+
+def test_swap_cadence_from_dispatch_ratio(tmp_path):
+    """K = clip(round(scoring/master dispatch-time ratio)) — and the
+    cadence decisions replay exactly from the JSONL spans."""
+    path = str(tmp_path / "spans.jsonl")
+    ctl = ProposalController(ControllerConfig(adapt_every=1,
+                                              adapt_swap=True),
+                             swap_every=2)
+    sink = ctl.attach(EventSink(path))
+    for _ in range(4):
+        sink.span("scoring.dispatch", 0.030, step=0)
+        sink.span("master.dispatch", 0.010, step=0)
+    d = ctl.maybe_decide(0)
+    assert d.swap_every == 3
+    assert d.dispatch_ratio == pytest.approx(3.0)
+    for _ in range(2):                  # ratio 90 → clamped to swap_max
+        sink.span("scoring.dispatch", 0.900, step=1)
+        sink.span("master.dispatch", 0.010, step=1)
+    d = ctl.maybe_decide(1)
+    assert d.swap_every == 8
+    sink.close()
+    assert replay_decisions(read_events(path)) == ctl.decisions
+
+
+def test_gate_is_cached_device_scalar():
+    ctl = ProposalController(ControllerConfig())
+    g0 = ctl.gate()
+    assert g0 is ctl.gate()             # cached between decisions
+    assert bool(np.asarray(g0)) is False
+    ctl.use_is = True
+    g1 = ctl.gate()
+    assert g1 is not g0 and bool(np.asarray(g1)) is True
+
+
+# ----------------------------------------------- benchmark-layer bugfixes
+
+def test_benchmark_recording_steps_single_sync(monkeypatch):
+    """run_training's timed loop performs exactly ONE host transfer per
+    recording step — the per-metric float() syncs are gone."""
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    import benchmarks.common as bc
+
+    assert "float(m." not in inspect.getsource(bc.run_training)
+
+    cfg, train, test, params = bc.setup(0)
+    calls = []
+    real = jax.device_get
+
+    def counting(x):
+        calls.append(1)
+        return real(x)
+
+    monkeypatch.setattr(bc.jax, "device_get", counting)
+    timings = {}
+    st, hist, elapsed = bc.run_training(
+        params, train, mode="relaxed", steps=7, lr=0.01, smoothing=1.0,
+        strategy="loss", score_batch=128, record_every=3, timings=timings)
+    assert len(calls) == 3              # recording steps 0, 3, 6 only
+    assert len(hist) == 3
+    assert timings["us_per_step"] > 0 and timings["compile_s"] > 0
+    assert elapsed > 0

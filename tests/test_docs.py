@@ -99,3 +99,25 @@ def test_kernels_doc_exists_and_is_linked():
                    "bitwise", "GQA", "attn_score_sweep",
                    "per_example_sqnorm_multi"):
         assert anchor in text, f"KERNELS.md lost its {anchor!r} anchor"
+
+
+def test_controller_docs_anchored():
+    """The ISSUE 9 adaptive-control docs: ARCHITECTURE.md keeps its
+    strategy-zoo/controller section and README its "Adaptive proposal
+    control" walkthrough, both anchored to the modules, flags, event
+    kinds, and bitwise/HLO invariants they describe."""
+    with open(os.path.join(REPO, "docs", "ARCHITECTURE.md")) as f:
+        arch = f.read()
+    for anchor in ("## 9. Adaptive proposal control", "core/controller.py",
+                   "core/strategies.py", "controller.decision",
+                   "replay_decisions", "var_margin", "use_is",
+                   "upper_bound", "bandit_mixed",
+                   "tests/test_controller.py"):
+        assert anchor in arch, f"ARCHITECTURE.md lost its {anchor!r} anchor"
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for anchor in ("## Adaptive proposal control", "--proposal-strategy",
+                   "--adaptive-is", "--adapt-every",
+                   '"kind": "controller.decision"',
+                   "tests/test_controller.py"):
+        assert anchor in readme, f"README lost its {anchor!r} anchor"

@@ -417,3 +417,103 @@ def test_uniform_store_gives_unit_scales():
     proposal = read_proposal(store, 0, ISConfig(smoothing=1.0))
     scales = is_loss_scale(proposal[:8], jnp.mean(proposal))
     np.testing.assert_array_equal(np.asarray(scales), np.ones(8, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Proposal strategy zoo (core/strategies.py)
+# ---------------------------------------------------------------------------
+
+def test_upper_bound_dominates_logit_grad():
+    """Pinsker: ‖p − y‖₂ ≤ ‖p − y‖₁ ≤ sqrt(2·CE), so the forward-only
+    upper_bound score dominates the logit_grad score elementwise — the
+    provable-bound property the zoo docstring claims, checked exactly."""
+    from repro.core.scorer import make_mlp_scorer
+    from repro.core.strategies import make_proposal
+    from repro.data import make_svhn_like
+    from repro.models.mlp import MLPConfig, init_mlp_classifier
+
+    cfg = MLPConfig(input_dim=8, hidden=(16,), num_classes=4)
+    train, _ = make_svhn_like(jax.random.key(2), n=256, dim=8, classes=4)
+    params = init_mlp_classifier(jax.random.key(3), cfg)
+    ub = np.asarray(make_proposal(make_mlp_scorer, cfg, "upper_bound")(
+        params, train.arrays))
+    lg = np.asarray(make_mlp_scorer(cfg, "logit_grad")(params, train.arrays))
+    assert np.all(ub + 1e-5 >= lg), float((lg - ub).max())
+    assert ub.shape == lg.shape == (train.size,)
+
+
+@pytest.mark.stats
+@pytest.mark.parametrize("strategy", ["upper_bound", "bandit_mixed"])
+def test_zoo_proposal_chi2_gof(strategy):
+    """The hierarchical draw from a store scored by the zoo strategies is
+    the exact multinomial of the smoothed proposal — the sampler makes no
+    assumption about where the weights came from."""
+    from repro.core.importance import ISConfig
+    from repro.core.issgd import (ISSGDConfig, init_train_state,
+                                  make_train_step)
+    from repro.core.sampler import sample_indices
+    from repro.core.scorer import make_mlp_scorer
+    from repro.core.strategies import make_proposal
+    from repro.core.weight_store import read_proposal
+    from repro.data import make_svhn_like
+    from repro.models.mlp import (MLPConfig, init_mlp_classifier,
+                                  per_example_loss)
+    from repro.optim import sgd
+
+    n = 256
+    cfg = MLPConfig(input_dim=8, hidden=(16,), num_classes=4)
+    train, _ = make_svhn_like(jax.random.key(2), n=n, dim=8, classes=4)
+    params = init_mlp_classifier(jax.random.key(3), cfg)
+    opt = sgd(0.0)   # freeze params: the scored table is deterministic
+    tcfg = ISSGDConfig(batch_size=16, score_batch_size=64, mode="relaxed",
+                       is_cfg=ISConfig(smoothing=0.05), score_shards=4)
+    pel = lambda p, b: per_example_loss(p, b, cfg)
+    scorer = make_proposal(make_mlp_scorer, cfg, strategy, mix=(0.3, 0.7))
+    step = jax.jit(make_train_step(pel, scorer, opt, tcfg, n))
+    st = init_train_state(params, opt, n)
+    for _ in range(4):   # 4 x 64 rows = the whole table scored
+        st, _ = step(st, train.arrays)
+
+    prop = read_proposal(st.store, 4, tcfg.is_cfg)
+    p = np.asarray(prop, np.float64)
+    p /= p.sum()
+    m_draws = 200_000
+    idx = np.asarray(sample_indices(jax.random.key(11), prop, m_draws,
+                                    num_shards=4))
+    counts = np.bincount(idx, minlength=n)
+    expected = m_draws * p
+    assert expected.min() > 20          # chi-squared validity regime
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    crit = chi2_critical(n - 1)
+    assert chi2 < crit, f"chi2={chi2:.1f} >= crit={crit:.1f}"
+
+
+@pytest.mark.stats
+def test_gated_switch_preserves_unbiasedness():
+    """Mid-run uniform↔IS switches keep §4.1 unbiasedness: after a
+    closed-gate (uniform) step, the open-gate IS step's gradient estimate
+    is unbiased for the full-batch gradient at the post-switch params —
+    the controller can flip the gate whenever it likes."""
+    from repro.core.issgd import TrainState, make_train_step
+
+    (train, params, opt, tcfg, pel, fused, scorer, skewed_store, flat,
+     full_grad) = _unbias_setup()
+    data, n, trials = train.arrays, train.size, 300
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(pel, scorer, opt, tcfg, n, gated=True))
+
+    # one shared closed-gate (uniform) step with a fixed key: every trial
+    # resumes from the same post-switch state, so the truth is fixed too
+    s0 = TrainState(params, opt_state, params, skewed_store,
+                    jnp.zeros((), jnp.int32), jax.random.key(7))
+    s1, _ = step(s0, data, jnp.asarray(False))
+    full_grad1 = flat(jax.grad(
+        lambda p: jnp.mean(pel(p, data)))(s1.params))
+
+    def one_trial(r):
+        s2, _ = step(s1._replace(rng=jax.random.key(1000 + r)), data,
+                     jnp.asarray(True))
+        return flat(s1.params) - flat(s2.params)
+
+    grads = np.stack([one_trial(r) for r in range(trials)])
+    _assert_clt_close(grads, full_grad1)
