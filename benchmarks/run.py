@@ -116,6 +116,12 @@ def _streaming_io():
     return streaming_io()
 
 
+@bench("sampling_scale")
+def _sampling_scale():
+    from benchmarks.sampling_scale import sampling_scale
+    return sampling_scale()
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")

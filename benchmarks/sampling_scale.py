@@ -1,0 +1,112 @@
+"""Sampling-structures scale sweep (ISSUE 10): score-write cost, draw
+cost, and quantization distortion vs table size N.
+
+Three questions, one table-size sweep:
+
+  * score-write cost — after a score batch touches B chunks, the dense
+    path re-reduces all N rows for stage-1 while the mass index refreshes
+    only the B touched leaves + their O(log C) ancestor paths
+    (``refresh_chunks``).  The sweep fits log-log slopes: dense must be
+    ~1 (linear), the index refresh clearly sub-linear in N.
+  * draw cost — ``indexed_sample`` (O(log C) descent + one-chunk
+    stage-2) vs the dense two-stage draw's full block-CDF build.
+  * distortion — measured TV between the f32 proposal and its bf16/int8
+    twins, against the analytic ``quantization_tv_bound`` (the same
+    inequality the chi²/TV battery asserts at test scale).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core.importance import ISConfig
+from repro.core.mass_index import (block_masses, build_index, indexed_sample,
+                                   refresh_chunks)
+from repro.core.sampler import sample_indices
+from repro.core.weight_store import (WeightStore, quantization_tv_bound,
+                                     quantize_weights, read_proposal)
+
+CHUNK = 1024          # streaming-plane chunk size
+TOUCHED = 8           # chunks written per simulated score batch
+DRAWS = 256
+SIZES = (2 ** 14, 2 ** 16, 2 ** 18, 2 ** 20)
+
+
+def _tv(p: jax.Array, q: jax.Array) -> float:
+    p = p / jnp.sum(p)
+    q = q / jnp.sum(q)
+    return float(0.5 * jnp.sum(jnp.abs(p - q)))
+
+
+def _distortion(table: jax.Array, cfg: ISConfig, step: int = 1) -> dict:
+    zeros = jnp.zeros((table.shape[0],), jnp.int32)
+    f32 = WeightStore(weights=table, scored_at=zeros)
+    bf16 = WeightStore(weights=table.astype(jnp.bfloat16), scored_at=zeros)
+    codes, qscale = quantize_weights(table, CHUNK)
+    int8 = WeightStore(weights=codes, scored_at=zeros, qscale=qscale)
+    p = read_proposal(f32, step, cfg)
+    out = {}
+    for name, store in (("bf16", bf16), ("int8", int8)):
+        out[f"tv_{name}"] = _tv(p, read_proposal(store, step, cfg))
+        out[f"tv_bound_{name}"] = float(
+            quantization_tv_bound(f32, step, cfg, CHUNK, name))
+    return out
+
+
+def sampling_scale():
+    cfg = ISConfig()
+    rows = []
+    for n in SIZES:
+        key = jax.random.key(n)
+        table = jax.random.uniform(key, (n,), jnp.float32) + 1e-3
+        c = n // CHUNK
+        index = build_index(table, CHUNK)
+        chunk_ids = jnp.arange(TOUCHED, dtype=jnp.int32) * (c // TOUCHED)
+
+        dense_rebuild = jax.jit(partial(block_masses, num_blocks=c))
+        tree_refresh = jax.jit(partial(refresh_chunks, chunk_size=CHUNK))
+        dense_draw = jax.jit(partial(sample_indices, num_samples=DRAWS,
+                                     num_shards=c))
+        tree_draw = jax.jit(partial(indexed_sample, chunk_size=CHUNK,
+                                    num_samples=DRAWS))
+
+        t_dense = time_fn(dense_rebuild, table)
+        t_refresh = time_fn(lambda: tree_refresh(index, table,
+                                                 chunk_ids=chunk_ids))
+        t_dense_draw = time_fn(dense_draw, key, table)
+        t_tree_draw = time_fn(lambda: tree_draw(key, table, index))
+
+        row = {"n": n, "chunks": c,
+               "dense_rebuild_us": t_dense * 1e6,
+               "tree_refresh_us": t_refresh * 1e6,
+               "dense_draw_us": t_dense_draw * 1e6,
+               "tree_draw_us": t_tree_draw * 1e6}
+        row.update(_distortion(table, cfg))
+        rows.append(row)
+
+    logn = np.log([r["n"] for r in rows])
+    slope = lambda k: float(np.polyfit(
+        logn, np.log([r[k] for r in rows]), 1)[0])
+    last = rows[-1]
+    summary = {
+        "dense_rebuild_slope": slope("dense_rebuild_us"),
+        "tree_refresh_slope": slope("tree_refresh_us"),
+        "write_speedup_at_max_n":
+            last["dense_rebuild_us"] / last["tree_refresh_us"],
+        "tv_bf16_under_bound":
+            all(r["tv_bf16"] <= r["tv_bound_bf16"] for r in rows),
+        "tv_int8_under_bound":
+            all(r["tv_int8"] <= r["tv_bound_int8"] for r in rows),
+    }
+    return rows, summary
+
+
+if __name__ == "__main__":
+    rows, summary = sampling_scale()
+    for r in rows:
+        print(r)
+    print(summary)

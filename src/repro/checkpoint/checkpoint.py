@@ -94,6 +94,8 @@ def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{i}/"))
+    elif tree is None:
+        pass  # empty pytree node (e.g. WeightStore.qscale on f32 stores)
     else:
         key = prefix.rstrip("/")
         # leaves stay un-materialized: save_checkpoint decides per leaf

@@ -38,8 +38,12 @@ def _dspec(axes: tuple[str, ...]) -> P:
     return P(dim_spec(axes))
 
 
-def _store_pspec(axes: tuple[str, ...]) -> WeightStore:
-    return WeightStore(weights=_dspec(axes), scored_at=_dspec(axes))
+def _store_pspec(axes: tuple[str, ...], quantized: bool = False) -> WeightStore:
+    """Spec tree for a WeightStore shard: ``quantized`` adds the int8
+    table's per-chunk scale leaf (example-axis-sharded like the codes —
+    chunk boundaries never straddle devices)."""
+    return WeightStore(weights=_dspec(axes), scored_at=_dspec(axes),
+                       qscale=_dspec(axes) if quantized else None)
 
 
 def _is_pspec(x) -> bool:
@@ -99,7 +103,7 @@ def _resolve_param_specs(mesh: Mesh, optimizer, param_specs, params_template):
 
 
 def train_state_pspecs(mesh: Mesh, params_pspecs=P(),
-                       opt_pspecs=P()) -> TrainState:
+                       opt_pspecs=P(), quantized: bool = False) -> TrainState:
     """PartitionSpec tree for TrainState: params/opt replicated unless
     model-parallel spec trees are passed in, the WeightStore sharded over
     the data axes.  (Async states carry a BufferedWeightStore instead —
@@ -110,7 +114,7 @@ def train_state_pspecs(mesh: Mesh, params_pspecs=P(),
     return TrainState(
         params=params_pspecs, opt_state=opt_pspecs,
         stale_params=params_pspecs,
-        store=_store_pspec(axes),
+        store=_store_pspec(axes, quantized),
         step=P(), rng=P(),
     )
 
@@ -140,7 +144,9 @@ def _place_store(store, mesh: Mesh, axes: tuple[str, ...]):
             write_buf=_place_store(store.write_buf, mesh, axes),
             synced_at=put(store.synced_at, P()))
     return WeightStore(weights=put(store.weights, _dspec(axes)),
-                       scored_at=put(store.scored_at, _dspec(axes)))
+                       scored_at=put(store.scored_at, _dspec(axes)),
+                       qscale=(None if store.qscale is None
+                               else put(store.qscale, _dspec(axes))))
 
 
 def shard_train_state(state: TrainState, mesh: Mesh,
@@ -240,7 +246,8 @@ def make_sharded_train_step(
                            model_axes=maxes,
                            param_pspecs=pp if maxes else None,
                            monitors=monitors, gated=gated)
-    state_specs = train_state_pspecs(mesh, pp, op)
+    state_specs = train_state_pspecs(mesh, pp, op,
+                                     quantized=cfg.table_dtype == "int8")
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
     in_specs = (state_specs, dspecs)
@@ -315,7 +322,7 @@ def make_sharded_async_steps(
         aux_loss=aux_loss, axes=axes, model_axes=maxes,
         param_pspecs=pp if maxes else None, monitor_traces=monitor_traces,
         monitors=monitors, gated=gated)
-    store_spec = _store_pspec(axes)
+    store_spec = _store_pspec(axes, quantized=cfg.table_dtype == "int8")
     dspecs = dataset_pspecs(data_template, mesh)
     metric_specs = StepMetrics(*([P()] * len(StepMetrics._fields)))
     smetric_specs = ScoreMetrics(*([P()] * len(ScoreMetrics._fields)))
@@ -399,7 +406,7 @@ def make_sharded_streamed_steps(
         monitors=monitors, gated=gated)
     expect_scores = master_body.expect_scores
 
-    store_spec = _store_pspec(axes)
+    store_spec = _store_pspec(axes, quantized=cfg.table_dtype == "int8")
     ds = _dspec(axes)
     sharded_rows = dataset_pspecs(data_template, mesh)   # scoring stream
     replicated_rows = {k: P() for k in data_template}    # sampled minibatch
@@ -459,7 +466,8 @@ def make_sharded_score_step(
     body = make_score_step(scorer, cfg, num_examples, axes=axes)
     pp, op, _ = _resolve_param_specs(mesh, optimizer, param_specs,
                                      params_template)
-    state_specs = train_state_pspecs(mesh, pp, op)
+    state_specs = train_state_pspecs(mesh, pp, op,
+                                     quantized=cfg.table_dtype == "int8")
     dspecs = dataset_pspecs(data_template, mesh)
     return shard_map(
         body, mesh=mesh,

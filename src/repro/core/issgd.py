@@ -73,6 +73,20 @@ class ISSGDConfig:
     is_cfg: ISConfig = ISConfig()
     grad_clip: float = 0.0
     score_shards: int = 1              # W: logical scoring shards (mesh-free)
+    # --- billion-example sampling structures (ISSUE 10) ------------------
+    # stage-1 source: "dense" recomputes block masses in-draw; "tree"
+    # routes them through core/mass_index.py (bitwise-equal draws)
+    index: str = "dense"               # dense | tree
+    # storage dtype of the weight table: f32 | bf16 | int8 (+ per-chunk
+    # scale); non-f32 reads dequantize, so the sampled distribution IS
+    # the quantized proposal
+    table_dtype: str = "f32"
+    # TTL decay of stale scores toward the uniform floor, in steps
+    # (weight_store.decay_proposal); 0 disables (HLO-identical off path)
+    score_ttl: int = 0
+    # chunk granularity for the index / int8 scales / TTL decay; 0 →
+    # one chunk per logical scoring shard (n_w)
+    index_chunk_size: int = 0
 
 
 class TrainState(NamedTuple):
@@ -100,17 +114,54 @@ class StepMetrics(NamedTuple):
 
 
 def init_train_state(params, optimizer: Optimizer, num_examples: int,
-                     seed: int = 0) -> TrainState:
+                     seed: int = 0, table_dtype: str = "f32",
+                     index_chunk_size: int = 0) -> TrainState:
     """Fresh TrainState: stale params start as a copy of θ₀, the store
-    unscored (uniform proposal until the first sweep)."""
+    unscored (uniform proposal until the first sweep).  ``table_dtype``/
+    ``index_chunk_size`` select the store representation (see
+    ``weight_store.init_store``)."""
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),
         stale_params=jax.tree.map(lambda x: x, params),
-        store=init_store(num_examples),
+        store=init_store(num_examples, table_dtype=table_dtype,
+                         chunk_size=index_chunk_size),
         step=jnp.zeros((), jnp.int32),
         rng=jax.random.key(seed),
     )
+
+
+def read_sampling_proposal(store: WeightStore, step, cfg: ISSGDConfig,
+                           n_w: int) -> jax.Array:
+    """The proposal the master actually draws from: ``read_proposal``
+    (B.1 filter + B.3 smoothing + EMPTY mask, dequantizing non-f32
+    tables) followed by the optional per-chunk TTL decay toward the
+    uniform floor.  ``score_ttl=0`` takes the identity code path —
+    byte-identical HLO to a build that never heard of decay (gated in
+    tests/test_mass_index.py).  Shard-local: the streamed sample_step
+    calls the same function so host and device replay the same draw."""
+    proposal = read_proposal(store, step, cfg.is_cfg)
+    if cfg.score_ttl > 0:
+        from repro.core.weight_store import decay_proposal
+        cs = cfg.index_chunk_size or n_w
+        proposal = decay_proposal(proposal, store.scored_at, step,
+                                  cfg.score_ttl, cfg.is_cfg, cs)
+    return proposal
+
+
+def stage1_block_sums(proposal: jax.Array, w_loc: int,
+                      cfg: ISSGDConfig) -> jax.Array | None:
+    """Stage-1 masses for ``two_stage_sample``: None in dense mode (the
+    draw recomputes them — the default, HLO-gated path); in tree mode
+    the per-block masses come from the mass index's canonical reduction,
+    which is bitwise the in-draw reduction, so tree draws ≡ dense
+    draws (the ISSUE 10 acceptance pin)."""
+    if cfg.index == "dense":
+        return None
+    if cfg.index != "tree":
+        raise ValueError(f"unknown index {cfg.index!r}")
+    from repro.core.mass_index import block_masses
+    return block_masses(proposal, w_loc)
 
 
 def _resolve_shards(cfg: ISSGDConfig, num_examples: int, sb: int,
@@ -339,8 +390,9 @@ def make_master_pass(
         n_local = store.weights.shape[0]
         w_loc, n_w, sb_w = _resolve_shards(cfg, n, sb, n_local, n_dev)
 
-        # ---- 2. master reads the proposal (B.1 + B.3), shard-local -----------
-        proposal = read_proposal(store, step, is_cfg)
+        # ---- 2. master reads the proposal (B.1 + B.3 + optional TTL
+        # decay, dequantized for non-f32 tables), shard-local -----------------
+        proposal = read_sampling_proposal(store, step, cfg, n_w)
         sum_w = psum(jnp.sum(proposal), axes)
         mean_weight = sum_w / n
         if monitors:
@@ -361,7 +413,9 @@ def make_master_pass(
             # the uniform branch above, bit-for-bit
             idx_u = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
             idx_is = two_stage_sample(k_sample, proposal, cfg.batch_size,
-                                      axes=axes, shards_per_device=w_loc)
+                                      axes=axes, shards_per_device=w_loc,
+                                      block_sums=stage1_block_sums(
+                                          proposal, w_loc, cfg))
             idx = jnp.where(use_is, idx_is, idx_u)
             sampled_w = gather_rows(proposal, idx, axes)
             scales = jnp.where(use_is,
@@ -369,7 +423,9 @@ def make_master_pass(
                                jnp.ones((cfg.batch_size,), jnp.float32))
         else:
             idx = two_stage_sample(k_sample, proposal, cfg.batch_size,
-                                   axes=axes, shards_per_device=w_loc)
+                                   axes=axes, shards_per_device=w_loc,
+                                   block_sums=stage1_block_sums(
+                                       proposal, w_loc, cfg))
             sampled_w = gather_rows(proposal, idx, axes)
             scales = is_loss_scale(sampled_w, mean_weight)
         batch = constrain_batch(data if streaming

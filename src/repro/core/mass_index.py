@@ -1,0 +1,210 @@
+"""Hierarchical chunk-level mass index — the billion-example stage-1.
+
+The two-stage draw (core/sampler.py) needs, per step, the mass of every
+stage-1 block of the proposal.  The dense path recomputes all of them
+with one O(n_local) reduction per draw.  This module maintains the same
+masses *incrementally* at the chunk granularity the streaming plane
+already tracks (data/store.py chunks):
+
+  * ``chunk_masses`` / ``block_masses`` — the canonical leaf reduction.
+    One XLA ``sum`` over each fixed-size chunk row, bitwise-identical to
+    the reduction inside ``sampler.chunk_proposal_mass`` and
+    ``sampler.two_stage_sample``'s stage-1.  That shared reduction is
+    the exactness contract: a maintained leaf always equals the fresh
+    dense leaf bit for bit (pinned by the hypothesis battery in
+    tests/test_mass_index.py).
+  * ``MassIndex`` — leaves + a perfect binary segment tree of pairwise
+    sums.  ``refresh_chunks`` recomputes only the touched leaves (again
+    with the canonical reduction) and their O(log C) ancestor paths, so
+    a B-row score write costs O(B·chunk_size + B·log C) instead of a
+    full per-shard rebuild.  Ancestors are recomputed from their
+    children — never delta-adjusted — so ``refresh_chunks`` is
+    *bitwise* equal to ``build_index`` on the updated table (also
+    property-pinned).
+  * ``sample_chunks`` — O(log C) root-to-leaf descent resolving a
+    uniform draw to its chunk; ``indexed_sample`` composes it with the
+    unchanged within-chunk stage-2 for a full O(M·(log C + chunk_size))
+    draw that never materializes a table-sized CDF.
+
+Inside the training step, ``--index tree`` routes stage-1 through
+``block_masses`` at the configured W granularity (see
+``issgd.make_master_pass``): because the leaf reduction is the dense
+reduction, tree-mode draws are bitwise-equal to dense-mode draws — the
+acceptance pin of ISSUE 10.  The incremental ``refresh_chunks`` /
+``sample_chunks`` machinery is what `benchmarks/sampling_scale.py`
+measures and what a host-side index maintainer uses.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _num_chunks(n: int, chunk_size: int) -> int:
+    """Chunk count covering n rows, trailing partial chunk included."""
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    return -(-n // chunk_size)
+
+
+def _pad_to_chunks(table: jax.Array, chunk_size: int) -> jax.Array:
+    """Zero-pad the table so it reshapes into whole chunks (the trailing
+    partial chunk contributes exactly its partial mass)."""
+    n = table.shape[0]
+    chunks = _num_chunks(n, chunk_size)
+    pad = chunks * chunk_size - n
+    if pad:
+        table = jnp.concatenate(
+            [table, jnp.zeros((pad,), table.dtype)])
+    return table
+
+
+def chunk_masses(table: jax.Array, chunk_size: int) -> jax.Array:
+    """Per-chunk mass of a (shard-local) table: the canonical leaf
+    reduction — ``sum`` along the minor chunk axis, the same reduction
+    ``sampler.chunk_proposal_mass`` performs, so the two agree bitwise."""
+    padded = _pad_to_chunks(table, chunk_size)
+    return jnp.sum(padded.reshape(-1, chunk_size), axis=1)
+
+
+def block_masses(table: jax.Array, num_blocks: int) -> jax.Array:
+    """Stage-1 masses at the W-block granularity of the two-stage draw:
+    ``sum`` over each of ``num_blocks`` equal contiguous blocks — the
+    *identical* reduction ``two_stage_sample`` computes internally, so
+    feeding these back as ``block_sums`` reproduces its draws bitwise."""
+    n = table.shape[0]
+    if n % num_blocks:
+        raise ValueError(f"table size {n} not divisible by "
+                         f"{num_blocks} blocks")
+    ctype = jnp.float64 if table.dtype == jnp.float64 else jnp.float32
+    return jnp.sum(table.astype(ctype).reshape(num_blocks, -1), axis=1)
+
+
+class MassIndex(NamedTuple):
+    """Chunk-mass leaves + a perfect binary segment tree over them.
+
+    ``tree`` is the classic 1-indexed layout over ``P = next_pow2(C)``
+    padded leaves: node ``i`` has children ``2i``/``2i+1``, leaves live
+    at ``P .. P+C-1``, ``tree[1]`` is the total mass.  Every interior
+    node is exactly the pairwise sum of its children, which makes
+    incremental refresh bitwise-equal to a full rebuild."""
+    mass: jax.Array   # f32[C]  leaf chunk masses (trailing chunk partial)
+    tree: jax.Array   # f32[2P] segment tree; tree[0] unused
+
+
+def _leaf_base(num_chunks: int) -> int:
+    """P: the power-of-two leaf span of the tree for C chunks."""
+    return 1 << max(num_chunks - 1, 1).bit_length() if num_chunks > 1 else 1
+
+
+def tree_from_masses(mass: jax.Array) -> jax.Array:
+    """Build the segment tree bottom-up from leaf masses: O(C) pairwise
+    sums, log C levels."""
+    c = mass.shape[0]
+    p = _leaf_base(c)
+    leaves = jnp.zeros((p,), mass.dtype).at[:c].set(mass)
+    levels = [leaves]
+    while levels[-1].shape[0] > 1:
+        lvl = levels[-1].reshape(-1, 2)
+        levels.append(lvl[:, 0] + lvl[:, 1])
+    # concatenate root-first: tree[1]=root, then level of 2, 4, ... P
+    tree = jnp.concatenate([jnp.zeros((1,), mass.dtype)]
+                           + [lvl for lvl in reversed(levels)])
+    return tree
+
+
+def build_index(table: jax.Array, chunk_size: int) -> MassIndex:
+    """Index a table from scratch: canonical leaf reduction + tree build."""
+    mass = chunk_masses(table.astype(jnp.float32), chunk_size)
+    return MassIndex(mass=mass, tree=tree_from_masses(mass))
+
+
+def total_mass(index: MassIndex) -> jax.Array:
+    """The root: total proposal mass over all chunks."""
+    return index.tree[1]
+
+
+def refresh_chunks(index: MassIndex, table: jax.Array, chunk_size: int,
+                   chunk_ids: jax.Array) -> MassIndex:
+    """Recompute the leaves for ``chunk_ids`` from the (already updated)
+    table and propagate up the tree: O(B·chunk_size + B·log C).
+
+    Leaves are recomputed with the canonical reduction (never
+    delta-adjusted) and every touched ancestor is recomputed from its
+    two children, so the result is bitwise ``build_index(table)`` —
+    the property test's refresh≡rebuild pin.  Duplicate chunk ids are
+    harmless (same value written)."""
+    c = index.mass.shape[0]
+    p = _leaf_base(c)
+    chunk_ids = jnp.clip(jnp.asarray(chunk_ids, jnp.int32), 0, c - 1)
+    padded = _pad_to_chunks(table.astype(jnp.float32), chunk_size)
+    rows = padded.reshape(-1, chunk_size)[chunk_ids]      # (B, chunk_size)
+    fresh = jnp.sum(rows, axis=1)                         # canonical reduction
+    mass = index.mass.at[chunk_ids].set(fresh)
+    tree = index.tree.at[p + chunk_ids].set(fresh)
+    node = p + chunk_ids
+    while p > 1:
+        node = node // 2
+        p //= 2
+        tree = tree.at[node].set(tree[2 * node] + tree[2 * node + 1])
+    return MassIndex(mass=mass, tree=tree)
+
+
+def sample_chunks(index: MassIndex, u: jax.Array) -> jax.Array:
+    """Resolve uniform draws ``u`` in [0, total) to chunk ids by O(log C)
+    root-to-leaf descent: at each node go left if the draw lands in the
+    left child's mass, else subtract it and go right — the tree *is* the
+    CDF, no cumsum over chunks is ever formed."""
+    c = index.mass.shape[0]
+    p = _leaf_base(c)
+    node = jnp.ones(u.shape, jnp.int32)
+    rem = u
+    while p > 1:
+        left = index.tree[2 * node]
+        go_right = rem >= left
+        rem = jnp.where(go_right, rem - left, rem)
+        node = 2 * node + go_right.astype(jnp.int32)
+        p //= 2
+    return jnp.clip(node - _leaf_base(c), 0, c - 1)
+
+
+def indexed_sample(key: jax.Array, table: jax.Array, index: MassIndex,
+                   chunk_size: int, num_samples: int) -> jax.Array:
+    """Full two-stage draw through the index: O(log C) chunk descent per
+    draw, then the unchanged within-chunk stage-2 (a cumsum over the M
+    winning chunks' rows only — never a table-sized CDF)."""
+    total = total_mass(index)
+    u = jax.random.uniform(key, (num_samples,), jnp.float32) * total
+    chunk = sample_chunks(index, u)
+    # residual mass inside the winning chunk = u - mass of all chunks
+    # before it; recover it from the descent by re-walking prefix sums
+    # cheaply: prefix(chunk) via the tree in O(log C).
+    rem = u - _prefix_mass(index, chunk)
+    padded = _pad_to_chunks(table.astype(jnp.float32), chunk_size)
+    rows = padded.reshape(-1, chunk_size)[chunk]          # (M, chunk_size)
+    cdf = jnp.cumsum(rows, axis=1)
+    pos = jnp.sum((cdf <= rem[:, None]).astype(jnp.int32), axis=1)
+    pos = jnp.clip(pos, 0, chunk_size - 1)
+    gidx = chunk * chunk_size + pos
+    return jnp.clip(gidx, 0, table.shape[0] - 1).astype(jnp.int32)
+
+
+def _prefix_mass(index: MassIndex, chunk: jax.Array) -> jax.Array:
+    """Mass of all chunks strictly before ``chunk``: descend the tree
+    accumulating left-child masses wherever the path goes right —
+    O(log C), the exact pairwise sums the descent itself subtracts."""
+    c = index.mass.shape[0]
+    p = _leaf_base(c)
+    target = chunk + p
+    node = jnp.ones(chunk.shape, jnp.int32)
+    acc = jnp.zeros(chunk.shape, jnp.float32)
+    depth = p
+    while depth > 1:
+        depth //= 2
+        went_right = (target // depth) % 2 == 1
+        acc = acc + jnp.where(went_right, index.tree[2 * node],
+                              jnp.zeros_like(acc))
+        node = 2 * node + went_right.astype(jnp.int32)
+    return acc

@@ -33,12 +33,20 @@ def two_stage_sample(
     num_samples: int,
     axes: tuple[str, ...] = (),
     shards_per_device: int = 1,
+    block_sums: jax.Array | None = None,
 ) -> jax.Array:
     """Draw `num_samples` global indices ∝ the sharded, unnormalized table.
 
     local_weights: this device's (n_local,) slice, viewed as
     `shards_per_device` contiguous logical blocks.  Every device receives
     the same `key` and returns the same replicated i32[M] global indices.
+
+    ``block_sums`` optionally supplies the stage-1 per-block masses from
+    an external maintainer (core/mass_index.py, the ``--index tree``
+    path) instead of the in-draw reduction.  The index computes them
+    with the *identical* reduction, so the draws stay bitwise-equal —
+    and with ``block_sums=None`` this is byte-for-byte the original
+    program (the dense default's HLO gate).
     """
     w_loc = shards_per_device
     n_local = local_weights.shape[0]
@@ -53,7 +61,13 @@ def two_stage_sample(
     ctype = (jnp.float64 if local_weights.dtype == jnp.float64
              else jnp.float32)
     blocks = local_weights.astype(ctype).reshape(w_loc, n_w)
-    block_sums = jnp.sum(blocks, axis=1)                     # (w_loc,)
+    if block_sums is None:
+        block_sums = jnp.sum(blocks, axis=1)                 # (w_loc,)
+    else:
+        if block_sums.shape != (w_loc,):
+            raise ValueError(f"block_sums shape {block_sums.shape} != "
+                             f"({w_loc},)")
+        block_sums = block_sums.astype(ctype)
     first = dev_id * w_loc
     sums = jax.lax.dynamic_update_slice(
         jnp.zeros((num_shards,), ctype), block_sums, (first,))
@@ -113,12 +127,22 @@ def chunk_proposal_mass(proposal: jax.Array, chunk_size: int,
     are drawn.  Same one-owner layout as the two-stage draw — device d's
     chunks occupy the contiguous block starting at d * local_chunks — so
     one psum of a num_chunks-float vector shares it (never the f32[N]
-    table)."""
+    table).
+
+    A trailing partial chunk (n_local not divisible by chunk_size) is
+    zero-padded and contributes exactly its partial mass — the same
+    convention as the host store's last chunk.  NOTE the streaming plane
+    itself still requires exact multiples (ChunkedExampleStore's
+    fixed-size chunks); that assumption is pinned in
+    tests/test_mass_index.py alongside this padding behavior."""
     n_local = proposal.shape[0]
-    if n_local % chunk_size:
-        raise ValueError(f"local table size {n_local} not divisible by "
-                         f"chunk_size={chunk_size}")
-    local_chunks = n_local // chunk_size
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    local_chunks = -(-n_local // chunk_size)
+    pad = local_chunks * chunk_size - n_local
+    if pad:
+        proposal = jnp.concatenate(
+            [proposal, jnp.zeros((pad,), proposal.dtype)])
     dev_id, n_dev = axis_info(axes)
     local_mass = jnp.sum(proposal.reshape(local_chunks, chunk_size), axis=1)
     mass = jax.lax.dynamic_update_slice(

@@ -30,21 +30,174 @@ from repro.core.importance import ISConfig, apply_staleness_filter, smooth_weigh
 # `mark_live` flips them to -1 ("never scored") once real data lands.
 EMPTY = -2
 
+# int8 tables store codes in [0, INT8_LEVELS]; value = code·scale/INT8_LEVELS
+INT8_LEVELS = 127
+# round-to-nearest-bf16 relative error: 8 mantissa bits → half-ulp 2⁻⁹
+BF16_HALF_ULP = 2.0 ** -9
+
 
 class WeightStore(NamedTuple):
     """The paper's database actor: one unnormalized proposal weight (and
     its staleness timestamp) per training example, example-axis-sharded
-    over the data axes in distributed runs."""
-    weights: jax.Array    # f32[N]  raw (unsmoothed) ω̃ — grad-norm estimates
+    over the data axes in distributed runs.
+
+    ``weights`` is f32 by default; quantized tables (``--table-dtype``)
+    store bf16 raw weights (``qscale`` stays None) or int8 codes with a
+    per-chunk f32 scale in ``qscale`` (one scale per ``chunk_size``
+    contiguous rows; ``value = code · scale / INT8_LEVELS``).  Every
+    read/write helper below dispatches on the *static* storage dtype, so
+    the f32 path traces the exact pre-quantization program (the HLO gate
+    of tests/test_mass_index.py)."""
+    weights: jax.Array    # f32/bf16 raw ω̃, or int8 codes (quantized table)
     scored_at: jax.Array  # i32[N]  step of last scoring, -1 if never
+    qscale: jax.Array | None = None  # f32[num_chunks] per-chunk int8 scale
 
 
-def init_store(num_examples: int, init_weight: float = 0.0) -> WeightStore:
-    """Fresh store: nothing scored yet → behaves as uniform (see read)."""
-    return WeightStore(
-        weights=jnp.full((num_examples,), init_weight, jnp.float32),
-        scored_at=jnp.full((num_examples,), -1, jnp.int32),
-    )
+def init_store(num_examples: int, init_weight: float = 0.0,
+               table_dtype: str = "f32", chunk_size: int = 0) -> WeightStore:
+    """Fresh store: nothing scored yet → behaves as uniform (see read).
+
+    ``table_dtype`` selects the storage representation ("f32" | "bf16" |
+    "int8"); int8 needs a positive ``chunk_size`` dividing
+    ``num_examples`` for its per-chunk scales."""
+    scored_at = jnp.full((num_examples,), -1, jnp.int32)
+    if table_dtype == "f32":
+        return WeightStore(
+            weights=jnp.full((num_examples,), init_weight, jnp.float32),
+            scored_at=scored_at)
+    if table_dtype == "bf16":
+        return WeightStore(
+            weights=jnp.full((num_examples,), init_weight, jnp.bfloat16),
+            scored_at=scored_at)
+    if table_dtype != "int8":
+        raise ValueError(f"unknown table_dtype {table_dtype!r}")
+    if chunk_size <= 0 or num_examples % chunk_size:
+        raise ValueError(f"int8 tables need chunk_size > 0 dividing "
+                         f"num_examples={num_examples}, got {chunk_size}")
+    codes, qscale = quantize_weights(
+        jnp.full((num_examples,), init_weight, jnp.float32), chunk_size)
+    return WeightStore(weights=codes, scored_at=scored_at, qscale=qscale)
+
+
+def store_chunk_size(store: WeightStore) -> int:
+    """Static chunk size of an int8 table, recovered from the shapes."""
+    if store.qscale is None:
+        raise ValueError("store has no per-chunk scales (not int8)")
+    return store.weights.shape[0] // store.qscale.shape[0]
+
+
+def quantize_weights(weights: jax.Array,
+                     chunk_size: int) -> tuple[jax.Array, jax.Array]:
+    """Quantize nonnegative f32 weights to (int8 codes, per-chunk scale).
+
+    Scale_c = max weight in chunk c (1.0 for all-zero chunks so the
+    codes stay 0); code = round(clip(w,0,scale)·INT8_LEVELS/scale).
+    Negative raw weights clip to code 0 — harmless, because the proposal
+    smoothing (B.3) already maps them to the same floor as 0."""
+    n = weights.shape[0]
+    if chunk_size <= 0 or n % chunk_size:
+        raise ValueError(f"chunk_size={chunk_size} must divide n={n}")
+    w = jnp.maximum(weights.astype(jnp.float32), 0.0)
+    rows = w.reshape(-1, chunk_size)
+    scale = jnp.max(rows, axis=1)
+    scale = jnp.where(scale > 0, scale, jnp.ones_like(scale))
+    codes = jnp.round(rows / scale[:, None] * INT8_LEVELS)
+    codes = jnp.clip(codes, 0, INT8_LEVELS).astype(jnp.int8)
+    return codes.reshape(-1), scale
+
+
+def dequantize_weights(store: WeightStore) -> jax.Array:
+    """Reconstruct the f32 weight view of a quantized table: int8 codes
+    scale back through ``qscale``; bf16 upcasts; f32 passes through."""
+    if store.qscale is not None:
+        cs = store_chunk_size(store)
+        scale_rows = jnp.repeat(store.qscale / INT8_LEVELS, cs)
+        return store.weights.astype(jnp.float32) * scale_rows
+    if store.weights.dtype != jnp.float32:
+        return store.weights.astype(jnp.float32)
+    return store.weights
+
+
+def _requantize(store: WeightStore, weights_f32: jax.Array) -> WeightStore:
+    """Write an updated f32 weight view back into the storage dtype:
+    int8 tables recompute their per-chunk scales (a write can raise a
+    chunk's max), bf16 rounds, f32 stores as-is."""
+    if store.qscale is not None:
+        codes, qscale = quantize_weights(weights_f32,
+                                         store_chunk_size(store))
+        return store._replace(weights=codes, qscale=qscale)
+    return store._replace(
+        weights=weights_f32.astype(store.weights.dtype))
+
+
+def quantization_tv_bound(store_f32: WeightStore, step: jax.Array | int,
+                          cfg: ISConfig, chunk_size: int,
+                          table_dtype: str) -> jax.Array:
+    """Analytic upper bound on TV(p_f32, p_quantized) for the proposal a
+    quantized copy of ``store_f32`` would yield.
+
+    With a_i = filtered-smoothed f32 weights and b_i their quantized
+    twins, TV(a/A, b/B) ≤ (1/A)·Σ|a_i − b_i| (triangle inequality on
+    both the rows and the normalizer).  Rows the B.1 filter neutralizes
+    (never scored / too stale / EMPTY) are bitwise identical in both
+    tables, so only surviving rows contribute: per-row error ≤
+    2⁻⁹·|w| for bf16 (half-ulp rounding) and scale_c·(1/(2·INT8_LEVELS)
+    + 2⁻²⁰) for int8 (half a quantization step plus f32 arithmetic
+    slack).  The chi²/TV battery in tests/test_sampler_stats.py asserts
+    the measured distance stays under this bound."""
+    # apply_staleness_filter on all-ones marks exactly the neutralized rows
+    active = apply_staleness_filter(
+        jnp.ones_like(store_f32.weights, jnp.float32),
+        store_f32.scored_at, step, cfg) > 0
+    w = store_f32.weights.astype(jnp.float32)
+    if table_dtype == "bf16":
+        per_row = BF16_HALF_ULP * jnp.abs(w)
+    elif table_dtype == "int8":
+        _, scale = quantize_weights(w, chunk_size)
+        per_row = jnp.repeat(
+            scale * (0.5 / INT8_LEVELS + 2.0 ** -20), chunk_size)
+    else:
+        raise ValueError(f"no quantization bound for {table_dtype!r}")
+    err = jnp.sum(jnp.where(active, per_row, 0.0))
+    z = jnp.sum(read_proposal(store_f32, step, cfg))
+    return err / z
+
+
+def decay_proposal(proposal: jax.Array, scored_at: jax.Array,
+                   step: jax.Array | int, ttl: float, cfg: ISConfig,
+                   chunk_size: int) -> jax.Array:
+    """Per-chunk TTL decay of the proposal toward the uniform floor.
+
+    Chunk freshness is its newest ``scored_at`` stamp (the same quantity
+    the PR 8 ``staleness`` monitor reduces); a chunk whose freshest row
+    is ``age`` steps old decays by ``d = 2^(−age/ttl)``:
+
+        q'_i = u + d_{c(i)} · (q_i − u),   u = smooth_weights(0)
+
+    so at age=ttl a chunk has lost half its excess over the never-scored
+    neutral mass ``u`` and q' → u as age → ∞.  Chunks with no scored
+    rows keep d=1 (their rows already sit at u), EMPTY rows stay at
+    exactly 0, and every row keeps q' ≥ min(q, u) ≥ floor — Theorem 1's
+    q>0 support condition survives decay.  ``ttl<=0`` must be handled by
+    the caller as the identity (the HLO-gated off path)."""
+    if ttl <= 0:
+        raise ValueError("decay_proposal requires ttl > 0; ttl==0 is the "
+                         "caller's identity path")
+    n = proposal.shape[0]
+    chunks = -(-n // chunk_size)
+    pad = chunks * chunk_size - n
+    sa = scored_at
+    if pad:
+        sa = jnp.concatenate(
+            [sa, jnp.full((pad,), EMPTY, jnp.int32)])
+    freshest = jnp.max(sa.reshape(chunks, chunk_size), axis=1)
+    age = jnp.maximum(jnp.asarray(step, jnp.int32) - freshest, 0)
+    age = jnp.where(freshest >= 0, age, 0).astype(jnp.float32)
+    d = jnp.exp2(-age / jnp.float32(ttl))
+    d_row = jnp.repeat(d, chunk_size)[:n]
+    neutral = jnp.asarray(max(cfg.smoothing, cfg.floor), proposal.dtype)
+    decayed = neutral + d_row.astype(proposal.dtype) * (proposal - neutral)
+    return jnp.where(scored_at <= EMPTY, jnp.zeros_like(decayed), decayed)
 
 
 def reserve_tail(store: WeightStore, num_live: int) -> WeightStore:
@@ -73,11 +226,21 @@ def write_scores(
     scores: jax.Array,
     step: jax.Array | int,
 ) -> WeightStore:
-    """Workers push fresh ω̃ for the examples they just scored."""
+    """Workers push fresh ω̃ for the examples they just scored.
+
+    Quantized (int8) tables round-trip through the f32 view: the touched
+    rows are written at full precision, then the affected chunks'
+    scales/codes are recomputed (a fresh score can raise a chunk max)."""
     step = jnp.asarray(step, jnp.int32)
-    return WeightStore(
-        weights=store.weights.at[indices].set(scores.astype(store.weights.dtype)),
-        scored_at=store.scored_at.at[indices].set(step),
+    scored_at = store.scored_at.at[indices].set(step)
+    if store.qscale is not None:
+        w = dequantize_weights(store).at[indices].set(
+            scores.astype(jnp.float32))
+        return _requantize(store._replace(scored_at=scored_at), w)
+    return store._replace(
+        weights=store.weights.at[indices].set(
+            scores.astype(store.weights.dtype)),
+        scored_at=scored_at,
     )
 
 
@@ -95,9 +258,14 @@ def write_scores_global(
     from repro.core.collectives import scatter_rows
     step = jnp.broadcast_to(jnp.asarray(step, jnp.int32),
                             global_indices.shape)
-    return WeightStore(
+    scored_at = scatter_rows(store.scored_at, global_indices, step, axes)
+    if store.qscale is not None:
+        w = scatter_rows(dequantize_weights(store), global_indices,
+                         scores.astype(jnp.float32), axes)
+        return _requantize(store._replace(scored_at=scored_at), w)
+    return store._replace(
         weights=scatter_rows(store.weights, global_indices, scores, axes),
-        scored_at=scatter_rows(store.scored_at, global_indices, step, axes),
+        scored_at=scored_at,
     )
 
 
@@ -128,7 +296,9 @@ def _copy_store(store: WeightStore) -> WeightStore:
     read_buf must never alias write_buf, because the scoring step donates
     write_buf for in-place updates."""
     return WeightStore(weights=jnp.copy(store.weights),
-                       scored_at=jnp.copy(store.scored_at))
+                       scored_at=jnp.copy(store.scored_at),
+                       qscale=(None if store.qscale is None
+                               else jnp.copy(store.qscale)))
 
 
 def to_buffered(store: WeightStore) -> BufferedWeightStore:
@@ -158,8 +328,14 @@ def read_proposal(
     additive smoothing (B.3).  Never-scored entries act as the neutral
     (uniform) weight, so a cold store reproduces plain SGD exactly.
     Reserved rows (scored_at == EMPTY, serving-loop capacity not yet
-    ingested) are excluded outright — zero proposal mass."""
-    w = apply_staleness_filter(store.weights, store.scored_at, step, cfg)
+    ingested) are excluded outright — zero proposal mass.
+
+    Quantized tables dequantize to their f32 view first, so the sampled
+    distribution *is* the quantized proposal (what the chi²/TV battery
+    in tests/test_sampler_stats.py tests against); f32 tables trace the
+    exact original program (static-dtype dispatch, no device branch)."""
+    raw = dequantize_weights(store)
+    w = apply_staleness_filter(raw, store.scored_at, step, cfg)
     q = smooth_weights(w, cfg)
     return jnp.where(store.scored_at <= EMPTY, jnp.zeros_like(q), q)
 

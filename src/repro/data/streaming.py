@@ -60,7 +60,7 @@ from repro.core.issgd import (ISSGDConfig, StepMetrics, TrainState,
                               scoring_layout)
 from repro.core.sampler import chunk_proposal_mass, index_to_chunk
 from repro.core.weight_store import (BufferedWeightStore, WeightStore,
-                                     publish, read_proposal)
+                                     publish)
 from repro.data.store import ChunkedExampleStore
 
 
@@ -150,7 +150,6 @@ def make_streamed_steps(
     monitors = monitors or None
     n = num_examples
     sb = cfg.score_batch_size
-    is_cfg = cfg.is_cfg
     # the master reads the fresh scores only in the sync non-fused
     # composition; fused computes its own, async leaves them to scoring
     expect_scores = (not async_mode) and cfg.mode != "fused"
@@ -175,22 +174,29 @@ def make_streamed_steps(
         return store, fresh_scores, stale_slice, smetrics
 
     def _sample(store: WeightStore, step, rng, use_is):
+        from repro.core.issgd import read_sampling_proposal, stage1_block_sums
         from repro.core.sampler import two_stage_sample
         _, k_sample = jax.random.split(rng)          # master's split, replayed
         _, n_dev = axis_info(axes)
-        w_loc, _, _ = scoring_layout(cfg, n, n_dev)
-        proposal = read_proposal(store, step, is_cfg)
+        w_loc, n_w, _ = scoring_layout(cfg, n, n_dev)
+        # the exact proposal the master samples from (incl. TTL decay and
+        # dequantization) — the replay must transform it identically
+        proposal = read_sampling_proposal(store, step, cfg, n_w)
         if cfg.mode == "uniform":
             idx = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
         elif gated:
             # replicate the gated master's selection bit-for-bit (issgd)
             idx_u = jax.random.randint(k_sample, (cfg.batch_size,), 0, n)
             idx_is = two_stage_sample(k_sample, proposal, cfg.batch_size,
-                                      axes=axes, shards_per_device=w_loc)
+                                      axes=axes, shards_per_device=w_loc,
+                                      block_sums=stage1_block_sums(
+                                          proposal, w_loc, cfg))
             idx = jnp.where(use_is, idx_is, idx_u)
         else:
             idx = two_stage_sample(k_sample, proposal, cfg.batch_size,
-                                   axes=axes, shards_per_device=w_loc)
+                                   axes=axes, shards_per_device=w_loc,
+                                   block_sums=stage1_block_sums(
+                                       proposal, w_loc, cfg))
         mass = chunk_proposal_mass(proposal, chunk_size, axes)
         return idx, mass
 

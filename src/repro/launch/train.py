@@ -151,6 +151,22 @@ def validate_flags(ap, args, mp: int) -> None:
             ap.error("--serve-loop requires --mode relaxed|fused (uniform "
                      "sampling draws reserved-capacity rows before they "
                      "are ingested; exact is excluded by --stream)")
+    if args.table_dtype == "int8":
+        if args.stream or args.serve_loop:
+            ap.error("--table-dtype int8 does not compose with --stream/"
+                     "--serve-loop yet (the streamed serving ingest "
+                     "assumes a float table); use f32 or bf16 there")
+        n_local = args.examples // max(args.mesh, 1)
+        cs = args.index_chunk_size
+        if cs <= 0 or n_local % cs:
+            ap.error(f"--table-dtype int8 needs --index-chunk-size > 0 "
+                     f"dividing the per-shard rows ({n_local}); got {cs} "
+                     f"(per-chunk scales may not straddle shards)")
+    if args.index_chunk_size > 0 and \
+            (args.examples // max(args.mesh, 1)) % args.index_chunk_size:
+        ap.error(f"--index-chunk-size {args.index_chunk_size} must divide "
+                 f"the per-shard rows "
+                 f"({args.examples // max(args.mesh, 1)})")
     if mp <= 1:
         return
     if _proposal_name(args) == "full":
@@ -201,6 +217,15 @@ docs/ARCHITECTURE.md):
                       relaxed sampler's uniform/IS gate from live
                       telemetry; composes with --mesh/--async-scoring/
                       --stream/--model-parallel)
+  --index tree        composes with everything (draws are bitwise-equal
+                      to the dense default; stage-1 masses come from
+                      core/mass_index.py)
+  --table-dtype       bf16 composes with everything; int8 needs
+                      --index-chunk-size dividing the per-shard rows and
+                      does not compose with --stream/--serve-loop
+  --score-ttl K       composes with everything (per-chunk decay of stale
+                      scores toward the uniform floor; 0 = off, the
+                      HLO-identical default)
 """
 
 
@@ -242,6 +267,27 @@ def main():
     ap.add_argument("--smoothing", type=float, default=1.0)
     ap.add_argument("--refresh-every", type=int, default=8)
     ap.add_argument("--staleness-threshold", type=int, default=0)
+    ap.add_argument("--index", default="dense", choices=["dense", "tree"],
+                    help="stage-1 mass source for the two-stage draw: "
+                    "'tree' routes per-block masses through the chunk "
+                    "mass index (core/mass_index.py) — bitwise-equal "
+                    "draws, O(log N) write propagation at scale; 'dense' "
+                    "recomputes them in-draw (default)")
+    ap.add_argument("--table-dtype", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="weight-table storage: bf16 halves it, int8 (+ "
+                    "per-chunk scale, needs --index-chunk-size) quarters "
+                    "it; the proposal distortion is bounded and tested "
+                    "(tests/test_sampler_stats.py)")
+    ap.add_argument("--score-ttl", type=int, default=0,
+                    help="decay scores toward the uniform floor with a "
+                    "half-life of K steps per chunk age "
+                    "(weight_store.decay_proposal); 0 = off "
+                    "(HLO-identical default)")
+    ap.add_argument("--index-chunk-size", type=int, default=0,
+                    help="chunk granularity for the mass index / int8 "
+                    "scales / TTL decay (0 = one chunk per logical "
+                    "scoring shard)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="run the sharded step on an N-device data mesh "
                     "(0 = single-device path); on CPU, N host devices are "
@@ -424,8 +470,13 @@ def main():
         refresh_every=args.refresh_every, mode=args.mode,
         is_cfg=ISConfig(smoothing=args.smoothing,
                         staleness_threshold=args.staleness_threshold),
-        score_shards=max(args.score_shards, 1))
-    state = init_train_state(params, opt, train.size, seed=args.seed)
+        score_shards=max(args.score_shards, 1),
+        index=args.index, table_dtype=args.table_dtype,
+        score_ttl=args.score_ttl,
+        index_chunk_size=args.index_chunk_size)
+    state = init_train_state(params, opt, train.size, seed=args.seed,
+                             table_dtype=args.table_dtype,
+                             index_chunk_size=args.index_chunk_size)
     data = train.arrays
     probe = None
     pipe = None
@@ -464,7 +515,9 @@ def main():
                          f"divisible by --mesh {n_shards}")
             from repro.core.weight_store import init_store, reserve_tail
             state = state._replace(
-                store=reserve_tail(init_store(n_examples), n_live))
+                store=reserve_tail(
+                    init_store(n_examples, table_dtype=args.table_dtype,
+                               chunk_size=args.index_chunk_size), n_live))
         wc = max(1, min(args.window_chunks, store.num_chunks // n_shards))
         # the step programs never take the dataset; drop the monolithic
         # device arrays now that the host store holds the examples —

@@ -121,3 +121,30 @@ def test_controller_docs_anchored():
                    '"kind": "controller.decision"',
                    "tests/test_controller.py"):
         assert anchor in readme, f"README lost its {anchor!r} anchor"
+
+
+def test_sampling_structures_docs_anchored():
+    """The ISSUE 10 sampling-structures docs: ARCHITECTURE.md keeps its
+    §10 and README its walkthrough, both anchored to the index module,
+    the quantization bound, the TTL rule, and the tests that pin them."""
+    with open(os.path.join(REPO, "docs", "ARCHITECTURE.md")) as f:
+        arch = f.read()
+    for anchor in ("## 10. Sampling structures", "core/mass_index.py",
+                   "refresh_chunks", "build_index", "sample_chunks",
+                   "block_masses", "chunk_proposal_mass", "qscale",
+                   "quantization_tv_bound", "decay_proposal",
+                   "--index", "--table-dtype", "--score-ttl",
+                   "--index-chunk-size", "benchmarks/sampling_scale.py",
+                   "test_index_mass_exact_under_interleaved_store_ops",
+                   "test_tree_mode_bitwise_equals_dense_all_modes",
+                   "test_default_cfg_is_hlo_identical_to_explicit_off",
+                   "test_quantized_proposal_tv_under_analytic_bound"):
+        assert anchor in arch, f"ARCHITECTURE.md lost its {anchor!r} anchor"
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for anchor in ("## Sampling structures at scale", "--index tree",
+                   "--table-dtype", "--score-ttl", "--index-chunk-size",
+                   "core/mass_index.py", "quantization_tv_bound",
+                   "tests/test_mass_index.py",
+                   "benchmarks/sampling_scale.py"):
+        assert anchor in readme, f"README lost its {anchor!r} anchor"

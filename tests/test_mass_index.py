@@ -1,0 +1,503 @@
+"""Billion-example sampling structures (ISSUE 10 battery, marker
+`massindex`): the chunked mass index, quantized score tables, and TTL
+decay — property-pinned.
+
+Pins the tentpole's contracts:
+
+  * index exactness — under arbitrary interleavings of
+    ``write_scores_global`` / ``reserve_tail`` / ``mark_live``, the
+    index's stage-1 chunk masses equal ``chunk_proposal_mass`` of the
+    resulting proposal *exactly*, and ``refresh_chunks`` over the
+    touched chunks is bitwise ``build_index`` from scratch (hypothesis
+    properties);
+  * draw exactness — the O(log C) tree descent resolves every uniform
+    draw to the same chunk as ``searchsorted`` over the dense chunk CDF,
+    and tree-mode (``block_sums`` from ``block_masses``) draws are
+    *bitwise* the dense draws, on one device and on a 4-device mesh;
+  * mode equivalence — ``index="tree"`` runs bitwise-identical to
+    ``index="dense"`` across relaxed / fused / async / streamed, on a
+    1×1 and a 2×2 mesh (subprocess battery);
+  * the off path — the default config (dense / f32 / no TTL) lowers to
+    byte-identical HLO with every new knob explicitly at its off value,
+    and ``read_sampling_proposal`` with ``score_ttl=0`` is byte-identical
+    to plain ``read_proposal``;
+  * TTL decay — matches a brute-force numpy reference, preserves the
+    floor and EMPTY semantics, and the PR 8 monitors observe the decayed
+    proposal (ess) next to the undecayed scored_at lag (staleness);
+  * the trailing-partial-chunk fix — ``chunk_proposal_mass`` zero-pads
+    instead of raising, ``index_to_chunk`` routes tail rows to the last
+    chunk, and the streaming plane's exact-multiple assumption
+    (``ChunkedExampleStore.from_arrays``) stays pinned.
+
+The quantized-table distributional legs (chi² GOF of draws against the
+quantized proposal, measured TV under ``quantization_tv_bound``) live in
+tests/test_sampler_stats.py with the rest of the stats battery.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _helpers import run_mesh_py
+
+# CI installs hypothesis; where absent the two property tests degrade to
+# fixed-seed sweeps of the same case functions instead of skipping the
+# whole battery (the test_importance_core precedent).
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.importance import ISConfig
+from repro.core.issgd import (ISSGDConfig, init_train_state, make_train_step,
+                              read_sampling_proposal)
+from repro.core.mass_index import (block_masses, build_index, chunk_masses,
+                                   indexed_sample, refresh_chunks,
+                                   sample_chunks, total_mass)
+from repro.core.sampler import (chunk_proposal_mass, index_to_chunk,
+                                two_stage_sample)
+from repro.core.weight_store import (EMPTY, decay_proposal, init_store,
+                                     mark_live, read_proposal, reserve_tail,
+                                     write_scores_global)
+
+pytestmark = pytest.mark.massindex
+
+
+def _setup_step(n=256, **cfg_kw):
+    from repro.core.scorer import make_mlp_scorer
+    from repro.data import make_svhn_like
+    from repro.models.mlp import MLPConfig, init_mlp_classifier, \
+        per_example_loss
+    from repro.optim import sgd
+
+    mcfg = MLPConfig(input_dim=16, hidden=(32,), num_classes=4)
+    train, _ = make_svhn_like(jax.random.key(0), n=n, dim=16, classes=4)
+    params = init_mlp_classifier(jax.random.key(1), mcfg)
+    opt = sgd(0.05)
+    tcfg = ISSGDConfig(batch_size=16, score_batch_size=64, mode="relaxed",
+                      is_cfg=ISConfig(smoothing=0.1), score_shards=4,
+                      **cfg_kw)
+    pel = lambda p, b: per_example_loss(p, b, mcfg)
+    scorer = make_mlp_scorer(mcfg, "ghost")
+    return pel, scorer, opt, tcfg, params, train
+
+
+def _bitwise_equal_states(a, b):
+    a = a._replace(rng=jax.random.key_data(a.rng))
+    b = b._replace(rng=jax.random.key_data(b.rng))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------- index exactness (property)
+
+def _index_mass_case(seed, chunks, cs, ops):
+    """Interleaved write_scores_global / reserve_tail / mark_live: the
+    index's leaves equal chunk_proposal_mass of the proposal *exactly*,
+    and refreshing only the chunks a final write touched is bitwise a
+    from-scratch rebuild."""
+    rng = np.random.default_rng(seed)
+    n = chunks * cs - int(rng.integers(0, cs))       # allow a partial tail
+    n = max(n, 2)
+    cfg = ISConfig(smoothing=0.1)
+    store = init_store(n)
+    step = 0
+    for _ in range(ops):
+        op = rng.integers(0, 3)
+        if op == 0:
+            k = int(rng.integers(1, min(n, 8) + 1))
+            idx = jnp.asarray(rng.choice(n, size=k, replace=False))
+            vals = jnp.asarray(rng.uniform(0.1, 5.0, k), jnp.float32)
+            store = write_scores_global(store, idx, vals, step=step)
+        elif op == 1:
+            store = reserve_tail(store, int(rng.integers(1, n + 1)))
+        else:
+            k = int(rng.integers(1, min(n, 8) + 1))
+            store = mark_live(store, rng.choice(n, size=k, replace=False))
+        step += 1
+
+    prop0 = read_proposal(store, step, cfg)
+    index0 = build_index(prop0, cs)
+    dense = chunk_proposal_mass(prop0, cs)
+    assert np.array_equal(np.asarray(index0.mass), np.asarray(dense))
+
+    # one more write; refreshing only its chunks ≡ full rebuild, bitwise
+    k = int(rng.integers(1, min(n, 8) + 1))
+    idx = rng.choice(n, size=k, replace=False)
+    store = write_scores_global(store, jnp.asarray(idx),
+                                jnp.asarray(rng.uniform(0.1, 5.0, k),
+                                            jnp.float32), step=step)
+    prop1 = read_proposal(store, step, cfg)
+    touched = np.unique(idx // cs)
+    refreshed = refresh_chunks(index0, prop1, cs, jnp.asarray(touched))
+    rebuilt = build_index(prop1, cs)
+    assert np.array_equal(np.asarray(refreshed.mass),
+                          np.asarray(rebuilt.mass))
+    assert np.array_equal(np.asarray(refreshed.tree),
+                          np.asarray(rebuilt.tree))
+
+
+def _descend_case(seed, chunks, cs):
+    """The O(log C) root-to-leaf descent resolves every draw to exactly
+    the searchsorted chunk (integer masses: all sums exact in f32)."""
+    rng = np.random.default_rng(seed)
+    mass = rng.integers(0, 64, chunks).astype(np.float32)
+    if mass.sum() == 0:
+        mass[rng.integers(0, chunks)] = 1.0
+    table = np.repeat(mass / cs, cs).astype(np.float32)
+    # integer leaf masses: build the index from per-chunk masses directly
+    from repro.core.mass_index import MassIndex, tree_from_masses
+    index = MassIndex(mass=jnp.asarray(mass),
+                      tree=tree_from_masses(jnp.asarray(mass)))
+    total = float(np.asarray(total_mass(index)))
+    u = jnp.asarray(rng.uniform(0.0, total, 128), jnp.float32)
+    got = np.asarray(sample_chunks(index, u))
+    ref = np.clip(np.searchsorted(np.cumsum(mass), np.asarray(u),
+                                  side="right"), 0, chunks - 1)
+    np.testing.assert_array_equal(got, ref)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 12),
+           st.integers(1, 24), st.integers(1, 6))
+    @settings(max_examples=25, deadline=None)
+    def test_index_mass_exact_under_interleaved_store_ops(seed, chunks,
+                                                          cs, ops):
+        _index_mass_case(seed, chunks, cs, ops)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 40),
+           st.integers(1, 16))
+    @settings(max_examples=30, deadline=None)
+    def test_descend_matches_searchsorted(seed, chunks, cs):
+        _descend_case(seed, chunks, cs)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_index_mass_exact_under_interleaved_store_ops(seed):
+        rng = np.random.default_rng(1000 + seed)
+        _index_mass_case(seed, int(rng.integers(2, 13)),
+                         int(rng.integers(1, 25)), int(rng.integers(1, 7)))
+
+    @pytest.mark.parametrize("seed", range(12))
+    def test_descend_matches_searchsorted(seed):
+        rng = np.random.default_rng(2000 + seed)
+        _descend_case(seed, int(rng.integers(1, 41)),
+                      int(rng.integers(1, 17)))
+
+
+def test_indexed_sample_matches_flat_multinomial():
+    """The full index draw (descent + within-chunk stage-2) equals the
+    flat searchsorted draw over the same integer table, row for row."""
+    rng = np.random.default_rng(7)
+    n, cs = 96, 8
+    table = rng.integers(0, 9, n).astype(np.float32)
+    table[rng.choice(n, 20, replace=False)] = 0.0      # dead rows
+    index = build_index(jnp.asarray(table), cs)
+    key = jax.random.key(3)
+    idx = np.asarray(indexed_sample(key, jnp.asarray(table), index, cs, 512))
+    total = float(np.asarray(total_mass(index)))
+    u = np.asarray(jax.random.uniform(key, (512,), jnp.float32)) * total
+    ref = np.searchsorted(np.cumsum(table), u, side="right")
+    np.testing.assert_array_equal(idx, np.clip(ref, 0, n - 1))
+    assert (table[idx] > 0).all()                      # support respected
+
+
+def test_chunk_masses_matches_chunk_proposal_mass_bitwise():
+    """chunk_masses IS the reduction chunk_proposal_mass performs —
+    including on a trailing partial chunk."""
+    w = jax.random.uniform(jax.random.key(0), (100,), jnp.float32)
+    for cs in (1, 7, 10, 100, 128):
+        assert np.array_equal(np.asarray(chunk_masses(w, cs)),
+                              np.asarray(chunk_proposal_mass(w, cs))), cs
+
+
+# ------------------------------------------------- draw bitwise equivalence
+
+def test_tree_draws_bitwise_equal_dense_single_device():
+    """Feeding block_masses back as block_sums reproduces the dense
+    two-stage draws bit for bit, for every W decomposition."""
+    w = jax.random.uniform(jax.random.key(5), (256,), jnp.float32) + 1e-3
+    for w_loc in (1, 4, 8, 16):
+        for s in range(3):
+            key = jax.random.key(100 + s)
+            dense = two_stage_sample(key, w, 64, shards_per_device=w_loc)
+            tree = two_stage_sample(key, w, 64, shards_per_device=w_loc,
+                                    block_sums=block_masses(w, w_loc))
+            assert np.array_equal(np.asarray(dense), np.asarray(tree)), \
+                (w_loc, s)
+    with pytest.raises(ValueError, match="block_sums"):
+        two_stage_sample(jax.random.key(0), w, 8, shards_per_device=4,
+                         block_sums=jnp.ones((3,)))
+
+
+def test_tree_draws_bitwise_equal_dense_mesh4():
+    """Same pin under shard_map on a 4-device mesh: the externally
+    maintained stage-1 masses reproduce the sharded draws bitwise."""
+    out = run_mesh_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.mass_index import block_masses
+        from repro.core.sampler import two_stage_sample
+        from repro.dist import shard_map
+
+        w = jax.random.uniform(jax.random.key(5), (256,), jnp.float32) + 1e-3
+        key = jax.random.key(9)
+
+        def body(use_tree):
+            def f(key, wl):
+                bs = block_masses(wl, 2) if use_tree else None
+                return two_stage_sample(key, wl, 64, axes=('data',),
+                                        shards_per_device=2, block_sums=bs)
+            return shard_map(f, mesh=mesh, in_specs=(P(), P('data')),
+                             out_specs=P())
+
+        dense = np.asarray(body(False)(key, w))
+        tree = np.asarray(body(True)(key, w))
+        assert np.array_equal(dense, tree)
+        print('mesh4 bitwise ok')
+    """, dp=4)
+    assert "mesh4 bitwise ok" in out
+
+
+@pytest.mark.parametrize("dp,mp", [(1, 1), (2, 2)])
+def test_tree_mode_bitwise_equals_dense_all_modes(dp, mp):
+    """index="tree" ≡ index="dense" — same sampled indices, losses, and
+    final state bit for bit — across relaxed / fused / async / streamed,
+    through the production sharded builders."""
+    out = run_mesh_py("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.importance import ISConfig
+        from repro.core.issgd import ISSGDConfig, init_train_state
+        from repro.core import distributed as D
+        from repro.core.async_pipeline import AsyncPipeline, init_async_state
+        from repro.core.scorer import make_mlp_scorer
+        from repro.data import make_svhn_like
+        from repro.models.mlp import (MLPConfig, init_mlp_classifier,
+                                      per_example_loss,
+                                      per_example_loss_and_score)
+        from repro.optim import sgd
+
+        from repro.models.mlp import mlp_specs
+
+        cfg = MLPConfig(input_dim=16, hidden=(32,), num_classes=4)
+        train, _ = make_svhn_like(jax.random.key(0), n=256, dim=16, classes=4)
+        params = init_mlp_classifier(jax.random.key(1), cfg)
+        opt = sgd(0.05)
+        n = train.size
+        data_host = train.arrays
+        dense = ISSGDConfig(batch_size=16, score_batch_size=64,
+                            mode="relaxed", is_cfg=ISConfig(smoothing=0.1),
+                            score_shards=4)
+        tree = dataclasses.replace(dense, index="tree")
+        MAXES = ('model',) if MP > 1 else ()
+        specs = mlp_specs(cfg)
+        PK = dict(param_specs=specs, params_template=params)
+        pel = lambda p, b: per_example_loss(p, b, cfg, model_axes=MAXES)
+        sc = make_mlp_scorer(cfg, 'ghost', model_axes=MAXES)
+        fs = lambda p, b: per_example_loss_and_score(p, b, cfg,
+                                                     model_axes=MAXES)
+
+        def bitwise(a, b, tag):
+            a = a._replace(rng=jax.random.key_data(a.rng))
+            b = b._replace(rng=jax.random.key_data(b.rng))
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), tag
+
+        dm = D.shard_dataset(data_host, mesh)
+
+        for mode in ('relaxed', 'fused'):
+            states = {}
+            for name, tc in (('dense', dense), ('tree', tree)):
+                tc = dataclasses.replace(tc, mode=mode)
+                fk = dict(fused_score=fs) if mode == 'fused' else {}
+                step, _ = D.make_sharded_train_step(pel, sc, opt, tc, n,
+                                                    mesh, data_host, **fk,
+                                                    **PK)
+                step = jax.jit(step)
+                s = D.shard_train_state(init_train_state(params, opt, n),
+                                        mesh, param_specs=specs)
+                for i in range(6):
+                    s, m = step(s, dm)
+                    states.setdefault(name, []).append(
+                        np.asarray(m.sample_indices))
+                states[name + '_final'] = s
+            for a, b in zip(states['dense'], states['tree']):
+                assert np.array_equal(a, b), mode
+            bitwise(states['dense_final'], states['tree_final'], mode)
+            print(mode, 'ok')
+
+        # ---- async (swap cadence 2) ----
+        finals = {}
+        for name, tc in (('dense', dense), ('tree', tree)):
+            s_step, m_step, _ = D.make_sharded_async_steps(
+                pel, sc, opt, tc, n, mesh, data_host, **PK)
+            pipe = AsyncPipeline(s_step, m_step, swap_every=2)
+            a = D.shard_train_state(init_async_state(params, opt, n), mesh,
+                                    param_specs=specs)
+            for i in range(6):
+                a, m = pipe.step(a, dm)
+            finals[name] = (a, np.asarray(m.sample_indices))
+        assert np.array_equal(finals['dense'][1], finals['tree'][1])
+        bitwise(finals['dense'][0], finals['tree'][0], 'async')
+        print('async ok')
+
+        # ---- streamed ----
+        from repro.data.store import ChunkedExampleStore
+        from repro.data.streaming import StreamedISSGD, StreamingDataPlane
+        store = ChunkedExampleStore.from_arrays(data_host, 64)
+        template = {k: np.empty((0,) + store.row_shape(k), store.dtype(k))
+                    for k in store.keys}
+        finals = {}
+        for name, tc in (('dense', dense), ('tree', tree)):
+            plane = StreamingDataPlane(store, 2, mesh=mesh)
+            ss, smp, ms, _ = D.make_sharded_streamed_steps(
+                pel, sc, opt, tc, n, mesh, template, chunk_size=64, **PK)
+            sp = StreamedISSGD(plane, ss, smp, ms, tc, n)
+            s = D.shard_train_state(init_train_state(params, opt, n), mesh,
+                                    param_specs=specs)
+            for i in range(6):
+                s, m = sp.step(s)
+            finals[name] = (s, np.asarray(m.sample_indices))
+        assert np.array_equal(finals['dense'][1], finals['tree'][1])
+        bitwise(finals['dense'][0], finals['tree'][0], 'streamed')
+        print('streamed ok')
+    """, dp=dp, mp=mp)
+    for tag in ("relaxed ok", "fused ok", "async ok", "streamed ok"):
+        assert tag in out, out[-1000:]
+
+
+# ----------------------------------------------------------- the off path
+
+def test_default_cfg_is_hlo_identical_to_explicit_off():
+    """The default step must not contain one HLO byte of the new
+    machinery: explicit off values (dense / f32 / ttl 0) lower to the
+    same text as a config that never names them."""
+    pel, scorer, opt, tcfg, params, train = _setup_step()
+    state = init_train_state(params, opt, train.size, seed=0)
+
+    def lowered(tc):
+        step = make_train_step(pel, scorer, opt, tc, train.size)
+        return jax.jit(step).lower(state, train.arrays).as_text()
+
+    base = lowered(tcfg)
+    off = dataclasses.replace(tcfg, index="dense", table_dtype="f32",
+                              score_ttl=0, index_chunk_size=0)
+    assert lowered(off) == base
+
+
+def test_score_ttl_zero_reads_hlo_identical_to_plain_proposal():
+    """read_sampling_proposal with score_ttl=0 is byte-identical HLO to
+    read_proposal — the decay path adds nothing when disabled."""
+    cfg = ISSGDConfig(score_ttl=0)
+    store = init_store(64)
+    on = jax.jit(lambda s: read_sampling_proposal(s, 5, cfg, 16)).lower(
+        store).as_text()
+    ref = jax.jit(lambda s: read_proposal(s, 5, cfg.is_cfg)).lower(
+        store).as_text()
+    assert on == ref
+
+
+# ------------------------------------------------------------------ TTL decay
+
+def test_decay_matches_bruteforce_reference():
+    """decay_proposal == per-row numpy reference of the documented rule
+    q' = u + 2^(-age_c/ttl)·(q - u)."""
+    rng = np.random.default_rng(11)
+    n, cs, step, ttl = 50, 8, 20, 4
+    cfg = ISConfig(smoothing=0.1)
+    prop = rng.uniform(0.1, 3.0, n).astype(np.float32)
+    scored = rng.integers(-1, step, n).astype(np.int32)
+    scored[rng.choice(n, 8, replace=False)] = EMPTY
+    got = np.asarray(decay_proposal(jnp.asarray(prop), jnp.asarray(scored),
+                                    step, ttl, cfg, cs))
+    u = max(cfg.smoothing, cfg.floor)
+    chunks = -(-n // cs)
+    ref = np.empty_like(prop)
+    for c in range(chunks):
+        rows = slice(c * cs, min((c + 1) * cs, n))
+        fresh = scored[rows].max()
+        age = max(step - fresh, 0) if fresh >= 0 else 0
+        d = np.float32(2.0 ** (-age / ttl))
+        ref[rows] = np.float32(u) + d * (prop[rows] - np.float32(u))
+    ref[scored <= EMPTY] = 0.0
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-7)
+    # support survives: every live row keeps q' ≥ min(q, floor) > 0
+    live = scored > EMPTY
+    assert (got[live] >= np.minimum(prop[live], cfg.floor) - 1e-7).all()
+    with pytest.raises(ValueError, match="ttl"):
+        decay_proposal(jnp.asarray(prop), jnp.asarray(scored), step, 0,
+                       cfg, cs)
+
+
+def test_ttl_decay_changes_draws_but_not_support():
+    """A decayed proposal flattens toward uniform (ESS grows) without
+    ever resurrecting EMPTY rows."""
+    cfg = ISConfig(smoothing=0.1)
+    n, cs = 64, 8
+    store = init_store(n)
+    store = write_scores_global(store, jnp.arange(8),
+                                jnp.full((8,), 50.0), step=0)
+    store = reserve_tail(store, 48)
+    prop = read_proposal(store, 40, cfg)
+    dec = decay_proposal(prop, store.scored_at, 40, 4, cfg, cs)
+    ess = lambda q: float(jnp.square(jnp.sum(q)) / jnp.sum(jnp.square(q)))
+    assert ess(dec) > ess(prop)
+    assert np.all(np.asarray(dec)[48:] == 0.0)
+
+
+def test_monitors_observe_decayed_proposal():
+    """With score_ttl on, the ess monitor is computed from the decayed
+    proposal the sampler actually draws from, while staleness still
+    reads the raw scored_at lag (PR 8 consistency)."""
+    from repro.telemetry import MonitorSet
+
+    pel, scorer, opt, tcfg, params, train = _setup_step(
+        score_ttl=4, index_chunk_size=32)
+    step = jax.jit(make_train_step(
+        pel, scorer, opt, tcfg, train.size,
+        monitors=MonitorSet(("ess", "staleness"))))
+    state = init_train_state(params, opt, train.size, seed=0)
+    for _ in range(3):
+        state, _, mon = step(state, train.arrays)
+    # the sync step's master reads the store AFTER its own scoring writes
+    # (lag 0), at the pre-increment step counter — recompute from there
+    prev = state
+    state, _, mon = step(prev, train.arrays)
+    prop = read_sampling_proposal(state.store, prev.step, tcfg, 64)
+    n = train.size
+    ess_ref = float(jnp.square(jnp.sum(prop)) / jnp.sum(jnp.square(prop)) / n)
+    np.testing.assert_allclose(float(mon["ess"]), ess_ref, rtol=1e-6)
+    stale_ref = int(prev.step) - int(jnp.max(state.store.scored_at))
+    assert int(mon["staleness"]) == stale_ref
+
+
+# -------------------------------------------- trailing-partial-chunk fixes
+
+def test_chunk_proposal_mass_partial_tail():
+    """The fix: a trailing partial chunk contributes exactly its partial
+    mass instead of raising."""
+    w = jnp.arange(10, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(chunk_proposal_mass(w, 4)),
+                               [6.0, 22.0, 17.0])
+    np.testing.assert_allclose(np.asarray(chunk_masses(w, 4)),
+                               [6.0, 22.0, 17.0])
+
+
+def test_index_to_chunk_routes_tail_rows():
+    c, o = index_to_chunk(np.asarray([0, 3, 8, 9]), 4)
+    np.testing.assert_array_equal(c, [0, 0, 2, 2])
+    np.testing.assert_array_equal(o, [0, 3, 0, 1])
+
+
+def test_streaming_plane_still_requires_exact_multiples():
+    """The host store's fixed-size chunks are a separate, pinned
+    assumption: from_arrays rejects a non-dividing chunk_size (the
+    padding fix lives in the mass arithmetic, not the data plane)."""
+    from repro.data.store import ChunkedExampleStore
+    arrays = {"x": np.zeros((10, 2), np.float32)}
+    with pytest.raises(ValueError, match="divide"):
+        ChunkedExampleStore.from_arrays(arrays, 4)
+    ChunkedExampleStore.from_arrays(arrays, 5)          # exact: fine

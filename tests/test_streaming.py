@@ -101,8 +101,11 @@ def test_chunk_proposal_mass_single_device():
     w = jnp.arange(16, dtype=jnp.float32)
     mass = np.asarray(chunk_proposal_mass(w, 4))
     np.testing.assert_allclose(mass, [6.0, 22.0, 38.0, 54.0])
+    # trailing partial chunk is zero-padded, not rejected (PR 10 fix)
+    mass = np.asarray(chunk_proposal_mass(w, 5))
+    np.testing.assert_allclose(mass, [10.0, 35.0, 60.0, 15.0])
     with pytest.raises(ValueError):
-        chunk_proposal_mass(w, 5)
+        chunk_proposal_mass(w, 0)
 
 
 # ---------------------------------------------------------------------------
